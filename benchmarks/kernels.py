@@ -1,0 +1,89 @@
+"""Kernel microbenchmarks: fused vs reference implementations.
+
+Wall-clock here is CPU (Pallas interpret mode is a correctness harness, not
+a perf path), so the *jnp* algorithmic variants are timed; Pallas-kernel
+TPU performance is assessed structurally via the dry-run roofline.
+
+CSV: name, us_per_call, derived.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, timeit
+
+
+def bench_attention() -> list[str]:
+    from repro.models.attention import chunked_attention
+    from repro.kernels.attention.ref import attention_ref
+    rows = []
+    b, s, h, hkv, d = 1, 2048, 8, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, hkv, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, hkv, d), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    naive = jax.jit(lambda q, k, v: attention_ref(
+        q.transpose(0, 2, 1, 3).reshape(b * h, s, d),
+        k.transpose(0, 2, 1, 3).reshape(b * hkv, s, d),
+        v.transpose(0, 2, 1, 3).reshape(b * hkv, s, d)))
+    flash = jax.jit(lambda q, k, v: chunked_attention(q, k, v, pos, pos,
+                                                      kv_chunk=512))
+    t0 = timeit(naive, q, k, v)
+    t1 = timeit(flash, q, k, v)
+    flops = 4 * b * h * s * s * d
+    rows.append(row("kernels/attention-naive", t0 * 1e6,
+                    f"{flops/t0/1e9:.1f}GFLOP/s"))
+    rows.append(row("kernels/attention-flash-chunked", t1 * 1e6,
+                    f"{flops/t1/1e9:.1f}GFLOP/s|{t0/t1:.2f}x"))
+    return rows
+
+
+def bench_ssd() -> list[str]:
+    from repro.models.ssm import ssd_chunked, ssd_reference
+    rows = []
+    bs, s, h, p, g, n, chunk = 1, 2048, 8, 32, 1, 32, 128
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    x = jax.random.normal(ks[0], (bs, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bs, s, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    b = jax.random.normal(ks[3], (bs, s, g, n)) * 0.3
+    c = jax.random.normal(ks[4], (bs, s, g, n)) * 0.3
+    dsk = jnp.ones((h,))
+    rec = jax.jit(lambda *a_: ssd_reference(*a_))
+    chu = jax.jit(lambda *a_: ssd_chunked(*a_, chunk))
+    t0 = timeit(rec, x, dt, a, b, c, dsk)
+    t1 = timeit(chu, x, dt, a, b, c, dsk)
+    rows.append(row("kernels/ssd-recurrence", t0 * 1e6, "1.00x"))
+    rows.append(row("kernels/ssd-chunked", t1 * 1e6, f"{t0/t1:.2f}x"))
+    return rows
+
+
+def bench_nep() -> list[str]:
+    """Fused NEP force evaluation throughput (the paper's hot kernel)."""
+    from repro.core.descriptor import NEPSpinSpec
+    from repro.core.potential import energy_forces_field, init_params
+    from repro.md.lattice import b20_fege
+    from repro.md.neighbor import dense_neighbor_table
+    from repro.md.state import init_state
+    lat = b20_fege()
+    st = init_state(lat, (4, 4, 4), temperature=300.0,
+                    key=jax.random.PRNGKey(0), dtype=jnp.float32)
+    spec = NEPSpinSpec()
+    params = init_params(spec, jax.random.PRNGKey(1), dtype=jnp.float32)
+    tab = dense_neighbor_table(st.pos, st.box, spec.cutoff, 64)
+    fn = jax.jit(lambda p, s: energy_forces_field(
+        spec, params, p, s, st.types, tab, st.box))
+    t = timeit(fn, st.pos, st.spin)
+    return [row("kernels/nep-fused-force", t * 1e6,
+                f"{st.n_atoms/t:.3e} atom/s")]
+
+
+def main() -> list[str]:
+    return bench_nep() + bench_attention() + bench_ssd()
+
+
+if __name__ == "__main__":
+    main()

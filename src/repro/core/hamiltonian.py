@@ -1,0 +1,120 @@
+"""Reference spin-lattice Hamiltonian (ground truth + classical baseline).
+
+Serves two roles, mirroring the paper's pipeline with DFT replaced by a
+known-ground-truth oracle (no electronic-structure code is available
+offline):
+
+1. **Synthetic constrained-DFT generator** - NEP-SPIN is trained on
+   energies / forces / magnetic torques sampled from this surface
+   (core/training.py), exactly as the paper trains on spin-constrained DFT.
+2. **Classical fixed-coupling baseline** - the "DFT-parameterized spin
+   Hamiltonian / classical spin-lattice dynamics" class of methods the paper
+   positions itself against (refs [14], [24]): couplings J(r), D(r) are fixed
+   functional forms, not learned.
+
+Model (all pairwise terms smoothly cut off by fc(r)):
+
+  E = sum_pairs V_morse(r)                         lattice (anharmonic)
+    - 1/2 sum_pairs J(r)  S_i . S_j                Heisenberg exchange
+    - 1/2 sum_pairs D(r)  r_hat . (S_i x S_j)      bulk DMI (B20 chirality)
+    + 1/2 sum_pairs Kpd(r) (S_i.r_hat)(S_j.r_hat)  pseudo-dipolar anisotropy
+    + sum_i Ka (S_i . n)^2                         single-ion anisotropy
+    + sum_i A_L (|S_i|^2 - 1)^2                    Landau longitudinal term
+    - mu_B m sum_i S_i . B                         Zeeman
+
+J(r) = J0 exp(-gamma_J (r - r0)), D(r) = D0 exp(-gamma_D (r - r0)):
+distance-dependent couplings give genuine spin-lattice feedback (dJ/dr
+forces on atoms; phonons modulate the magnetic interaction).
+
+Helix physics: for a simple-cubic lattice with NN couplings the helix pitch
+is lambda = 2 pi a / arctan(D/J) - used to calibrate FeGe-like parameters
+(lambda ~ 70 nm => D/J ~ 0.042) and to validate at reduced scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.descriptor import cutoff_fn
+from repro.md.neighbor import NeighborTable, gather_neighbors
+from repro.utils import units
+
+
+@dataclasses.dataclass(frozen=True)
+class HeisenbergDMIModel:
+    cutoff: float = 5.0
+    r0: float = units.FEGE_A          # equilibrium NN distance [A]
+    # lattice (Morse)
+    morse_de: float = 0.30            # eV
+    morse_alpha: float = 1.4          # 1/A
+    # magnetism
+    j0: float = 0.0166                # eV  (calibrated to Tc ~ 278 K)
+    gamma_j: float = 1.0              # 1/A exchange-distance decay
+    d0: float = 7.0e-4                # eV  (D/J ~= 0.042 -> 70 nm pitch)
+    gamma_d: float = 1.0
+    kpd: float = 0.0                  # pseudo-dipolar strength [eV]
+    ka: float = 0.0                   # single-ion anisotropy [eV]
+    ka_axis: tuple[float, float, float] = (0.0, 0.0, 1.0)
+    landau_a: float = 0.5             # eV, longitudinal stiffness
+    moment: float = 1.16              # mu_B per magnetic atom
+    magnetic_type: int = 0            # only this type carries spin couplings
+
+    def pitch(self, a: float | None = None) -> float:
+        """Analytic zero-T helix pitch [A] for NN simple-cubic topology."""
+        a = a if a is not None else self.r0
+        jr = self.j0  # at r = r0
+        dr_ = self.d0
+        return 2.0 * math.pi * a / math.atan2(dr_, jr)
+
+    # ------------------------------------------------------------------
+    def atom_energies(self, dr, dist, mask, ti, tj, si, sj) -> jax.Array:
+        """Per-atom energy (half of each pair term). Shapes as descriptor()."""
+        m = mask.astype(dr.dtype)
+        fc = cutoff_fn(dist, self.cutoff) * m
+        rhat = dr / dist[..., None]
+
+        # lattice: Morse (shifted so V(r0) = -De; fc removes cutoff jump)
+        ex = jnp.exp(-self.morse_alpha * (dist - self.r0))
+        v_pair = self.morse_de * ((1.0 - ex) ** 2 - 1.0) * fc
+
+        mag_i = (ti == self.magnetic_type).astype(dr.dtype)
+        mag_j = (tj == self.magnetic_type).astype(dr.dtype)
+        mag = mag_i[:, None] * mag_j
+
+        jr = self.j0 * jnp.exp(-self.gamma_j * (dist - self.r0)) * fc * mag
+        dr_ = self.d0 * jnp.exp(-self.gamma_d * (dist - self.r0)) * fc * mag
+
+        si_b = si[:, None, :]
+        heis = -jr * jnp.sum(si_b * sj, axis=-1)
+        dmi = -dr_ * jnp.sum(rhat * jnp.cross(si_b * jnp.ones_like(sj), sj),
+                             axis=-1)
+        pd = (self.kpd * jnp.exp(-self.gamma_j * (dist - self.r0)) * fc * mag
+              * jnp.sum(si_b * rhat, axis=-1) * jnp.sum(sj * rhat, axis=-1))
+
+        e_pair = 0.5 * jnp.sum(v_pair + heis + dmi + pd, axis=1)
+
+        # onsite terms
+        n = jnp.asarray(self.ka_axis, dr.dtype)
+        smag2 = jnp.sum(si * si, axis=-1)
+        e_onsite = (self.ka * jnp.square(si @ n)
+                    + self.landau_a * jnp.square(smag2 - 1.0)) * mag_i
+        return e_pair + e_onsite
+
+    def energy(self, pos, spin, types, table: NeighborTable, box,
+               field=None) -> jax.Array:
+        dr, dist, sj, tj, mask = gather_neighbors(pos, spin, types, table, box)
+        e = jnp.sum(self.atom_energies(dr, dist, mask, types, tj, spin, sj))
+        if field is not None:
+            mag = (types == self.magnetic_type).astype(pos.dtype)
+            e = e - units.MU_B * self.moment * jnp.sum(
+                mag[:, None] * spin * field)
+        return e
+
+    def energy_forces_field(self, pos, spin, types, table, box, field=None):
+        e, g = jax.value_and_grad(
+            lambda p, s: self.energy(p, s, types, table, box, field),
+            argnums=(0, 1))(pos, spin)
+        return e, -g[0], -g[1]

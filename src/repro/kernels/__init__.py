@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the performance-critical compute layers.
+
+Each kernel package contains:
+  kernel.py - pl.pallas_call with explicit BlockSpec VMEM tiling (TPU target;
+              validated on CPU with interpret=True)
+  ops.py    - the jit'd public wrapper
+  ref.py    - pure-jnp oracle used by the allclose test sweeps
+
+Kernels:
+  nep/        fused NEP-SPIN descriptor + force + torque (the paper's
+              dominant kernel, Fig. 2 stages b1-b4)
+  attention/  flash attention (LM-zoo prefill hot spot)
+  ssd/        Mamba-2 state-space-dual chunk scan (SSM archs)
+"""

@@ -1,0 +1,2 @@
+from repro.kernels.attention.ops import flash_attention
+from repro.kernels.attention.ref import attention_ref

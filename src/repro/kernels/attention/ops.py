@@ -1,0 +1,25 @@
+"""jit'd wrapper: (B, S, H, hd) layout -> flash kernel -> back."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.attention.kernel import flash_attention_fwd
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                   "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, bq=128, bk=128,
+                    interpret=True):
+    """q: (B, S, H, hd); k/v: (B, T, Hkv, hd/dv). Returns (B, S, H, dv)."""
+    b, s, h, d = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * hkv, t, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * hkv, t, dv)
+    out = flash_attention_fwd(qf, kf, vf, causal=causal, window=window,
+                              bq=bq, bk=bk, interpret=interpret)
+    return out.reshape(b, h, s, dv).transpose(0, 2, 1, 3)

@@ -1,0 +1,27 @@
+"""Naive-softmax oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal=True, window=0):
+    """q: (BH, S, d); k/v: (BHkv, T, d/dv). Full (S, T) materialization."""
+    bh, s, d = q.shape
+    bhkv, t, _ = k.shape
+    rep = bh // bhkv
+    kk = jnp.repeat(k, rep, axis=0).astype(jnp.float32)
+    vv = jnp.repeat(v, rep, axis=0).astype(jnp.float32)
+    sco = jnp.einsum("bsd,btd->bst", q.astype(jnp.float32) * d ** -0.5, kk)
+    q_pos = jnp.arange(s)[:, None]
+    k_pos = jnp.arange(t)[None, :]
+    ok = jnp.ones((s, t), bool)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window:
+        ok &= k_pos > q_pos - window
+    sco = jnp.where(ok[None], sco, NEG_INF)
+    p = jax.nn.softmax(sco, axis=-1)
+    return jnp.einsum("bst,btd->bsd", p, vv).astype(q.dtype)

@@ -1,0 +1,2 @@
+from repro.kernels.nep.ops import nep_energy_forces_field
+from repro.kernels.nep.ref import nep_energy_forces_field_ref

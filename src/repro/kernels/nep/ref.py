@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the fused NEP-SPIN kernel.
+
+The reference evaluation builds the total energy from the gathered neighbor
+table and obtains forces / effective fields by autodiff - numerically exact
+but unfused (multiple HLO passes over the neighbor data).  The Pallas kernel
+in kernel.py must match this to tight tolerances across shape/dtype sweeps
+(tests/test_kernels_nep.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.descriptor import NEPSpinSpec
+from repro.core.potential import NEPSpinParams, energy as _energy
+from repro.md.neighbor import NeighborTable
+
+
+def nep_energy_forces_field_ref(
+    spec: NEPSpinSpec,
+    params: NEPSpinParams,
+    pos: jax.Array,
+    spin: jax.Array,
+    types: jax.Array,
+    table: NeighborTable,
+    box: jax.Array,
+    field: jax.Array | None = None,
+    moments: jax.Array | None = None,
+):
+    def efn(p, s):
+        return _energy(spec, params, p, s, types, table, box, field, moments)
+
+    e, g = jax.value_and_grad(efn, argnums=(0, 1))(pos, spin)
+    return e, -g[0], -g[1]

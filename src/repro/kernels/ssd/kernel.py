@@ -1,0 +1,92 @@
+"""Mamba-2 SSD chunk kernel (Pallas TPU).
+
+The state-space-dual decomposition splits the sequence into chunks: the
+intra-chunk term is a masked (decay-weighted) attention-like quadratic
+form, the inter-chunk term is a short recurrence over per-chunk states.
+This kernel fuses the per-chunk work - decay-mask construction, the
+(C B^T o L) x  contraction, and the chunk-state outer product - for one
+(batch, chunk) tile per grid step, with all (L x L) intermediates resident
+in VMEM only.  The O(NC)-length state recurrence stays in jnp (ops.py):
+it is tiny (NC steps over (H,N,P) states) and sequential by nature.
+
+Grid: (B, NC); per-tile working set at L=128, H<=80, N<=128, P=64 is a few
+MB of VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_chunk_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, st_ref,
+                      dec_ref, *, chunk: int):
+    """Per-(batch, chunk) tile.
+
+    x: (1,1,L,H,P); dt: (1,1,L,H); a: (H,); b/c: (1,1,L,H,N)
+    outputs: y_intra (1,1,L,H,P), states (1,1,H,N,P), chunk_decay (1,1,H),
+             plus decay_from_start written into dec_ref (1,1,L,H) for the
+             inter-chunk combine in ops.py.
+    """
+    x = x_ref[0, 0].astype(jnp.float32)       # (L,H,P)
+    dt = dt_ref[0, 0].astype(jnp.float32)     # (L,H)
+    a = a_ref[...].astype(jnp.float32)        # (H,)
+    b = b_ref[0, 0].astype(jnp.float32)       # (L,H,N)
+    c = c_ref[0, 0].astype(jnp.float32)       # (L,H,N)
+
+    da = dt * a[None, :]                      # (L,H)
+    cum = jnp.cumsum(da, axis=0)              # (L,H)
+
+    # intra-chunk: seg(l,m,h) = cum[l]-cum[m], lower-triangular decay
+    seg = cum[:, None, :] - cum[None, :, :]   # (L,L,H)
+    li = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    seg = jnp.where(li[:, :, None], seg, -1e30)
+    decay = jnp.exp(seg)                      # (L,L,H)
+    cb = jnp.einsum("lhn,mhn->lmh", c, b)     # (L,L,H)
+    w = cb * decay * dt[None, :, :]           # (L,L,H)
+    y = jnp.einsum("lmh,mhp->lhp", w, x)      # (L,H,P)
+
+    # chunk state: sum_m exp(cum[-1]-cum[m]) dt[m] b[m] x[m]^T
+    dte = jnp.exp(cum[-1:, :] - cum) * dt     # (L,H)
+    st = jnp.einsum("lh,lhn,lhp->hnp", dte, b, x)
+
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+    st_ref[0, 0] = st.astype(st_ref.dtype)
+    dec_ref[0, 0] = cum.astype(dec_ref.dtype)  # log-decay-from-start
+
+
+def ssd_chunks(x, dt, a, b, c, *, chunk: int, interpret=True):
+    """x: (B, NC, L, H, P); dt: (B, NC, L, H); b/c: (B, NC, L, H, N).
+
+    Returns (y_intra, states (B,NC,H,N,P), cum (B,NC,L,H) log decays).
+    """
+    bs, nc, l, h, p = x.shape
+    n = b.shape[-1]
+    grid = (bs, nc)
+    kernel = functools.partial(_ssd_chunk_kernel, chunk=l)
+
+    blk = lambda tail: pl.BlockSpec((1, 1, *tail),
+                                    lambda i, j: (i, j, *([0] * len(tail))))
+    y, st, dec = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            blk((l, h, p)),
+            blk((l, h)),
+            pl.BlockSpec((h,), lambda i, j: (0,)),
+            blk((l, h, n)),
+            blk((l, h, n)),
+        ],
+        out_specs=[blk((l, h, p)), blk((h, n, p)), blk((l, h))],
+        out_shape=[
+            jax.ShapeDtypeStruct((bs, nc, l, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((bs, nc, h, n, p), jnp.float32),
+            jax.ShapeDtypeStruct((bs, nc, l, h), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt, a, b, c)
+    return y, st, dec

@@ -1,0 +1,47 @@
+"""jit'd SSD wrapper: Pallas chunk kernel + jnp inter-chunk recurrence."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd.kernel import ssd_chunks
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunked_kernel(x, dt, a, b, c, d_skip, chunk: int = 128,
+                       interpret: bool = True):
+    """Same contract as models.ssm.ssd_chunked: x (B,S,H,P), dt (B,S,H),
+    a (H,), b/c (B,S,G,N) -> y (B,S,H,P)."""
+    bs, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    rep = h // g
+    nc = s // chunk
+    assert nc * chunk == s
+
+    xr = x.reshape(bs, nc, chunk, h, p)
+    dtr = dt.reshape(bs, nc, chunk, h)
+    br = jnp.repeat(b, rep, axis=2).reshape(bs, nc, chunk, h, n)
+    cr = jnp.repeat(c, rep, axis=2).reshape(bs, nc, chunk, h, n)
+
+    y_intra, states, cum = ssd_chunks(xr, dtr, a, br, cr, chunk=chunk,
+                                      interpret=interpret)
+
+    # inter-chunk state recurrence (short, sequential)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])              # (B,NC,H)
+
+    def scan_fn(prev, xs):
+        st, dec = xs
+        return st + dec[..., None, None] * prev, prev
+
+    init = jnp.zeros((bs, h, n, p), jnp.float32)
+    _, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)   # (B,NC,H,N,P)
+
+    y_inter = jnp.einsum("bnlhs,bnlh,bnhsp->bnlhp", cr,
+                         jnp.exp(cum), prev_states)
+    y = (y_intra + y_inter).reshape(bs, s, h, p).astype(x.dtype)
+    return y + d_skip[None, None, :, None].astype(x.dtype) * x

@@ -1,0 +1,2 @@
+"""Oracle: naive per-step SSD recurrence (repro.models.ssm.ssd_reference)."""
+from repro.models.ssm import ssd_reference as ssd_ref  # noqa: F401

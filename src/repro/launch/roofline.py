@@ -1,0 +1,72 @@
+"""Three-term roofline model for the dry-run artifacts.
+
+Target hardware (TPU v5e class, per chip):
+  peak compute : 197 TFLOP/s bf16
+  HBM bandwidth: 819 GB/s
+  ICI link     : ~50 GB/s per link
+
+``compiled.cost_analysis()`` and the parsed HLO are PER-DEVICE quantities
+(the compiled module is the SPMD per-device program), so the terms are
+
+  compute_term    = hlo_flops_device / peak_flops
+  memory_term     = hlo_bytes_device / hbm_bw
+  collective_term = collective_bytes_device / ici_bw
+
+each in seconds-per-step; the dominant term is the bottleneck.  MODEL_FLOPS
+uses 6*N*D for training and 2*N*D for inference (N = active params, D =
+tokens), so ratio = MODEL_FLOPS / HLO_FLOPs measures how much compiled
+compute is 'useful' (catches remat/redundancy waste; >1 means the compiler
+sees fewer FLOPs than the analytic model, e.g. fused attention counted as
+fewer ops).
+"""
+from __future__ import annotations
+
+PEAK_FLOPS = 197e12     # bf16 per chip
+HBM_BW = 819e9          # bytes/s
+ICI_BW = 50e9           # bytes/s per link
+
+
+def model_flops(arch: str, kind: str, tokens: int) -> float:
+    """Analytic 'useful' FLOPs for the whole step (global)."""
+    if arch == "fege-spinlattice":
+        return 0.0  # computed separately (per-atom descriptor cost)
+    from repro import configs
+    cfg = configs.get(arch)
+    n = cfg.n_active_params()
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n * tokens
+
+
+def terms(rec: dict) -> dict:
+    n_dev = rec["devices"]
+    flops_dev = rec["flops_total"]          # per-device (SPMD module)
+    bytes_dev = rec["bytes_total"]
+    coll_dev = sum(v["bytes"] for v in rec["collectives"].values())
+
+    compute_t = flops_dev / PEAK_FLOPS
+    memory_t = bytes_dev / HBM_BW
+    coll_t = coll_dev / ICI_BW
+    terms_ = {"compute": compute_t, "memory": memory_t,
+              "collective": coll_t}
+    bottleneck = max(terms_, key=terms_.get)
+
+    meta = rec.get("meta", {})
+    mf = model_flops(rec["arch"], meta.get("kind", "train"),
+                     meta.get("tokens", 0))
+    mf_dev = mf / n_dev if n_dev else 0.0
+    out = {
+        "compute_s": compute_t,
+        "memory_s": memory_t,
+        "collective_s": coll_t,
+        "collective_bytes": coll_dev,
+        "bottleneck": bottleneck,
+        "model_flops_global": mf,
+        "useful_flops_ratio": (mf_dev / flops_dev) if flops_dev else None,
+        # step time if perfectly overlapped = max term; roofline fraction =
+        # dominant-term share of the max-possible utilization
+        "step_time_s": max(terms_.values()),
+        "roofline_fraction_compute": (
+            compute_t / max(terms_.values()) if max(terms_.values()) else
+            None),
+    }
+    return out

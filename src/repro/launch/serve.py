@@ -1,0 +1,86 @@
+"""Batched serving driver: prefill + autoregressive decode for any zoo arch.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --smoke \
+      --batch 4 --prompt-len 32 --gen 32
+
+Serves synthetic prompts through the real prefill/decode paths (the same
+code the dry-run lowers at production scale): builds KV/state caches,
+prefills them token-by-token (teacher-forced write path), then greedy-
+decodes, reporting prefill and decode throughput.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models import lm
+from repro.models import transformer as tfm
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-7b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(
+        args.arch)
+    if cfg.family == "audio":
+        raise SystemExit("use the enc-dec demo in tests/ for seamless")
+    key = jax.random.PRNGKey(args.seed)
+    params = lm.init_params(cfg, key, tp=1)
+    n = sum(int(np.prod(p.shape))
+            for p in jax.tree_util.tree_leaves(params))
+    print(f"serving {cfg.name}: {n/1e6:.1f}M params, batch {args.batch}")
+
+    b = args.batch
+    total = args.prompt_len + args.gen
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (b, args.prompt_len),
+                                 0, cfg.vocab)
+    caches = tfm.init_caches(cfg, b, total, jnp.float32)
+
+    decode = jax.jit(lambda p, c, t, pos: tfm.decode_step(cfg, p, c, t,
+                                                          pos))
+
+    # prefill through the decode path (incremental cache writes)
+    t0 = time.time()
+    logits = None
+    for i in range(args.prompt_len):
+        logits, caches = decode(params, caches, prompts[:, i:i + 1],
+                                jnp.full((b,), i, jnp.int32))
+    jax.block_until_ready(logits)
+    t_pre = time.time() - t0
+    print(f"prefill: {args.prompt_len} tokens x {b} seqs in {t_pre:.2f}s "
+          f"({b*args.prompt_len/t_pre:.1f} tok/s)")
+
+    # greedy decode
+    tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    out = [tok]
+    t0 = time.time()
+    for i in range(args.prompt_len, total):
+        logits, caches = decode(params, caches, tok,
+                                jnp.full((b,), i, jnp.int32))
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        out.append(tok)
+    jax.block_until_ready(tok)
+    t_dec = time.time() - t0
+    gen = jnp.concatenate(out, axis=1)
+    print(f"decode: {args.gen} tokens x {b} seqs in {t_dec:.2f}s "
+          f"({b*args.gen/t_dec:.1f} tok/s, "
+          f"{t_dec/args.gen*1e3:.1f} ms/token/batch)")
+    print("sample generations (token ids):")
+    for row in np.asarray(gen)[:2]:
+        print("  ", row[:16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.md.lattice import b20_fege, simple_cubic, Lattice
+from repro.md.state import SpinLatticeState, init_state
+from repro.md.neighbor import dense_neighbor_table, NeighborTable

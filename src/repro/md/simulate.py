@@ -1,0 +1,117 @@
+"""High-level simulation driver: neighbor-table lifecycle + stepping.
+
+The jit boundary is a ``lax.scan`` over a chunk of steps with a frozen
+neighbor table; between chunks the half-skin displacement test decides
+whether to rebuild (host-side).  Crystalline FeGe barely diffuses, so tables
+survive hundreds of steps - the static-topology fast path described in
+DESIGN.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.md.integrator import ForceField, IntegratorConfig, make_step
+from repro.md.neighbor import (NeighborTable, dense_neighbor_table,
+                               cell_neighbor_table, needs_rebuild)
+from repro.md.state import SpinLatticeState
+
+
+@dataclasses.dataclass
+class Simulation:
+    potential: Any                     # .energy_forces_field(pos,spin,types,table,box,field)
+    cfg: IntegratorConfig
+    state: SpinLatticeState
+    masses: jax.Array                  # (n_types,)
+    magnetic: jax.Array                # (n_types,) bool
+    cutoff: float
+    capacity: int = 64
+    skin: float = 0.5
+    field: jax.Array | None = None     # (3,) Tesla
+    use_cell_list: bool = False
+    table: NeighborTable | None = None
+    _step_chunk: Callable | None = None
+    _ff: ForceField | None = None
+
+    def __post_init__(self):
+        if self.table is None:
+            self.table = self._build_table(self.state.pos)
+        evaluate = self._make_eval(self.table)
+        step = make_step(evaluate, self.cfg, self.masses, self.magnetic)
+
+        @partial(jax.jit, static_argnames=("n",))
+        def chunk(state, ff, key, n):
+            def body(carry, k):
+                st, f = carry
+                st, f = step(st, f, k)
+                return (st, f), None
+            keys = jax.random.split(key, n)
+            (state, ff), _ = jax.lax.scan(body, (state, ff), keys)
+            return state, ff
+
+        self._step_chunk = chunk
+        self._ff = ForceField(*self.potential.energy_forces_field(
+            self.state.pos, self.state.spin, self.state.types, self.table,
+            self.state.box, self.field))
+
+    # ------------------------------------------------------------------
+    def _build_table(self, pos) -> NeighborTable:
+        build = cell_neighbor_table if self.use_cell_list else dense_neighbor_table
+        return build(pos, self.state.box, self.cutoff, self.capacity,
+                     skin=self.skin)
+
+    def _make_eval(self, table):
+        def evaluate(pos, spin):
+            return ForceField(*self.potential.energy_forces_field(
+                pos, spin, self.state.types, table, self.state.box,
+                self.field))
+        return evaluate
+
+    def _refresh(self):
+        """Rebuild table + recompile closure chain after atoms drift."""
+        self.table = self._build_table(self.state.pos)
+        evaluate = self._make_eval(self.table)
+        step = make_step(evaluate, self.cfg, self.masses, self.magnetic)
+
+        @partial(jax.jit, static_argnames=("n",))
+        def chunk(state, ff, key, n):
+            def body(carry, k):
+                st, f = carry
+                st, f = step(st, f, k)
+                return (st, f), None
+            keys = jax.random.split(key, n)
+            (state, ff), _ = jax.lax.scan(body, (state, ff), keys)
+            return state, ff
+
+        self._step_chunk = chunk
+        self._ff = ForceField(*self.potential.energy_forces_field(
+            self.state.pos, self.state.spin, self.state.types, self.table,
+            self.state.box, self.field))
+
+    # ------------------------------------------------------------------
+    def run(self, n_steps: int, key: jax.Array, chunk: int = 20,
+            callback: Callable[[SpinLatticeState, ForceField], None] | None = None):
+        """Advance ``n_steps``; rebuilds the neighbor table when the skin
+        test trips. Returns the final state."""
+        done = 0
+        while done < n_steps:
+            n = min(chunk, n_steps - done)
+            key, sub = jax.random.split(key)
+            if bool(needs_rebuild(self.table, self.state.pos, self.state.box,
+                                  self.skin)):
+                self._refresh()
+            self.state, self._ff = self._step_chunk(self.state, self._ff,
+                                                    sub, n)
+            done += n
+            if callback is not None:
+                callback(self.state, self._ff)
+        return self.state
+
+    @property
+    def energy(self) -> float:
+        return float(self._ff.energy)

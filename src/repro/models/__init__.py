@@ -1,0 +1,8 @@
+"""LM-family model zoo: the assigned architectures as selectable configs.
+
+All models are pure-functional JAX (init/apply), scan-over-layers with
+stacked parameters (compile time independent of depth), and carry logical
+sharding annotations resolved against the production mesh by
+repro.parallel.sharding rules.
+"""
+from repro.models.config import ArchConfig, MoECfg, SSMCfg

@@ -1,0 +1,278 @@
+"""Attention variants: GQA (+QKV bias, sliding window), MLA (DeepSeek).
+
+Prefill uses a flash-style chunked computation (lax.scan over KV blocks with
+running max/denominator) so 32k-token prefill never materializes the full
+S x S score matrix.  Decode attends one query against a KV cache.  Head
+dimensions are padded up to a multiple of the tensor-parallel degree where
+needed (e.g. qwen2's 28 heads -> 32); padded heads carry zero weights and
+their outputs are sliced away.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_rope, normal
+
+NEG_INF = -1e30
+
+
+def pad_heads(h: int, tp: int) -> int:
+    return -(-h // tp) * tp
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def init_gqa(cfg, key, tp: int = 16, dtype=jnp.float32):
+    d, hd = cfg.d_model, cfg.hd
+    hp = pad_heads(cfg.n_heads, tp)
+    # kv heads below the TP degree stay logical (replicated by the sharding
+    # rules, Megatron-style); above it they are padded to a multiple.
+    kvp = cfg.kv_heads if cfg.kv_heads <= tp else pad_heads(cfg.kv_heads, tp)
+    ks = jax.random.split(key, 4)
+    s = (1.0 / d) ** 0.5
+    p = {
+        "wq": normal(ks[0], (d, hp, hd), s, dtype),
+        "wk": normal(ks[1], (d, kvp, hd), s, dtype),
+        "wv": normal(ks[2], (d, kvp, hd), s, dtype),
+        "wo": normal(ks[3], (hp, hd, d), s, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hp, hd), dtype)
+        p["bk"] = jnp.zeros((kvp, hd), dtype)
+        p["bv"] = jnp.zeros((kvp, hd), dtype)
+    return p
+
+
+def _qkv(cfg, p, x, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def chunked_attention(q, k, v, q_pos, k_pos, window: int = 0,
+                      kv_chunk: int = 1024, k_valid: jax.Array | None = None):
+    """Flash-style attention: scan over KV chunks with running softmax stats.
+
+    q: (B, S, H, hd);  k/v: (B, T, Hkv, hd);  *_pos: (B, S)/(B, T).
+    Causal: attends where k_pos <= q_pos (and > q_pos - window if SWA).
+    GQA: H must be a multiple of Hkv; kv heads are repeated.
+    """
+    b, s, h, hd = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    vd = v.shape[-1]                       # may differ from hd (MLA)
+    rep = h // hkv
+    scale = hd ** -0.5
+    n_chunks = -(-t // kv_chunk)
+    pad = n_chunks * kv_chunk - t
+
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kpos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=2**30)
+    kval = (jnp.pad(k_valid, ((0, 0), (0, pad)))
+            if k_valid is not None else
+            jnp.pad(jnp.ones((b, t), bool), ((0, 0), (0, pad))))
+
+    kc = kp.reshape(b, n_chunks, kv_chunk, hkv, hd).transpose(1, 0, 2, 3, 4)
+    vc = vp.reshape(b, n_chunks, kv_chunk, hkv, vd).transpose(1, 0, 2, 3, 4)
+    pc = kpos.reshape(b, n_chunks, kv_chunk).transpose(1, 0, 2)
+    mc = kval.reshape(b, n_chunks, kv_chunk).transpose(1, 0, 2)
+
+    qf = (q * scale).astype(jnp.float32)
+
+    def body(carry, xs):
+        m_run, l_run, acc = carry
+        kb, vb, pb, mb = xs
+        kb_r = jnp.repeat(kb, rep, axis=2)         # (B,C,H,hd)
+        sco = jnp.einsum("bshk,bchk->bhsc", qf, kb_r.astype(jnp.float32))
+        ok = (pb[:, None, None, :] <= q_pos[:, None, :, None]) & \
+            mb[:, None, None, :]
+        if window:
+            ok &= pb[:, None, None, :] > (q_pos[:, None, :, None] - window)
+        sco = jnp.where(ok, sco, NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(sco, axis=-1))
+        alpha = jnp.exp(m_run - m_new)
+        prob = jnp.exp(sco - m_new[..., None])
+        vb_r = jnp.repeat(vb, rep, axis=2)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhsc,bchk->bhsk", prob, vb_r.astype(jnp.float32))
+        l_run = l_run * alpha + jnp.sum(prob, axis=-1)
+        return (m_new, l_run, acc), None
+
+    m0 = jnp.full((b, h, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, s), jnp.float32)
+    a0 = jnp.zeros((b, h, s, vd), jnp.float32)
+    (m_f, l_f, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, pc, mc))
+    out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)   # (B,S,H,hd)
+
+
+def apply_gqa(cfg, p, x, positions, kv_chunk=1024):
+    """Training / prefill self-attention. Returns (out, (k, v))."""
+    q, k, v = _qkv(cfg, p, x, positions)
+    out = chunked_attention(q, k, v, positions, positions,
+                            window=cfg.sliding_window, kv_chunk=kv_chunk)
+    out = out[:, :, :p["wq"].shape[1], :]
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), (k, v)
+
+
+def init_gqa_cache(cfg, b: int, seq_len: int, dtype=jnp.bfloat16,
+                   kv_heads: int | None = None, hd: int | None = None):
+    """KV cache. SWA archs use a ring buffer of size window -> long_500k
+    decode memory is O(window), not O(seq)."""
+    t = min(cfg.sliding_window, seq_len) if cfg.sliding_window else seq_len
+    hkv = kv_heads if kv_heads is not None else cfg.kv_heads
+    k = hd if hd is not None else cfg.hd
+    return {
+        "k": jnp.zeros((b, t, hkv, k), dtype),
+        "v": jnp.zeros((b, t, hkv, k), dtype),
+        "pos": jnp.full((b, t), -1, jnp.int32),
+    }
+
+
+def apply_gqa_decode(cfg, p, x, position, cache):
+    """One-token decode against a KV cache.
+
+    x: (B, 1, d); position: (B,) absolute position of the new token.
+    cache['pos'] stores the absolute position held in each slot (-1 empty),
+    which makes ring-buffer (SWA) and linear caches uniform.
+    """
+    b = x.shape[0]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    pos = position[:, None]                          # (B, 1)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+
+    t = cache["k"].shape[1]
+    slot = position % t
+    bidx = jnp.arange(b)
+    ck = cache["k"].at[bidx, slot].set(k[:, 0].astype(cache["k"].dtype))
+    cv = cache["v"].at[bidx, slot].set(v[:, 0].astype(cache["v"].dtype))
+    cpos = cache["pos"].at[bidx, slot].set(position)
+
+    rep = q.shape[2] // ck.shape[2]
+    kk = jnp.repeat(ck, rep, axis=2).astype(jnp.float32)
+    vv = jnp.repeat(cv, rep, axis=2).astype(jnp.float32)
+    qf = (q[:, 0] * cfg.hd ** -0.5).astype(jnp.float32)   # (B,H,hd)
+    sco = jnp.einsum("bhk,bthk->bht", qf, kk)
+    ok = (cpos >= 0) & (cpos <= position[:, None])
+    if cfg.sliding_window:
+        ok &= cpos > (position[:, None] - cfg.sliding_window)
+    sco = jnp.where(ok[:, None, :], sco, NEG_INF)
+    prob = jax.nn.softmax(sco, axis=-1)
+    out = jnp.einsum("bht,bthk->bhk", prob, vv).astype(x.dtype)
+    y = jnp.einsum("bhk,hkd->bd", out, p["wo"])[:, None, :]
+    return y, {"k": ck, "v": cv, "pos": cpos}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def init_mla(cfg, key, dtype=jnp.float32):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 6)
+    s = (1.0 / d) ** 0.5
+    return {
+        "wq_a": normal(ks[0], (d, m.q_lora), s, dtype),
+        "q_norm": jnp.ones((m.q_lora,), dtype),
+        "wq_b": normal(ks[1], (m.q_lora, h, m.qk_nope + m.qk_rope),
+                       (1.0 / m.q_lora) ** 0.5, dtype),
+        "wkv_a": normal(ks[2], (d, m.kv_lora + m.qk_rope), s, dtype),
+        "kv_norm": jnp.ones((m.kv_lora,), dtype),
+        "wk_b": normal(ks[3], (m.kv_lora, h, m.qk_nope),
+                       (1.0 / m.kv_lora) ** 0.5, dtype),
+        "wv_b": normal(ks[4], (m.kv_lora, h, m.v_head),
+                       (1.0 / m.kv_lora) ** 0.5, dtype),
+        "wo": normal(ks[5], (h, m.v_head, d), (1.0 / (h * m.v_head)) ** 0.5,
+                     dtype),
+    }
+
+
+def apply_mla(cfg, p, x, positions, kv_chunk=1024):
+    """Prefill/training MLA: expand the latent, flash-chunked attention."""
+    from repro.models.common import rmsnorm
+    m = cfg.mla
+    cq = rmsnorm(x @ p["wq_a"], p["q_norm"])
+    q = jnp.einsum("bsl,lhk->bshk", cq, p["wq_b"])
+    q_nope, q_rope = q[..., :m.qk_nope], q[..., m.qk_nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv = x @ p["wkv_a"]
+    ckv = rmsnorm(kv[..., :m.kv_lora], p["kv_norm"])
+    k_rope = kv[..., None, m.kv_lora:]                     # (B,S,1,rope)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
+
+    k_nope = jnp.einsum("bsl,lhk->bshk", ckv, p["wk_b"])
+    v = jnp.einsum("bsl,lhk->bshk", ckv, p["wv_b"])
+
+    h = cfg.n_heads
+    qc = jnp.concatenate([q_nope, q_rope], axis=-1)
+    kc = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (*k_nope.shape[:-1], m.qk_rope))],
+        axis=-1)
+    out = chunked_attention(qc, kc, v, positions, positions,
+                            kv_chunk=kv_chunk)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), (ckv, k_rope)
+
+
+def init_mla_cache(cfg, b: int, seq_len: int, dtype=jnp.bfloat16):
+    """Compressed-latent cache: (kv_lora + qk_rope) per token - the memory
+    win that makes 32k-decode MLA cheap."""
+    m = cfg.mla
+    return {
+        "ckv": jnp.zeros((b, seq_len, m.kv_lora), dtype),
+        "kr": jnp.zeros((b, seq_len, m.qk_rope), dtype),
+        "pos": jnp.full((b, seq_len), -1, jnp.int32),
+    }
+
+
+def apply_mla_decode(cfg, p, x, position, cache):
+    """Absorbed-matmul MLA decode: scores and values computed in the latent
+    space (W_uk folded into q, W_uv folded into the output projection)."""
+    from repro.models.common import rmsnorm
+    m = cfg.mla
+    b = x.shape[0]
+    cq = rmsnorm(x @ p["wq_a"], p["q_norm"])
+    q = jnp.einsum("bsl,lhk->bshk", cq, p["wq_b"])[:, 0]   # (B,H,nope+rope)
+    q_nope, q_rope = q[..., :m.qk_nope], q[..., m.qk_nope:]
+    q_rope = apply_rope(q_rope[:, None], position[:, None],
+                        cfg.rope_theta)[:, 0]
+
+    kv = (x @ p["wkv_a"])[:, 0]
+    ckv_new = rmsnorm(kv[..., :m.kv_lora], p["kv_norm"])
+    kr_new = apply_rope(kv[:, None, None, m.kv_lora:], position[:, None],
+                        cfg.rope_theta)[:, 0, 0]
+
+    bidx = jnp.arange(b)
+    slot = position % cache["ckv"].shape[1]
+    ckv = cache["ckv"].at[bidx, slot].set(ckv_new.astype(cache["ckv"].dtype))
+    kr = cache["kr"].at[bidx, slot].set(kr_new.astype(cache["kr"].dtype))
+    cpos = cache["pos"].at[bidx, slot].set(position)
+
+    # absorb: q_eff[h] = q_nope[h] @ wk_b[:, h, :]^T  (latent-space query)
+    q_eff = jnp.einsum("bhk,lhk->bhl", q_nope, p["wk_b"])
+    scale = (m.qk_nope + m.qk_rope) ** -0.5
+    sco = (jnp.einsum("bhl,btl->bht", q_eff.astype(jnp.float32),
+                      ckv.astype(jnp.float32))
+           + jnp.einsum("bhk,btk->bht", q_rope.astype(jnp.float32),
+                        kr.astype(jnp.float32))) * scale
+    ok = (cpos >= 0) & (cpos <= position[:, None])
+    sco = jnp.where(ok[:, None, :], sco, NEG_INF)
+    prob = jax.nn.softmax(sco, axis=-1)
+    out_l = jnp.einsum("bht,btl->bhl", prob, ckv.astype(jnp.float32))
+    out = jnp.einsum("bhl,lhk->bhk", out_l.astype(x.dtype), p["wv_b"])
+    y = jnp.einsum("bhk,hkd->bd", out, p["wo"])[:, None, :]
+    return y, {"ckv": ckv, "kr": kr, "pos": cpos}

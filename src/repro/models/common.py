@@ -1,0 +1,131 @@
+"""Shared neural building blocks (pure functions, no framework)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def normal(key, shape, scale, dtype=jnp.float32):
+    return (scale * jax.random.normal(key, shape)).astype(dtype)
+
+
+def rmsnorm(x, w, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return x.astype(dt) * w.astype(dt)
+
+
+def layernorm(x, w, b, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return x.astype(dt) * w.astype(dt) + b.astype(dt)
+
+
+def apply_norm(cfg, p, x):
+    """p is the dict produced by init_norm ({'_w'} or {'_w','_b'})."""
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["_w"], p["_b"])
+    return rmsnorm(x, p["_w"])
+
+
+def init_norm(cfg, d, dtype=jnp.float32):
+    if cfg.norm == "layernorm":
+        return {"_w": jnp.ones((d,), dtype), "_b": jnp.zeros((d,), dtype)}
+    return {"_w": jnp.ones((d,), dtype)}
+
+
+def act_fn(name: str):
+    if name == "swiglu":  # handled by caller (gated)
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu2":   # squared ReLU (nemotron/minitron)
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(hd: int, theta: float, dtype=jnp.float32):
+    return (1.0 / (theta ** (np.arange(0, hd, 2) / hd))).astype(np.float32)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               rot_dim: int | None = None) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) int32. Rotates the first
+    ``rot_dim`` dims (default all)."""
+    hd = x.shape[-1]
+    rd = rot_dim or hd
+    freqs = jnp.asarray(rope_freqs(rd, theta))              # (rd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (B,S,rd/2)
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    xr, xp = x[..., :rd], x[..., rd:]
+    x1, x2 = xr[..., ::2], xr[..., 1::2]
+    out = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    out = out.reshape(xr.shape)
+    return jnp.concatenate([out, xp], axis=-1) if rd < hd else out
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(cfg, key, d: int, dff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in, s_out = (2.0 / d) ** 0.5, (2.0 / dff) ** 0.5
+    p = {"wi": normal(k1, (d, dff), s_in, dtype),
+         "wo": normal(k2, (dff, d), s_out, dtype)}
+    if cfg.act == "swiglu":
+        p["wg"] = normal(k3, (d, dff), s_in, dtype)
+    return p
+
+
+def apply_mlp(cfg, p, x):
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])
+    else:
+        h = act_fn(cfg.act)(x @ p["wi"])
+    return h @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def chunked_xent(logits_fn, h: jax.Array, targets: jax.Array,
+                 mask: jax.Array, chunk: int = 1024):
+    """Cross-entropy over huge vocabularies without materializing the full
+    (tokens, V) logits: scan over sequence chunks; each chunk computes
+    logits -> logsumexp -> nll and discards them.
+
+    h: (T, d) final hidden states, targets: (T,), mask: (T,).
+    logits_fn: (chunk, d) -> (chunk, V).
+    """
+    t = h.shape[0]
+    n_chunks = -(-t // chunk)
+    pad = n_chunks * chunk - t
+    h = jnp.pad(h, ((0, pad), (0, 0)))
+    targets = jnp.pad(targets, (0, pad))
+    mask = jnp.pad(mask, (0, pad))
+
+    def body(carry, xs):
+        hb, tb, mb = xs
+        logits = logits_fn(hb).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tb[:, None], axis=-1)[:, 0]
+        nll = (lse - gold) * mb
+        return carry + jnp.sum(nll), None
+
+    total, _ = jax.lax.scan(
+        body, jnp.zeros((), jnp.float32),
+        (h.reshape(n_chunks, chunk, -1), targets.reshape(n_chunks, chunk),
+         mask.reshape(n_chunks, chunk).astype(jnp.float32)))
+    return total / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,155 @@
+"""Top-level LM API: input specs, loss/prefill/decode builders per family.
+
+This is the single entry point the launcher, dry-run, tests and benchmarks
+use; family dispatch (decoder-only vs encoder-decoder vs ssm/hybrid) is
+resolved here.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec as encdec_mod
+from repro.models import transformer as tfm
+from repro.models.config import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # 'train' | 'prefill' | 'decode'
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ArchConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """(runnable, reason-if-not). long_500k needs sub-quadratic attention."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("pure full-attention arch: 500k-token KV decode is "
+                       "quadratic-memory; skipped per assignment "
+                       "(DESIGN.md §Arch-applicability)")
+    return True, ""
+
+
+def _frontend_split(cfg: ArchConfig, seq: int) -> tuple[int, int]:
+    """(n_frontend_positions, n_text_positions) for vlm archs."""
+    s_img = int(seq * cfg.frontend_frac)
+    return s_img, seq - s_img
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f = jnp.dtype(cfg.dtype)
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "audio":
+            st = s // encdec_mod.TGT_RATIO
+            return {
+                "src_embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), f),
+                "tokens": jax.ShapeDtypeStruct((b, st), i32),
+                "targets": jax.ShapeDtypeStruct((b, st), i32),
+                "mask": jax.ShapeDtypeStruct((b, st), jnp.float32),
+            }
+        if cfg.family == "vlm":
+            si, stxt = _frontend_split(cfg, s)
+            return {
+                "embeds": jax.ShapeDtypeStruct((b, si, cfg.d_model), f),
+                "tokens": jax.ShapeDtypeStruct((b, stxt), i32),
+                "targets": jax.ShapeDtypeStruct((b, stxt), i32),
+                "mask": jax.ShapeDtypeStruct((b, stxt), jnp.float32),
+            }
+        return {
+            "tokens": jax.ShapeDtypeStruct((b, s), i32),
+            "targets": jax.ShapeDtypeStruct((b, s), i32),
+            "mask": jax.ShapeDtypeStruct((b, s), jnp.float32),
+        }
+    # decode: one new token against a seq_len cache
+    return {
+        "token": jax.ShapeDtypeStruct((b, 1), i32),
+        "position": jax.ShapeDtypeStruct((b,), i32),
+    }
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeSpec, dtype=jnp.bfloat16):
+    """Abstract KV/state caches for decode lowering."""
+    b, s = shape.global_batch, shape.seq_len
+
+    def build():
+        if cfg.family == "audio":
+            return encdec_mod.init_caches(cfg, b, s // encdec_mod.TGT_RATIO,
+                                          s, dtype)
+        return tfm.init_caches(cfg, b, s, dtype)
+
+    return jax.eval_shape(build)
+
+
+def make_loss_fn(cfg: ArchConfig, remat: bool = True, kv_chunk: int = 1024,
+                 xent_chunk: int = 2048):
+    if cfg.family == "audio":
+        def loss_fn(params, batch):
+            return encdec_mod.lm_loss(
+                cfg, params, batch["tokens"], batch["targets"],
+                batch["mask"], batch["src_embeds"], remat, kv_chunk,
+                xent_chunk)
+        return loss_fn
+
+    def loss_fn(params, batch):
+        return tfm.lm_loss(cfg, params, batch["tokens"], batch["targets"],
+                           batch["mask"], batch.get("embeds"), remat,
+                           kv_chunk, xent_chunk)
+    return loss_fn
+
+
+def make_prefill_fn(cfg: ArchConfig, kv_chunk: int = 1024):
+    """Prefill: full forward, returns last-position logits (f32)."""
+    if cfg.family == "audio":
+        def prefill(params, batch):
+            h, _, logits_fn = encdec_mod.forward(
+                cfg, params, batch["tokens"], batch["src_embeds"],
+                remat=False, kv_chunk=kv_chunk)
+            return logits_fn(h[:, -1]).astype(jnp.float32)
+        return prefill
+
+    def prefill(params, batch):
+        h, _, logits_fn = tfm.forward(cfg, params, batch["tokens"],
+                                      batch.get("embeds"), remat=False,
+                                      kv_chunk=kv_chunk)
+        return logits_fn(h[:, -1]).astype(jnp.float32)
+    return prefill
+
+
+def make_decode_fn(cfg: ArchConfig):
+    if cfg.family == "audio":
+        def decode(params, caches, batch):
+            return encdec_mod.decode_step(cfg, params, caches,
+                                          batch["token"], batch["position"])
+        return decode
+
+    def decode(params, caches, batch):
+        return tfm.decode_step(cfg, params, caches, batch["token"],
+                               batch["position"])
+    return decode
+
+
+def init_params(cfg: ArchConfig, key, tp: int = 16, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    if cfg.family == "audio":
+        return encdec_mod.init_encdec(cfg, key, tp, dtype)
+    return tfm.init_lm(cfg, key, tp, dtype)
+
+
+def abstract_params(cfg: ArchConfig, tp: int = 16, dtype=None):
+    """Parameter pytree as ShapeDtypeStructs (dry-run: no allocation)."""
+    return jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0), tp, dtype))

@@ -1,0 +1,205 @@
+"""Mamba-2 (state-space duality / SSD) blocks.
+
+Training/prefill uses the chunked SSD algorithm (intra-chunk quadratic form
++ inter-chunk state recurrence), matching arXiv:2405.21060; decode keeps a
+constant-size recurrent state - the property that makes `long_500k`
+feasible.  A Pallas kernel variant of the chunk computation lives in
+repro.kernels.ssd.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import normal, rmsnorm
+
+
+def ssm_dims(cfg):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    n_heads = d_in // s.head_dim
+    return d_in, n_heads
+
+
+def init_mamba2(cfg, key, dtype=jnp.float32):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in, nh = ssm_dims(cfg)
+    g, n = s.n_groups, s.d_state
+    ks = jax.random.split(key, 5)
+    sc = (1.0 / d) ** 0.5
+    # in_proj emits [z (gate), x, B, C, dt]
+    return {
+        "in_proj": normal(ks[0], (d, 2 * d_in + 2 * g * n + nh), sc, dtype),
+        "conv_w": normal(ks[1], (s.conv_width, d_in + 2 * g * n), 0.5,
+                         dtype),
+        "conv_b": jnp.zeros((d_in + 2 * g * n,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "norm_w": jnp.ones((d_in,), dtype),
+        "out_proj": normal(ks[2], (d_in, d), (1.0 / d_in) ** 0.5, dtype),
+    }
+
+
+def _split_proj(cfg, proj):
+    s = cfg.ssm
+    d_in, nh = ssm_dims(cfg)
+    g, n = s.n_groups, s.d_state
+    z, xbc, dt = jnp.split(proj, [d_in, 2 * d_in + 2 * g * n], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv1d. x: (B, S, C); w: (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    return out + b
+
+
+def ssd_chunked(x, dt, a, b, c, d_skip, chunk: int):
+    """Chunked SSD scan.
+
+    x: (B, S, H, P); dt: (B, S, H) (post-softplus); a: (H,) negative decay;
+    b, c: (B, S, G, N); returns y: (B, S, H, P).
+    """
+    bs, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    rep = h // g
+    nc = s // chunk
+    assert nc * chunk == s, "seq must be a chunk multiple"
+
+    xr = x.reshape(bs, nc, chunk, h, p)
+    dtr = dt.reshape(bs, nc, chunk, h)
+    br = jnp.repeat(b, rep, axis=2).reshape(bs, nc, chunk, h, n)
+    cr = jnp.repeat(c, rep, axis=2).reshape(bs, nc, chunk, h, n)
+
+    da = dtr * a[None, None, None, :]            # (B,NC,L,H) log-decay steps
+    cum = jnp.cumsum(da, axis=2)                 # within-chunk cumulative
+
+    # --- intra-chunk (quadratic, attention-like with decay mask) ---------
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]    # (B,NC,L,L,H)
+    li = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # mask BEFORE exp: exp of masked entries must not produce inf, or the
+    # where() cotangent turns into NaN in the backward pass
+    seg = jnp.where(li[None, None, :, :, None], seg, -1e30)
+    decay = jnp.exp(seg)
+    cb = jnp.einsum("bnlhs,bnmhs->bnlmh", cr, br)          # (B,NC,L,L,H)
+    y_intra = jnp.einsum("bnlmh,bnlmh,bnmh,bnmhp->bnlhp",
+                         cb, decay.astype(x.dtype),
+                         dtr.astype(x.dtype), xr)
+
+    # --- chunk states + inter-chunk recurrence ---------------------------
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)        # (B,NC,L,H)
+    states = jnp.einsum("bnlh,bnlh,bnlhs,bnlhp->bnhsp",
+                        decay_to_end.astype(x.dtype), dtr.astype(x.dtype),
+                        br, xr)                            # (B,NC,H,N,P)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                # (B,NC,H)
+
+    def scan_fn(prev, xs):
+        st, dec = xs
+        new = st + dec[..., None, None].astype(st.dtype) * prev
+        return new, prev
+
+    init = jnp.zeros((bs, h, n, p), x.dtype)
+    _, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)     # (B,NC,H,N,P)
+
+    decay_from_start = jnp.exp(cum)                        # (B,NC,L,H)
+    y_inter = jnp.einsum("bnlhs,bnlh,bnhsp->bnlhp",
+                         cr, decay_from_start.astype(x.dtype), prev_states)
+
+    y = (y_intra + y_inter).reshape(bs, s, h, p)
+    return y + d_skip[None, None, :, None].astype(x.dtype) * x
+
+
+def ssd_reference(x, dt, a, b, c, d_skip):
+    """Naive per-step recurrence (oracle for the chunked form + kernel)."""
+    bs, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    rep = h // g
+    br = jnp.repeat(b, rep, axis=2)
+    cr = jnp.repeat(c, rep, axis=2)
+
+    def step(state, xs):
+        xt, dtt, bt, ct = xs               # (B,H,P),(B,H),(B,H,N),(B,H,N)
+        dec = jnp.exp(dtt * a[None, :])[..., None, None]
+        state = state * dec + (dtt[..., None, None].astype(x.dtype)
+                               * bt[..., :, None] * xt[..., None, :])
+        y = jnp.einsum("bhn,bhnp->bhp", ct, state)
+        return state, y
+
+    init = jnp.zeros((bs, h, n, p), x.dtype)
+    _, ys = jax.lax.scan(
+        step, init,
+        (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+         br.transpose(1, 0, 2, 3), cr.transpose(1, 0, 2, 3)))
+    y = ys.transpose(1, 0, 2, 3)
+    return y + d_skip[None, None, :, None].astype(x.dtype) * x
+
+
+def apply_mamba2(cfg, p, x, use_kernel: bool = False):
+    """Full Mamba-2 block (training/prefill). x: (B, S, d)."""
+    s = cfg.ssm
+    d_in, nh = ssm_dims(cfg)
+    g, n = s.n_groups, s.d_state
+    proj = x @ p["in_proj"]
+    z, xbc, dt = _split_proj(cfg, proj)
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
+    xs, b, c = jnp.split(xbc, [d_in, d_in + g * n], axis=-1)
+    bs, sl, _ = x.shape
+    xh = xs.reshape(bs, sl, nh, s.head_dim)
+    bh = b.reshape(bs, sl, g, n)
+    ch = c.reshape(bs, sl, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    if use_kernel:
+        from repro.kernels.ssd.ops import ssd_chunked_kernel
+        y = ssd_chunked_kernel(xh, dt, a, bh, ch, p["d_skip"], s.chunk)
+    else:
+        y = ssd_chunked(xh, dt, a, bh, ch, p["d_skip"], s.chunk)
+    y = y.reshape(bs, sl, d_in)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_w"])
+    return y @ p["out_proj"]
+
+
+def init_mamba2_cache(cfg, bsz: int, dtype=jnp.float32):
+    s = cfg.ssm
+    d_in, nh = ssm_dims(cfg)
+    return {
+        "state": jnp.zeros((bsz, nh, s.d_state, s.head_dim), dtype),
+        "conv": jnp.zeros((bsz, s.conv_width - 1,
+                           d_in + 2 * s.n_groups * s.d_state), dtype),
+    }
+
+
+def apply_mamba2_decode(cfg, p, x, cache):
+    """One-token decode: O(1) state update. x: (B, 1, d)."""
+    s = cfg.ssm
+    d_in, nh = ssm_dims(cfg)
+    g, n = s.n_groups, s.d_state
+    proj = x[:, 0] @ p["in_proj"]
+    z, xbc, dt = _split_proj(cfg, proj)
+    # causal conv over (cached last K-1 inputs + current)
+    hist = jnp.concatenate([cache["conv"], xbc[:, None, :]], axis=1)
+    conv_out = jnp.sum(hist * p["conv_w"][None], axis=1) + p["conv_b"]
+    xbc_a = jax.nn.silu(conv_out)
+    new_conv = hist[:, 1:]
+    xs, b, c = jnp.split(xbc_a, [d_in, d_in + g * n], axis=-1)
+    xh = xs.reshape(-1, nh, s.head_dim)
+    bh = jnp.repeat(b.reshape(-1, g, n), nh // g, axis=1)
+    ch = jnp.repeat(c.reshape(-1, g, n), nh // g, axis=1)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    dec = jnp.exp(dtv * a[None, :])[..., None, None].astype(cache["state"].dtype)
+    state = cache["state"] * dec + (dtv[..., None, None].astype(x.dtype)
+                                    * bh[..., :, None] * xh[..., None, :])
+    y = jnp.einsum("bhn,bhnp->bhp", ch, state)
+    y = y + p["d_skip"][None, :, None].astype(x.dtype) * xh
+    y = y.reshape(-1, d_in).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_w"])
+    out = (y @ p["out_proj"]).astype(x.dtype)
+    return out[:, None, :], {"state": state, "conv": new_conv}

@@ -1,0 +1,346 @@
+"""Decoder-only LM covering the dense / moe / vlm / ssm / hybrid families.
+
+Layers are stacked and driven by ``lax.scan`` (one trace per layer *group*,
+so compile time is independent of depth - essential for the 61-layer 671B
+dry-run).  Heterogeneous stacks (e.g. deepseek's 3 leading dense layers, or
+zamba2's shared attention block every 6 mamba blocks) are expressed as a
+static list of homogeneous groups.
+
+Decode maintains per-layer caches scanned alongside the stacked params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.ad_checkpoint
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import (apply_mlp, apply_norm, chunked_xent,
+                                 init_mlp, init_norm, normal)
+from repro.models.config import ArchConfig
+from repro.parallel.sharding import shard
+
+VOCAB_PAD = 256
+
+
+def padded_vocab(v: int) -> int:
+    return -(-v // VOCAB_PAD) * VOCAB_PAD
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerGroup:
+    kind: str          # 'dense' | 'moe' | 'ssm'
+    count: int
+    d_ff: int = 0
+    shared_attn: bool = False   # hybrid: shared attn+mlp after each layer?
+
+
+def layer_groups(cfg: ArchConfig) -> list[LayerGroup]:
+    if cfg.family == "ssm":
+        return [LayerGroup("ssm", cfg.n_layers)]
+    if cfg.family == "hybrid":
+        n_shared = cfg.n_layers // cfg.shared_every
+        return [LayerGroup("ssm", cfg.n_layers, shared_attn=True)]
+    if cfg.moe is not None:
+        groups = []
+        if cfg.moe.first_dense:
+            groups.append(LayerGroup("dense", cfg.moe.first_dense,
+                                     d_ff=cfg.moe.d_ff_dense or cfg.d_ff))
+        groups.append(LayerGroup("moe", cfg.n_layers - cfg.moe.first_dense))
+        return groups
+    return [LayerGroup("dense", cfg.n_layers, d_ff=cfg.d_ff)]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_layer(cfg: ArchConfig, kind: str, d_ff: int, tp: int, dtype, key):
+    ks = jax.random.split(key, 4)
+    p = {}
+    if kind == "ssm":
+        p["norm_ssm"] = init_norm(cfg, cfg.d_model, dtype)
+        p["ssm"] = ssm_mod.init_mamba2(cfg, ks[0], dtype)
+        return p
+    p["norm_attn"] = init_norm(cfg, cfg.d_model, dtype)
+    if cfg.mla is not None:
+        p["attn"] = attn.init_mla(cfg, ks[0], dtype)
+    else:
+        p["attn"] = attn.init_gqa(cfg, ks[0], tp, dtype)
+    p["norm_mlp"] = init_norm(cfg, cfg.d_model, dtype)
+    if kind == "moe":
+        p["moe"] = moe_mod.init_moe(cfg, ks[1], dtype)
+    else:
+        p["mlp"] = init_mlp(cfg, ks[1], cfg.d_model, d_ff or cfg.d_ff, dtype)
+    return p
+
+
+def init_lm(cfg: ArchConfig, key: jax.Array, tp: int = 16,
+            dtype=jnp.float32) -> dict:
+    vp = padded_vocab(cfg.vocab)
+    d = cfg.d_model
+    keys = jax.random.split(key, 8)
+    params = {
+        "embed": normal(keys[0], (vp, d), d ** -0.5, dtype),
+        "final_norm": init_norm(cfg, d, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = normal(keys[1], (d, vp), d ** -0.5, dtype)
+
+    for gi, grp in enumerate(layer_groups(cfg)):
+        lk = jax.random.split(keys[2 + gi], grp.count)
+        params[f"g{gi}"] = jax.vmap(
+            lambda k: _init_layer(cfg, grp.kind, grp.d_ff, tp, dtype, k))(lk)
+    if cfg.family == "hybrid":
+        sh = {}
+        sh["norm_attn"] = init_norm(cfg, d, dtype)
+        sh["attn"] = attn.init_gqa(cfg, keys[6], tp, dtype)
+        sh["norm_mlp"] = init_norm(cfg, d, dtype)
+        sh["mlp"] = init_mlp(cfg, keys[7], d, cfg.d_ff, dtype)
+        params["shared"] = sh
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _apply_block(cfg, kind, p, h, positions, kv_chunk):
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "ssm":
+        hn = apply_norm(cfg, p["norm_ssm"], h)
+        h = h + ssm_mod.apply_mamba2(cfg, p["ssm"], hn)
+        return h, aux
+    hn = apply_norm(cfg, p["norm_attn"], h)
+    if cfg.mla is not None:
+        a, _ = attn.apply_mla(cfg, p["attn"], hn, positions, kv_chunk)
+    else:
+        a, _ = attn.apply_gqa(cfg, p["attn"], hn, positions, kv_chunk)
+    # named so the remat policy can pin post-collective values (backward
+    # then reuses the TP all-reduce results instead of re-issuing them)
+    a = jax.ad_checkpoint.checkpoint_name(a, "blk_out")
+    h = h + a
+    hn = apply_norm(cfg, p["norm_mlp"], h)
+    if kind == "moe":
+        y, aux = moe_mod.apply_moe(cfg, p["moe"], hn)
+    else:
+        y = apply_mlp(cfg, p["mlp"], hn)
+    y = jax.ad_checkpoint.checkpoint_name(y, "blk_out")
+    h = h + y
+    h = shard(h, "batch", "seq_act", "embed")
+    return h, aux
+
+
+def _shared_block(cfg, p, h, resid, positions, kv_chunk):
+    """Zamba2 shared attention+MLP block (weight-tied across invocations).
+    Input is h + the token-embedding residual (approximation of zamba2's
+    concat-reproject; documented in DESIGN.md)."""
+    x = h + resid
+    hn = apply_norm(cfg, p["norm_attn"], x)
+    a, _ = attn.apply_gqa(cfg, p["attn"], hn, positions, kv_chunk)
+    x = x + a
+    hn = apply_norm(cfg, p["norm_mlp"], x)
+    x = x + apply_mlp(cfg, p["mlp"], hn)
+    return x
+
+
+def embed_inputs(cfg, params, tokens, embeds=None):
+    """Token embedding (+ modality-frontend stub embeddings for vlm/audio).
+
+    vlm: ``embeds`` (B, S_img, d) patch embeddings are prepended to the
+    token embeddings (pixtral-style early fusion).
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    h = params["embed"][tokens].astype(dtype)
+    if embeds is not None:
+        h = jnp.concatenate([embeds.astype(dtype), h], axis=1)
+    return h
+
+
+def _remat_wrap(fn, remat):
+    """remat: False | True (save nothing) | 'save_collectives' (pin the
+    named block outputs so backward reuses, not re-issues, their TP
+    all-reduces - trades ~2 x (B_loc,S,d) bf16 per layer of memory for
+    removing the remat re-forward's collectives)."""
+    if remat is False or remat is None:
+        return fn
+    if remat == "save_collectives":
+        pol = jax.checkpoint_policies.save_only_these_names("blk_out")
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)
+
+
+def forward(cfg: ArchConfig, params: dict, tokens: jax.Array,
+            embeds: jax.Array | None = None, remat: bool = True,
+            kv_chunk: int = 1024):
+    """Full forward pass. Returns (hidden (B,S,d), aux_loss, logits_fn)."""
+    h = embed_inputs(cfg, params, tokens, embeds)
+    h = shard(h, "batch", "seq_act", "embed")
+    b, s, d = h.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    resid0 = h
+    aux_tot = jnp.zeros((), jnp.float32)
+
+    groups = layer_groups(cfg)
+    for gi, grp in enumerate(groups):
+        gp = params[f"g{gi}"]
+
+        if grp.shared_attn:
+            # hybrid: scan sub-stacks of `shared_every`, shared block between
+            per = cfg.shared_every
+            n_outer = grp.count // per
+            gp_r = jax.tree_util.tree_map(
+                lambda x: x.reshape(n_outer, per, *x.shape[1:]), gp)
+
+            def outer_body(carry, xs):
+                h, aux = carry
+                sub_params = xs
+
+                def inner(c, lp):
+                    hh, ax = c
+                    hh, a2 = _apply_block(cfg, grp.kind, lp, hh, positions,
+                                          kv_chunk)
+                    return (hh, ax + a2), None
+                inner_fn = _remat_wrap(inner, remat)
+                (h, aux), _ = jax.lax.scan(inner_fn, (h, aux), sub_params)
+                h = _shared_block(cfg, params["shared"], h, resid0,
+                                  positions, kv_chunk)
+                return (h, aux), None
+
+            (h, aux_tot), _ = jax.lax.scan(outer_body, (h, aux_tot), gp_r)
+        else:
+            def body(carry, lp, kind=grp.kind):
+                hh, ax = carry
+                hh, a2 = _apply_block(cfg, kind, lp, hh, positions, kv_chunk)
+                return (hh, ax + a2), None
+            body_fn = _remat_wrap(body, remat)
+            (h, aux_tot), _ = jax.lax.scan(body_fn, (h, aux_tot), gp)
+
+    h = apply_norm(cfg, params["final_norm"], h)
+
+    def logits_fn(hb):
+        w = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+        return hb @ w.astype(hb.dtype)
+
+    return h, aux_tot, logits_fn
+
+
+def lm_loss(cfg, params, tokens, targets, loss_mask, embeds=None,
+            remat=True, kv_chunk=1024, xent_chunk=2048):
+    h, aux, logits_fn = forward(cfg, params, tokens, embeds, remat, kv_chunk)
+    if embeds is not None:
+        # frontend positions produce no next-token loss
+        pad = jnp.zeros((h.shape[0], embeds.shape[1]), loss_mask.dtype)
+        targets = jnp.concatenate(
+            [jnp.zeros((h.shape[0], embeds.shape[1]), targets.dtype),
+             targets], axis=1)
+        loss_mask = jnp.concatenate([pad, loss_mask], axis=1)
+    t = h.shape[0] * h.shape[1]
+    loss = chunked_xent(logits_fn, h.reshape(t, -1), targets.reshape(t),
+                        loss_mask.reshape(t), chunk=xent_chunk)
+    return loss + 0.01 * aux
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg: ArchConfig, b: int, seq_len: int, dtype=jnp.bfloat16):
+    caches = {}
+    for gi, grp in enumerate(layer_groups(cfg)):
+        if grp.kind == "ssm":
+            one = ssm_mod.init_mamba2_cache(cfg, b, jnp.float32)
+        elif cfg.mla is not None:
+            one = attn.init_mla_cache(cfg, b, seq_len, dtype)
+        else:
+            one = attn.init_gqa_cache(cfg, b, seq_len, dtype)
+        caches[f"g{gi}"] = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (grp.count, *x.shape)),
+            one)
+        if grp.shared_attn:
+            n_pts = grp.count // cfg.shared_every
+            sh = attn.init_gqa_cache(cfg, b, seq_len, dtype)
+            caches["shared"] = jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x[None], (n_pts, *x.shape)), sh)
+    return caches
+
+
+def _decode_block(cfg, kind, p, h, position, cache):
+    if kind == "ssm":
+        hn = apply_norm(cfg, p["norm_ssm"], h)
+        y, cache = ssm_mod.apply_mamba2_decode(cfg, p["ssm"], hn, cache)
+        return h + y, cache
+    hn = apply_norm(cfg, p["norm_attn"], h)
+    if cfg.mla is not None:
+        a, cache = attn.apply_mla_decode(cfg, p["attn"], hn, position, cache)
+    else:
+        a, cache = attn.apply_gqa_decode(cfg, p["attn"], hn, position, cache)
+    h = h + a
+    hn = apply_norm(cfg, p["norm_mlp"], h)
+    if kind == "moe":
+        y, _ = moe_mod.apply_moe(cfg, p["moe"], hn)
+    else:
+        y = apply_mlp(cfg, p["mlp"], hn)
+    return h + y, cache
+
+
+def decode_step(cfg: ArchConfig, params: dict, caches: dict,
+                token: jax.Array, position: jax.Array):
+    """One autoregressive step. token: (B, 1) int32; position: (B,)."""
+    h = params["embed"][token].astype(jnp.dtype(cfg.dtype))
+    resid0 = h
+    new_caches = {}
+    groups = layer_groups(cfg)
+    for gi, grp in enumerate(groups):
+        gp = params[f"g{gi}"]
+        cache = caches[f"g{gi}"]
+
+        if grp.shared_attn:
+            per = cfg.shared_every
+            n_outer = grp.count // per
+            gp_r = jax.tree_util.tree_map(
+                lambda x: x.reshape(n_outer, per, *x.shape[1:]), gp)
+            c_r = jax.tree_util.tree_map(
+                lambda x: x.reshape(n_outer, per, *x.shape[1:]), cache)
+            sh_cache = caches["shared"]
+
+            def outer(h, xs):
+                lp, lc, sc = xs
+
+                def inner(hh, xs2):
+                    lp2, lc2 = xs2
+                    hh, nc = _decode_block(cfg, grp.kind, lp2, hh, position,
+                                           lc2)
+                    return hh, nc
+                h, ncs = jax.lax.scan(inner, h, (lp, lc))
+                # shared attention block at this invocation point
+                x = h + resid0
+                hn = apply_norm(cfg, params["shared"]["norm_attn"], x)
+                a, nsc = attn.apply_gqa_decode(cfg, params["shared"]["attn"],
+                                               hn, position, sc)
+                x = x + a
+                hn = apply_norm(cfg, params["shared"]["norm_mlp"], x)
+                h = x + apply_mlp(cfg, params["shared"]["mlp"], hn)
+                return h, (ncs, nsc)
+
+            h, (nc, nsc) = jax.lax.scan(outer, h, (gp_r, c_r, sh_cache))
+            new_caches[f"g{gi}"] = jax.tree_util.tree_map(
+                lambda x: x.reshape(grp.count, *x.shape[2:]), nc)
+            new_caches["shared"] = nsc
+        else:
+            def body(h, xs, kind=grp.kind):
+                lp, lc = xs
+                h, nc = _decode_block(cfg, kind, lp, h, position, lc)
+                return h, nc
+            h, nc = jax.lax.scan(body, h, (gp, cache))
+            new_caches[f"g{gi}"] = nc
+
+    h = apply_norm(cfg, params["final_norm"], h)
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (h[:, 0] @ w.astype(h.dtype)).astype(jnp.float32)
+    return logits, new_caches

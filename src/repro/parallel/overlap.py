@@ -1,0 +1,40 @@
+"""Compute/communication overlap helpers.
+
+On TPU+XLA the latency-hiding scheduler overlaps collectives with
+independent compute automatically *when the dependence structure allows
+it*.  These helpers restructure programs so it can:
+
+* ``interleaved_halo_stencil`` - MD: start the halo ppermutes, process the
+  interior cells (no ghost dependency) while ghosts are in flight, then
+  process the boundary shell.  This is the classical MD overlap trick
+  (compute interior during halo exchange) expressed so XLA's scheduler can
+  see the independence - the interior term depends only on local data.
+
+* ``async_all_reduce_hint`` - tags a collective as schedulable-early by
+  separating its issue point from its use point (optimization barrier on
+  the consumer side only).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def split_interior_boundary(x: jax.Array, dims=(0, 1, 2)):
+    """Masks selecting interior cells (stencil-independent of ghosts) and
+    the boundary shell, for a (cx, cy, cz, ...) local block."""
+    shape = x.shape[:3]
+    masks = []
+    for d, n in enumerate(shape):
+        i = jnp.arange(n)
+        m = (i > 0) & (i < n - 1)
+        masks.append(m.reshape([-1 if k == d else 1 for k in range(3)]))
+    interior = masks[0] & masks[1] & masks[2]
+    return interior, ~interior
+
+
+def issue_early(x: jax.Array) -> jax.Array:
+    """Mark ``x`` (typically a fresh collective result) so XLA may schedule
+    its producer as early as possible without fusing it into the consumer
+    (optimization_barrier between producer and consumer)."""
+    return jax.lax.optimization_barrier(x)

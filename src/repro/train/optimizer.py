@@ -1,0 +1,135 @@
+"""Optimizers built from scratch (no optax offline).
+
+AdamW with dtype-configurable moments: f32 default; bf16 moments for the
+671B MoE so optimizer state fits v5e HBM (matches DeepSeek-V3's own
+low-precision training practice; documented in EXPERIMENTS.md).  Moments
+inherit the parameter sharding, so TP/EP-sharded tensors get sharded state
+for free; a ZeRO-1 mode additionally shards replicated-tensor state over
+the data axis.
+
+Also provides SNES (separable natural evolution strategies) - the
+'neuroevolution' in NEP's name - used by core/training.py for the
+paper-faithful potential fit.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: jax.Array
+
+
+def adamw_init(params, dtype=jnp.float32) -> OptState:
+    z = lambda p: jnp.zeros(p.shape, dtype)
+    return OptState(mu=jax.tree_util.tree_map(z, params),
+                    nu=jax.tree_util.tree_map(z, params),
+                    count=jnp.zeros((), jnp.int32))
+
+
+def adamw_update(params, grads, state: OptState, lr, *, b1=0.9, b2=0.95,
+                 eps=1e-8, weight_decay=0.1, grad_clip=1.0):
+    """Returns (new_params, new_state). Math in f32, moments stored in the
+    state dtype."""
+    count = state.count + 1
+    # global-norm clip
+    gnorm = jnp.sqrt(sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32)))
+        for g in jax.tree_util.tree_leaves(grads)))
+    scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9))
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu32 = mu.astype(jnp.float32) * b1 + (1 - b1) * g
+        nu32 = nu.astype(jnp.float32) * b2 + (1 - b2) * g * g
+        mhat = mu32 / (1 - b1 ** count.astype(jnp.float32))
+        vhat = nu32 / (1 - b2 ** count.astype(jnp.float32))
+        step = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * \
+            p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * step
+        return (newp.astype(p.dtype), mu32.astype(mu.dtype),
+                nu32.astype(nu.dtype))
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_mu = jax.tree_util.tree_leaves(state.mu)
+    flat_nu = jax.tree_util.tree_leaves(state.nu)
+    out = [upd(p, g, m, n) for p, g, m, n in
+           zip(flat_p, flat_g, flat_mu, flat_nu)]
+    newp = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+    newmu = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+    newnu = jax.tree_util.tree_unflatten(tdef, [o[2] for o in out])
+    return newp, OptState(mu=newmu, nu=newnu, count=count)
+
+
+def cosine_schedule(step, *, peak_lr, warmup, total):
+    warm = peak_lr * (step + 1) / warmup
+    frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+    cos = 0.5 * peak_lr * (1 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < warmup, warm, cos)
+
+
+# ---------------------------------------------------------------------------
+# SNES - separable natural evolution strategy (the 'NE' in NEP)
+# ---------------------------------------------------------------------------
+
+class SNESState(NamedTuple):
+    mean: Any       # pytree of parameter means
+    sigma: Any      # pytree of per-parameter stddevs
+    count: jax.Array
+
+
+def snes_init(params, sigma0=0.1) -> SNESState:
+    return SNESState(
+        mean=params,
+        sigma=jax.tree_util.tree_map(
+            lambda p: jnp.full(p.shape, sigma0, p.dtype), params),
+        count=jnp.zeros((), jnp.int32))
+
+
+def snes_ask(state: SNESState, key, popsize: int):
+    """Sample a mirrored population around the mean. Returns (pop pytree
+    with leading popsize axis, noise pytree)."""
+    leaves, tdef = jax.tree_util.tree_flatten(state.mean)
+    keys = jax.random.split(key, len(leaves))
+    half = popsize // 2
+    noise = [jax.random.normal(k, (half, *p.shape), p.dtype)
+             for k, p in zip(keys, leaves)]
+    noise = [jnp.concatenate([z, -z], 0) for z in noise]  # mirrored sampling
+    sig = jax.tree_util.tree_leaves(state.sigma)
+    pop = [m[None] + s[None] * z for m, s, z in zip(leaves, sig, noise)]
+    return (jax.tree_util.tree_unflatten(tdef, pop),
+            jax.tree_util.tree_unflatten(tdef, noise))
+
+
+def snes_tell(state: SNESState, noise, fitness, *, lr_mean=1.0,
+              lr_sigma=None) -> SNESState:
+    """fitness: (popsize,) lower is better. Rank-based utilities."""
+    pop = fitness.shape[0]
+    if lr_sigma is None:
+        lr_sigma = (3 + jnp.log(pop)) / (5 * jnp.sqrt(pop))
+    order = jnp.argsort(fitness)            # best first
+    ranks = jnp.zeros(pop).at[order].set(jnp.arange(pop, dtype=jnp.float32))
+    util = jnp.maximum(0.0, jnp.log(pop / 2 + 1) - jnp.log(ranks + 1))
+    util = util / jnp.sum(util) - 1.0 / pop
+
+    def upd(m, s, z):
+        u = util.reshape(-1, *([1] * m.ndim))
+        gm = jnp.sum(u * z, axis=0)
+        gs = jnp.sum(u * (z * z - 1.0), axis=0)
+        return (m + lr_mean * s * gm,
+                s * jnp.exp(0.5 * lr_sigma * gs))
+
+    leaves_m, tdef = jax.tree_util.tree_flatten(state.mean)
+    leaves_s = jax.tree_util.tree_leaves(state.sigma)
+    leaves_z = jax.tree_util.tree_leaves(noise)
+    out = [upd(m, s, z) for m, s, z in zip(leaves_m, leaves_s, leaves_z)]
+    return SNESState(
+        mean=jax.tree_util.tree_unflatten(tdef, [o[0] for o in out]),
+        sigma=jax.tree_util.tree_unflatten(tdef, [o[1] for o in out]),
+        count=state.count + 1)

@@ -1,0 +1,79 @@
+"""Generic distributed training step: grad accumulation + AdamW + metrics.
+
+Gradient accumulation is a ``lax.scan`` over microbatches (constant memory
+in the accumulation factor); the optimizer update happens once per step.
+All of it lives in ONE jit so XLA can overlap the backward pass's gradient
+all-reduces with remaining compute (the paper's compute/comm overlap,
+delegated to XLA's latency-hiding scheduler).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.optimizer import OptState, adamw_init, adamw_update
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OptState
+    step: jax.Array
+
+
+def init_train_state(params, opt_dtype=jnp.float32) -> TrainState:
+    return TrainState(params=params, opt=adamw_init(params, opt_dtype),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def make_train_step(
+    loss_fn: Callable[[Any, Any], jax.Array],
+    lr_schedule: Callable[[jax.Array], jax.Array],
+    accum: int = 1,
+    adamw_kwargs: dict | None = None,
+    grad_dtype=jnp.float32,
+):
+    """loss_fn(params, batch) -> scalar. Batch leaves must have a leading
+    global-batch dim; with accum > 1 it is split into microbatches.
+    grad_dtype=bfloat16 halves both the accumulation buffer and the
+    gradient all-reduce wire volume (error bounded by accum depth)."""
+    kw = adamw_kwargs or {}
+
+    def grad_fn(params, mb):
+        return jax.value_and_grad(loss_fn)(params, mb)
+
+    def train_step(state: TrainState, batch):
+        if accum == 1:
+            loss, grads = grad_fn(state.params, batch)
+        else:
+            mbs = jax.tree_util.tree_map(
+                lambda x: x.reshape(accum, x.shape[0] // accum,
+                                    *x.shape[1:]), batch)
+
+            def body(carry, mb):
+                tot_l, tot_g = carry
+                l, g = grad_fn(state.params, mb)
+                return (tot_l + l,
+                        jax.tree_util.tree_map(
+                            lambda a, b: a + b.astype(grad_dtype),
+                            tot_g, g)), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, grad_dtype), state.params)
+            (loss, grads), _ = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), zeros), mbs)
+            loss = loss / accum
+            grads = jax.tree_util.tree_map(lambda g: g / accum, grads)
+
+        lr = lr_schedule(state.step)
+        params, opt = adamw_update(state.params, grads, state.opt, lr, **kw)
+        metrics = {"loss": loss, "lr": lr,
+                   "grad_norm": jnp.sqrt(sum(
+                       jnp.sum(jnp.square(g.astype(jnp.float32)))
+                       for g in jax.tree_util.tree_leaves(grads)))}
+        return TrainState(params=params, opt=opt, step=state.step + 1), \
+            metrics
+
+    return train_step

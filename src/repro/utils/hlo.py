@@ -1,0 +1,203 @@
+"""HLO-text analysis: collective-communication byte accounting for rooflines.
+
+``compiled.cost_analysis()`` reports FLOPs and memory traffic but NOT
+collective bytes, so we parse the (stable)HLO / optimized-HLO text and sum the
+operand sizes of every communication op.  This feeds the collective term of
+the three-term roofline in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+# ops we account as inter-chip communication
+_COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+# e.g.  f32[128,1024]{1,0}   or  bf16[8,16,128]
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def parse_collectives(hlo_text: str) -> dict[str, dict[str, float]]:
+    """Sum output-shape bytes of every collective op in an HLO dump.
+
+    Returns {op_kind: {"count": n, "bytes": b}}.  Output-shape bytes is the
+    standard proxy for on-the-wire volume (all-gather output = full gathered
+    tensor; all-reduce ~ 2x in ring terms, handled by the roofline model).
+    """
+    out: dict[str, dict[str, float]] = defaultdict(lambda: {"count": 0, "bytes": 0})
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # match "x = f32[...] all-reduce(...)" and "x = (f32[..], ..) all-to-all(..)"
+        for kind in _COLLECTIVE_OPS:
+            # require op name to appear as the instruction, not inside metadata
+            if re.search(rf"\b{kind}(-start|-done)?\(", s):
+                if f"{kind}-done(" in s:
+                    continue  # bytes counted at the -start op
+                lhs = s.split("=", 1)[0] if "=" in s else ""
+                rhs = s.split("=", 1)[1] if "=" in s else s
+                # operand/result shapes: take shapes on the LHS (result). For
+                # tuple results, all elements are listed and summed.
+                shapes = _SHAPE_RE.findall(s.split("=", 1)[0] + "=" +
+                                           rhs.split("(", 1)[0])
+                nbytes = sum(_shape_bytes(d, dims) for d, dims in shapes)
+                if nbytes == 0:
+                    # fall back: scan full line
+                    shapes = _SHAPE_RE.findall(s)
+                    nbytes = sum(_shape_bytes(d, dims) for d, dims in shapes[:1])
+                out[kind]["count"] += 1
+                out[kind]["bytes"] += nbytes
+                break
+    return dict(out)
+
+
+def collective_bytes(hlo_text: str) -> int:
+    """Total collective bytes (sum over all op kinds)."""
+    return int(sum(v["bytes"] for v in parse_collectives(hlo_text).values()))
+
+
+# ---------------------------------------------------------------------------
+# Loop-aware traversal: multiply collective bytes inside while bodies by the
+# loop trip count (XLA reports loop bodies once; scans hide layers/microbatch
+# trips there).
+# ---------------------------------------------------------------------------
+
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%([\w\.\-]+)\s*\(")
+_CALL_RE = re.compile(
+    r"(?:calls|to_apply|body|condition|branch_computations|"
+    r"called_computations)="
+    r"[{]?%?([\w\.\-]+(?:,\s*%?[\w\.\-]+)*)[}]?")
+_TRIP_RE = re.compile(r"trip_count[\"']?\s*[:=]\s*[\"']?(\d+)")
+
+
+def _split_computations(hlo_text: str) -> dict[str, list[str]]:
+    """computation name -> its instruction lines."""
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        if not line.startswith(" ") and line.rstrip().endswith("{") \
+                and "(" in line:
+            m = _COMP_RE.match(line.strip())
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps
+
+
+def _comp_collectives(lines: list[str]) -> dict[str, dict[str, float]]:
+    return parse_collectives("\n".join(lines))
+
+
+def _find_trip_count(lines_cond: list[str]) -> int | None:
+    """Heuristic: largest small s32/u32 constant in the loop condition."""
+    cands = []
+    for ln in lines_cond:
+        if "constant(" in ln and ("s32" in ln or "u32" in ln or
+                                  "s64" in ln):
+            for m in re.finditer(r"constant\((\d+)\)", ln):
+                v = int(m.group(1))
+                if 1 <= v <= 10_000_000:
+                    cands.append(v)
+    return max(cands) if cands else None
+
+
+def collectives_with_trips(hlo_text: str) -> dict:
+    """Collective bytes with while-loop trip multiplication.
+
+    Walks the call graph from the entry computation; 'while' instructions
+    multiply their body's contribution by the trip count extracted from
+    backend_config trip_count annotations or the condition's constant
+    (fallback 1 + a 'unknown_trip' flag).
+    """
+    comps = _split_computations(hlo_text)
+    entry = None
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.search(r"ENTRY\s+%?([\w\.\-]+)", line)
+            if m:
+                entry = m.group(1)
+    if entry is None:
+        # fallback: flat parse
+        flat = parse_collectives(hlo_text)
+        return {"per_kind": flat, "unknown_trips": True}
+
+    per_kind: dict[str, dict[str, float]] = {}
+    unknown = [False]
+
+    def add(kind_map, mult):
+        for k, v in kind_map.items():
+            d = per_kind.setdefault(k, {"count": 0, "bytes": 0})
+            d["count"] += v["count"] * mult
+            d["bytes"] += v["bytes"] * mult
+
+    import functools
+
+    @functools.lru_cache(maxsize=None)
+    def comp_children(name: str):
+        """list of (child_name, multiplier) edges for a computation."""
+        out = []
+        for ln in comps.get(name, []):
+            if " while(" in ln or ln.strip().startswith("while("):
+                body = re.search(r"body=%?([\w\.\-]+)", ln)
+                cond = re.search(r"condition=%?([\w\.\-]+)", ln)
+                trips = None
+                mt = _TRIP_RE.search(ln)
+                if mt:
+                    trips = int(mt.group(1))
+                if trips is None and cond and cond.group(1) in comps:
+                    trips = _find_trip_count(comps[cond.group(1)])
+                if trips is None:
+                    trips = 1
+                    unknown[0] = True
+                if body:
+                    out.append((body.group(1), trips))
+                if cond:
+                    out.append((cond.group(1), max(trips, 1)))
+            else:
+                for m in _CALL_RE.finditer(ln):
+                    for nm in re.split(r",\s*", m.group(1)):
+                        out.append((nm.lstrip("%"), 1))
+        return out
+
+    seen_stack = set()
+
+    def walk(name: str, mult: int):
+        if name not in comps or name in seen_stack or mult <= 0:
+            return
+        seen_stack.add(name)
+        add(_comp_collectives(comps[name]), mult)
+        for child, m in comp_children(name):
+            walk(child, mult * m)
+        seen_stack.discard(name)
+
+    walk(entry, 1)
+    return {"per_kind": per_kind, "unknown_trips": unknown[0]}
+
+
+def count_op(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))

@@ -1,0 +1,169 @@
+"""Jaxpr-level cost model: loop-aware FLOP (and naive byte) accounting.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE, so any
+scan-over-layers / grad-accumulation / kv-chunk scan is undercounted by its
+trip count.  The jaxpr still has the structure (``scan`` carries an explicit
+``length``), so we walk it recursively and multiply.
+
+FLOPs: exact for dot_general/conv (2*M*N*K contractions), 1/elem for
+elementwise, output-size for reductions.  Bytes: sum of operand+result
+sizes per op - an UPPER bound on HBM traffic (XLA fusion removes
+materializations); reported as ``bytes_naive``.
+"""
+from __future__ import annotations
+
+import numpy as np
+from jax import core
+
+# elementwise-ish primitives counted at 1 flop per output element
+_ELEMENTWISE_HINT = {
+    "add", "sub", "mul", "div", "max", "min", "pow", "exp", "log", "tanh",
+    "logistic", "rsqrt", "sqrt", "cos", "sin", "erf", "neg", "abs", "sign",
+    "floor", "ceil", "round", "integer_pow", "and", "or", "not", "xor",
+    "select_n", "clamp", "nextafter", "atan2", "expm1", "log1p", "cbrt",
+    "square",
+}
+
+_FREE = {
+    "broadcast_in_dim", "reshape", "transpose", "squeeze", "convert_element_type",
+    "slice", "dynamic_slice", "dynamic_update_slice", "concatenate", "pad",
+    "gather", "scatter", "scatter-add", "iota", "copy", "rev", "bitcast_convert_type",
+    "stop_gradient", "eq", "ne", "lt", "le", "gt", "ge", "is_finite",
+    "reduce_precision", "real", "imag", "device_put", "split",
+}
+
+
+def _size(aval) -> int:
+    try:
+        return int(np.prod(aval.shape)) if aval.shape else 1
+    except Exception:
+        return 0
+
+
+def _bytes(aval) -> int:
+    try:
+        return _size(aval) * aval.dtype.itemsize
+    except Exception:
+        return 0
+
+
+def _dot_flops(eqn) -> int:
+    dnums = eqn.params["dimension_numbers"]
+    (lc, rc), (lb, rb) = dnums
+    lhs, rhs = eqn.invars[0].aval, eqn.invars[1].aval
+    batch = int(np.prod([lhs.shape[i] for i in lb])) if lb else 1
+    k = int(np.prod([lhs.shape[i] for i in lc])) if lc else 1
+    m = _size(lhs) // max(batch * k, 1)
+    n = _size(rhs) // max(batch * k, 1)
+    return 2 * batch * m * n * k
+
+
+def _conv_flops(eqn) -> int:
+    out = eqn.outvars[0].aval
+    rhs = eqn.invars[1].aval
+    # flops ~ 2 * output elements * (kernel elements / out-features)
+    kernel = _size(rhs)
+    out_feat = out.shape[eqn.params["dimension_numbers"].out_spec[1]] \
+        if hasattr(eqn.params.get("dimension_numbers"), "out_spec") else 1
+    return 2 * _size(out) * max(kernel // max(out_feat, 1), 1)
+
+
+# ops whose operands/results genuinely touch HBM even after fusion
+_ANCHOR_BYTES = {
+    "dot_general", "conv_general_dilated", "gather", "scatter",
+    "scatter-add", "scatter_add", "dynamic_slice", "dynamic_update_slice",
+    "sort", "top_k", "cumsum", "fft", "rng_bit_generator",
+}
+
+
+def _sub_jaxprs(eqn):
+    """All nested jaxprs in an eqn's params (handles Jaxpr, ClosedJaxpr,
+    and lists/tuples of either)."""
+    out = []
+    for v in eqn.params.values():
+        cands = v if isinstance(v, (list, tuple)) else [v]
+        for c in cands:
+            if hasattr(c, "eqns"):
+                out.append(c)
+            elif hasattr(c, "jaxpr") and hasattr(c.jaxpr, "eqns"):
+                out.append(c.jaxpr)
+    return out
+
+
+def count_jaxpr(jaxpr, mult: int = 1) -> dict:
+    """Recursive loop-aware cost walk. Returns a global-cost dict:
+    flops (exact dots), bytes_naive (all op in+out: upper bound),
+    bytes_anchor (dot/gather/scatter-class ops only: fusion-aware)."""
+    flops = 0
+    nbytes = 0
+    abytes = 0
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        submult = mult
+        if prim == "scan":
+            submult = mult * int(eqn.params["length"])
+        elif prim == "shard_map":
+            # shard_map inner jaxprs carry LOCAL (per-device) shapes; scale
+            # by the manual axes so the count stays a GLOBAL cost like the
+            # GSPMD (global-shape) path
+            mesh = eqn.params.get("mesh")
+            manual = eqn.params.get("manual_axes", ())
+            if mesh is not None:
+                n = 1
+                for ax in (manual or mesh.shape.keys()):
+                    n *= int(mesh.shape.get(ax, 1))
+                submult = mult * max(n, 1)
+        elif prim == "cond":
+            # worst-case branch
+            best = {"flops": 0, "bytes_naive": 0, "bytes_anchor": 0}
+            for s in _sub_jaxprs(eqn):
+                c = count_jaxpr(s, mult)
+                if c["flops"] >= best["flops"]:
+                    best = c
+            flops += best["flops"]
+            nbytes += best["bytes_naive"]
+            abytes += best["bytes_anchor"]
+            continue
+
+        subs = _sub_jaxprs(eqn)
+        if subs:
+            for s in subs:
+                c = count_jaxpr(s, submult)
+                flops += c["flops"]
+                nbytes += c["bytes_naive"]
+                abytes += c["bytes_anchor"]
+            continue
+
+        out_sz = sum(_size(v.aval) for v in eqn.outvars)
+        io_b = (sum(_bytes(v.aval) for v in eqn.invars
+                    if hasattr(v, "aval"))
+                + sum(_bytes(v.aval) for v in eqn.outvars))
+        nbytes += mult * io_b
+        if prim in _ANCHOR_BYTES:
+            abytes += mult * io_b
+        if prim == "dot_general":
+            flops += mult * _dot_flops(eqn)
+        elif prim == "conv_general_dilated":
+            flops += mult * _conv_flops(eqn)
+        elif prim in _FREE:
+            pass
+        elif prim.startswith("reduce_") or prim == "reduce":
+            flops += mult * sum(_size(v.aval) for v in eqn.invars
+                                if hasattr(v, "aval"))
+        elif prim in ("cumsum", "cumlogsumexp", "cummax", "cumprod"):
+            flops += mult * out_sz
+        else:
+            # default: elementwise-ish
+            flops += mult * out_sz
+    return {"flops": int(flops), "bytes_naive": int(nbytes),
+            "bytes_anchor": int(abytes)}
+
+
+def lowered_cost(traced_or_jaxpr) -> dict:
+    """Cost of a jax.jit(...).trace(...) jaxpr or a ClosedJaxpr."""
+    j = traced_or_jaxpr
+    if hasattr(j, "jaxpr"):
+        j = j.jaxpr
+    if hasattr(j, "jaxpr"):   # ClosedJaxpr.jaxpr
+        j = j.jaxpr
+    return count_jaxpr(j)

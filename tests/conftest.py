@@ -1,0 +1,29 @@
+"""Shared fixtures. NOTE: x64 and forced device counts are NOT set here -
+tests needing them run subprocesses (see test_domain.py, test_precision.py)
+so the in-process suite sees the default 1-device f32 environment."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def b20_state():
+    from repro.md.lattice import b20_fege
+    from repro.md.state import init_state
+    lat = b20_fege()
+    st = init_state(lat, (2, 2, 2), temperature=300.0,
+                    key=jax.random.PRNGKey(1))
+    return lat, st
+
+
+@pytest.fixture(scope="session")
+def small_spec():
+    from repro.core.descriptor import NEPSpinSpec
+    return NEPSpinSpec(l_max=2, n_ang=2, n_rad=4, n_spin=2, basis_size=6)
+
+
+@pytest.fixture(scope="session")
+def small_params(small_spec):
+    from repro.core.potential import init_params
+    return init_params(small_spec, jax.random.PRNGKey(0), dtype=jnp.float32)

@@ -1,0 +1,141 @@
+"""Structure preservation: energy conservation, |S| norm, thermostats."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hamiltonian import HeisenbergDMIModel
+from repro.md.integrator import IntegratorConfig
+from repro.md.lattice import simple_cubic
+from repro.md.simulate import Simulation
+from repro.md.state import init_state, kinetic_energy, temperature_of
+from repro.utils import units
+
+
+def _sim(cfg, n=4, temperature=150.0, key=0, d0=0.004):
+    lat = simple_cubic()
+    st = init_state(lat, (n, n, n), temperature=temperature,
+                    spin_init="random", key=jax.random.PRNGKey(key))
+    ham = HeisenbergDMIModel(d0=d0, ka=0.001)
+    return lat, Simulation(
+        potential=ham, cfg=cfg, state=st, masses=jnp.asarray(lat.masses),
+        magnetic=jnp.asarray(lat.moments) > 0, cutoff=5.0, capacity=8)
+
+
+def _total_e(lat, sim):
+    return sim.energy + float(kinetic_energy(sim.state,
+                                             jnp.asarray(lat.masses)))
+
+
+def test_nve_energy_conservation():
+    lat, sim = _sim(IntegratorConfig(dt=2e-3))
+    e0 = _total_e(lat, sim)
+    sim.run(150, jax.random.PRNGKey(0), chunk=50)
+    drift = abs(_total_e(lat, sim) - e0) / sim.state.n_atoms
+    assert drift < 5e-5, f"energy drift {drift} eV/atom"
+
+
+def test_spin_norm_exactly_conserved():
+    lat, sim = _sim(IntegratorConfig(dt=2e-3))
+    sim.run(100, jax.random.PRNGKey(0), chunk=50)
+    dev = float(jnp.abs(jnp.linalg.norm(sim.state.spin, axis=-1) - 1).max())
+    # f32 roundoff floor; exact (1e-15) conservation verified in f64 by
+    # tests/test_precision.py
+    assert dev < 1e-5
+
+
+def test_energy_drift_scales_as_dt2():
+    """Halving dt must cut the energy error by ~4x (2nd-order scheme)."""
+    drifts = []
+    # dts large enough that truncation dominates the f32 noise floor but
+    # below the ~10 fs Morse phonon stability limit
+    for dt in (8e-3, 4e-3):
+        lat, sim = _sim(IntegratorConfig(dt=dt), key=5, d0=0.008)
+        e0 = _total_e(lat, sim)
+        sim.run(int(0.8 / dt), jax.random.PRNGKey(1), chunk=50)
+        drifts.append(abs(_total_e(lat, sim) - e0))
+    ratio = drifts[0] / max(drifts[1], 1e-12)
+    # exact 4x checked in f64 (tests/test_precision.py); f32 noise floor
+    # compresses the ratio here
+    assert ratio > 1.8, f"dt-scaling ratio {ratio} (expected ~4)"
+
+
+def test_midpoint_selfconsistency_improves_conservation():
+    base = []
+    for mid in (False, True):
+        lat, sim = _sim(IntegratorConfig(dt=8e-3, midpoint=mid,
+                                         midpoint_iters=3), key=2,
+                        d0=0.008)
+        e0 = _total_e(lat, sim)
+        sim.run(60, jax.random.PRNGKey(2), chunk=30)
+        base.append(abs(_total_e(lat, sim) - e0))
+    assert base[1] <= base[0] * 1.1, \
+        f"midpoint {base[1]} vs explicit {base[0]}"
+
+
+def test_langevin_thermostat_equilibrates():
+    cfg = IntegratorConfig(dt=2e-3, temperature=120.0, lattice_gamma=5.0,
+                           spin_alpha=0.1)
+    lat, sim = _sim(cfg, temperature=240.0, key=3)
+    sim.run(400, jax.random.PRNGKey(3), chunk=100)
+    t = float(temperature_of(sim.state, jnp.asarray(lat.masses)))
+    assert 70.0 < t < 180.0, f"lattice T {t} K (target 120)"
+
+
+def test_single_spin_boltzmann():
+    """One spin in a field: <cos theta> must match the Langevin function
+    L(x) = coth x - 1/x - validates the sLLG fluctuation-dissipation
+    discretization."""
+    from repro.md.integrator import make_step, ForceField
+    t_k = 50.0
+    b_z = 10.0  # Tesla
+    x = 1.16 * units.MU_B * b_z / (units.KB * t_k)
+    expect = 1.0 / np.tanh(x) - 1.0 / x
+
+    cfg = IntegratorConfig(dt=2e-3, temperature=t_k, spin_alpha=0.5,
+                           moment=1.16)
+    field_e = 1.16 * units.MU_B * b_z  # eV per unit spin
+
+    def evaluate(pos, spin):
+        return ForceField(energy=jnp.zeros(()),
+                          force=jnp.zeros_like(pos),
+                          field=jnp.tile(jnp.asarray([[0.0, 0.0, field_e]]),
+                                         (pos.shape[0], 1)))
+
+    step = make_step(evaluate, cfg, jnp.asarray([55.0]),
+                     jnp.asarray([True]))
+    n = 256  # independent spins sampled in parallel
+    from repro.md.state import SpinLatticeState
+    state = SpinLatticeState(
+        pos=jnp.zeros((n, 3)), vel=jnp.zeros((n, 3)),
+        spin=jnp.tile(jnp.asarray([[1.0, 0.0, 0.0]]), (n, 1)),
+        types=jnp.zeros((n,), jnp.int32), box=jnp.ones((3,)) * 100,
+        step=jnp.asarray(0))
+    ff = evaluate(state.pos, state.spin)
+
+    @jax.jit
+    def run(state, ff, key):
+        def body(c, k):
+            s, f = c
+            s, f = step(s, f, k)
+            return (s, f), s.spin[:, 2]
+        keys = jax.random.split(key, 3000)
+        (state, ff), sz = jax.lax.scan(body, (state, ff), keys)
+        return state, sz
+
+    _, sz = run(state, ff, jax.random.PRNGKey(0))
+    got = float(jnp.mean(sz[1000:]))  # discard burn-in
+    assert abs(got - expect) < 0.05, f"<cos> {got} vs Langevin {expect}"
+
+
+def test_frozen_lattice_spin_dynamics():
+    """Frozen-lattice mode (the paper's Sec.-4 baseline class): positions
+    and velocities must not move while spins still precess."""
+    lat, sim = _sim(IntegratorConfig(dt=2e-3, frozen_lattice=True), key=7)
+    p0 = np.asarray(sim.state.pos).copy()
+    v0 = np.asarray(sim.state.vel).copy()
+    s0 = np.asarray(sim.state.spin).copy()
+    sim.run(50, jax.random.PRNGKey(7), chunk=25)
+    np.testing.assert_array_equal(np.asarray(sim.state.pos), p0)
+    np.testing.assert_array_equal(np.asarray(sim.state.vel), v0)
+    assert np.abs(np.asarray(sim.state.spin) - s0).max() > 1e-3

@@ -1,0 +1,58 @@
+"""Neighbor-table construction correctness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.md.lattice import b20_fege, simple_cubic
+from repro.md.neighbor import (cell_neighbor_table, dense_neighbor_table,
+                               needs_rebuild, bin_atoms)
+from repro.md.state import init_state
+
+
+def _pairs(table, n):
+    s = set()
+    idx = np.asarray(table.idx)
+    mask = np.asarray(table.mask)
+    for i in range(n):
+        for m in range(idx.shape[1]):
+            if mask[i, m]:
+                s.add((i, int(idx[i, m])))
+    return s
+
+
+def test_dense_vs_cell_equivalence():
+    lat = b20_fege()
+    st = init_state(lat, (4, 4, 4), temperature=300.0,
+                    key=jax.random.PRNGKey(0))
+    dense = dense_neighbor_table(st.pos, st.box, 4.0, 96, skin=0.3)
+    cell = cell_neighbor_table(st.pos, st.box, 4.0, 96, cell_capacity=24,
+                               skin=0.3)
+    assert _pairs(dense, st.n_atoms) == _pairs(cell, st.n_atoms)
+
+
+def test_table_symmetric():
+    """j in nbr(i) <=> i in nbr(j) (required by the pair-symmetric force
+    kernel)."""
+    lat = simple_cubic()
+    st = init_state(lat, (4, 4, 4), key=jax.random.PRNGKey(1))
+    tab = dense_neighbor_table(st.pos, st.box, 5.0, 12)
+    pairs = _pairs(tab, st.n_atoms)
+    assert all((j, i) in pairs for (i, j) in pairs)
+
+
+def test_needs_rebuild_half_skin():
+    lat = simple_cubic()
+    st = init_state(lat, (3, 3, 3), key=jax.random.PRNGKey(2))
+    tab = dense_neighbor_table(st.pos, st.box, 5.0, 12, skin=0.5)
+    assert not bool(needs_rebuild(tab, st.pos, st.box, 0.5))
+    moved = st.pos.at[0, 0].add(0.3)
+    assert bool(needs_rebuild(tab, moved, st.box, 0.5))
+
+
+def test_bin_atoms_no_overflow_and_complete():
+    lat = b20_fege()
+    st = init_state(lat, (3, 3, 3), key=jax.random.PRNGKey(3))
+    grid, mask, overflow = bin_atoms(st.pos, st.box, (3, 3, 3), 12)
+    assert not bool(overflow)
+    ids = np.asarray(grid)[np.asarray(mask)]
+    assert sorted(ids.tolist()) == list(range(st.n_atoms))

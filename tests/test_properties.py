@@ -1,0 +1,132 @@
+"""Hypothesis property-based tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.md.integrator import _rodrigues
+from repro.core.descriptor import cutoff_fn
+from repro.models.common import chunked_xent
+from repro.parallel.compression import Int8ErrorFeedback
+from repro.utils.hlo import parse_collectives
+
+_finite = st.floats(-10.0, 10.0, allow_nan=False, allow_infinity=False)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(_finite, min_size=3, max_size=3),
+       st.lists(_finite, min_size=3, max_size=3),
+       st.floats(1e-4, 0.5))
+def test_rodrigues_preserves_norm(s, omega, dt):
+    s = jnp.asarray(s)
+    if float(jnp.linalg.norm(s)) < 1e-3:
+        return
+    out = _rodrigues(s[None], jnp.asarray(omega)[None], dt)[0]
+    np.testing.assert_allclose(float(jnp.linalg.norm(out)),
+                               float(jnp.linalg.norm(s)), rtol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.floats(0.0, 4.999), st.floats(0.1, 1.0))
+def test_cutoff_bounded_and_monotone_tail(r, frac):
+    rc = 5.0
+    v = float(cutoff_fn(jnp.asarray(r), rc))
+    assert 0.0 <= v <= 1.0
+    v2 = float(cutoff_fn(jnp.asarray(r + frac * (rc - r)), rc))
+    assert v2 <= v + 1e-9  # monotonically decreasing
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 5), st.integers(2, 50))
+def test_chunked_xent_matches_direct(seed, t):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    d, v = 8, 17
+    h = jax.random.normal(k1, (t, d))
+    w = jax.random.normal(k2, (d, v)) * 0.3
+    tgt = jax.random.randint(k3, (t,), 0, v)
+    mask = jnp.ones((t,))
+    got = float(chunked_xent(lambda hb: hb @ w, h, tgt, mask, chunk=7))
+    logits = h @ w
+    direct = float(jnp.mean(
+        jax.nn.logsumexp(logits, -1)
+        - jnp.take_along_axis(logits, tgt[:, None], 1)[:, 0]))
+    assert abs(got - direct) < 1e-4
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 100))
+def test_int8_error_feedback_unbiased_over_time(seed):
+    """Sum of compressed gradients tracks the sum of true gradients (error
+    feedback guarantee) to within one quantization step."""
+    rng = np.random.default_rng(seed)
+    comp = Int8ErrorFeedback(block=32)
+    g_shape = (64,)
+    carry = comp.init(jnp.zeros(g_shape))
+    total_true = np.zeros(g_shape)
+    total_sent = np.zeros(g_shape)
+    for _ in range(20):
+        g = jnp.asarray(rng.normal(size=g_shape), jnp.float32)
+        sent, carry = comp.compress(g, carry)
+        total_true += np.asarray(g)
+        total_sent += np.asarray(sent)
+    resid = np.abs(total_true - total_sent).max()
+    assert resid < 0.2, f"error-feedback residual {resid}"
+
+
+def test_hlo_parser_on_synthetic_text():
+    hlo = """
+ENTRY %main (p0: f32[8,16]) -> f32[8,16] {
+  %ar = f32[8,16] all-reduce(%p0), replica_groups={}
+  %ag = f32[16,16] all-gather(%ar), dimensions={0}
+  ROOT %cp = f32[8,16] collective-permute(%ar), source_target_pairs={{0,1}}
+}
+"""
+    c = parse_collectives(hlo)
+    assert c["all-reduce"]["bytes"] == 8 * 16 * 4
+    assert c["all-gather"]["bytes"] == 16 * 16 * 4
+    assert c["collective-permute"]["bytes"] == 8 * 16 * 4
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 6), st.integers(2, 6), st.integers(1, 4))
+def test_moe_dispatch_conserves_tokens(e, k_, seed):
+    """Every kept (token, expert) slot routes the token exactly once and
+    combine weights sum to <= 1 (dropped tokens lose weight)."""
+    from repro.models.config import ArchConfig, MoECfg
+    from repro.models.moe import apply_moe, init_moe
+    if k_ > e:
+        return
+    cfg = ArchConfig(name="t", family="moe", n_layers=1, d_model=16,
+                     vocab=32, act="gelu", dtype="float32",
+                     moe=MoECfg(n_experts=e, top_k=k_, n_shared=0,
+                                d_ff_expert=8, router="softmax",
+                                capacity_factor=2.0))
+    p = init_moe(cfg, jax.random.PRNGKey(seed))
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (2, 8, 16))
+    y, aux = apply_moe(cfg, p, x)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y)).all()
+    assert float(aux) >= 0.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 1000), st.integers(20, 60), st.floats(3.0, 5.0))
+def test_neighbor_tables_agree_on_random_configs(seed, n, cutoff):
+    """Dense O(N^2) and linked-cell constructions must produce identical
+    pair sets for arbitrary random configurations."""
+    from repro.md.neighbor import cell_neighbor_table, dense_neighbor_table
+    rng = np.random.default_rng(seed)
+    box_l = 16.0
+    pos = jnp.asarray(rng.uniform(0, box_l, size=(n, 3)), jnp.float32)
+    box = jnp.full((3,), box_l)
+    dense = dense_neighbor_table(pos, box, cutoff, n, skin=0.2)
+    cell = cell_neighbor_table(pos, box, cutoff, n, cell_capacity=n,
+                               skin=0.2)
+
+    def pairs(t):
+        idx, mask = np.asarray(t.idx), np.asarray(t.mask)
+        return {(i, int(idx[i, m])) for i in range(n)
+                for m in range(idx.shape[1]) if mask[i, m]}
+
+    assert pairs(dense) == pairs(cell)

@@ -1,0 +1,64 @@
+"""Sharding-rule resolution tests (no devices needed - pure spec logic)."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import (LOGICAL, param_pspec, resolve_spec)
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESH1 = FakeMesh({"data": 16, "model": 16})
+MESH2 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_batch_axes_resolution():
+    spec = resolve_spec(MESH2, ("batch", None, None), (256, 4096, 1024))
+    assert spec == P(("pod", "data"), None, None)
+
+
+def test_nondividing_axis_dropped():
+    # kv_heads = 4 under model=16 -> replicated
+    spec = resolve_spec(MESH1, ("embed", "kv_heads", None), (1024, 4, 128))
+    assert spec == P(None, None, None)
+    # kv_heads = 32 -> sharded
+    spec = resolve_spec(MESH1, ("embed", "kv_heads", None), (1024, 32, 128))
+    assert spec == P(None, "model", None)
+
+
+def test_experts_2d_vs_1d():
+    # 256 experts cover data x model -> 2-D sharding
+    spec = resolve_spec(MESH1, ("experts", None, None), (256, 7168, 2048))
+    assert spec == P(("data", "model"), None, None)
+    # 64 experts -> prefix fallback to model only
+    spec = resolve_spec(MESH1, ("experts", None, None), (64, 2048, 1408))
+    assert spec == P("model", None, None)
+
+
+def test_param_rules_match_paths():
+    assert param_pspec(("g0", "attn", "wq"), 4) == \
+        ("layers", "embed", "heads", None)
+    assert param_pspec(("g1", "moe", "wi"), 4) == \
+        ("layers", "experts", "embed", None)
+    assert param_pspec(("embed",), 2) == ("vocab", "embed")
+    assert param_pspec(("g0", "ssm", "in_proj"), 3) == \
+        ("layers", "embed", "ffn")
+    # unknown -> replicated
+    assert param_pspec(("whatever",), 3) == (None, None, None)
+
+
+def test_batch_smaller_than_axes_replicates():
+    spec = resolve_spec(MESH2, ("batch",), (1,))   # long_500k B=1
+    assert spec == P(None)
+
+
+def test_vocab_padding_multiple():
+    from repro.models.transformer import padded_vocab
+    assert padded_vocab(50280) % 256 == 0
+    assert padded_vocab(50280) >= 50280
+    assert padded_vocab(152064) == 152064

@@ -1,0 +1,83 @@
+"""Training-substrate tests: loss decreases, accumulation equivalence,
+optimizer correctness, schedules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.data.tokens import synthetic_batches
+from repro.models import lm
+from repro.train.optimizer import (adamw_init, adamw_update,
+                                   cosine_schedule, snes_init, snes_ask,
+                                   snes_tell)
+from repro.train.train_step import init_train_state, make_train_step
+
+
+def test_tiny_lm_loss_decreases():
+    cfg = configs.get_smoke("qwen2-7b")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0), tp=1)
+    state = init_train_state(params)
+    loss_fn = lm.make_loss_fn(cfg, remat=False, kv_chunk=16, xent_chunk=64)
+    step = jax.jit(make_train_step(
+        loss_fn, lambda s: cosine_schedule(s, peak_lr=1e-2, warmup=5,
+                                           total=60), accum=1))
+    gen = synthetic_batches(cfg, 4, 32, seed=0)
+    losses = []
+    for i in range(45):
+        state, m = step(state, next(gen))
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-10:]) < np.mean(losses[:5]) - 0.3, \
+        f"no learning: {losses[:3]} -> {losses[-3:]}"
+
+
+def test_grad_accumulation_equivalence():
+    """accum=4 over a batch must match accum=1 on the same batch."""
+    cfg = configs.get_smoke("starcoder2-3b")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0), tp=1)
+    loss_fn = lm.make_loss_fn(cfg, remat=False, kv_chunk=16, xent_chunk=32)
+    gen = synthetic_batches(cfg, 8, 16, seed=1)
+    batch = next(gen)
+
+    outs = []
+    for accum in (1, 4):
+        state = init_train_state(params)
+        step = jax.jit(make_train_step(loss_fn, lambda s: 1e-3,
+                                       accum=accum))
+        new_state, m = step(state, batch)
+        outs.append((float(m["loss"]),
+                     jax.tree_util.tree_leaves(new_state.params)))
+    # microbatch losses average over different token counts equally here
+    assert abs(outs[0][0] - outs[1][0]) < 2e-3
+    for a, b in zip(outs[0][1], outs[1][1]):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-4)
+
+
+def test_adamw_reduces_quadratic():
+    w = jnp.asarray([5.0, -3.0, 2.0])
+    opt = adamw_init(w)
+    for _ in range(300):
+        g = 2 * w
+        w, opt = adamw_update(w, g, opt, 0.05, weight_decay=0.0)
+    assert float(jnp.abs(w).max()) < 0.2
+
+
+def test_snes_minimizes_sphere():
+    w = jnp.asarray(np.random.default_rng(0).normal(size=(8,)) * 2)
+    state = snes_init(w, sigma0=0.3)
+    key = jax.random.PRNGKey(0)
+    for _ in range(150):
+        key, k = jax.random.split(key)
+        pop, noise = snes_ask(state, k, 16)
+        fit = jax.vmap(lambda p: jnp.sum(p ** 2))(pop)
+        state = snes_tell(state, noise, fit)
+    assert float(jnp.sum(state.mean ** 2)) < 0.1
+
+
+def test_cosine_schedule_shape():
+    lr0 = float(cosine_schedule(jnp.asarray(0), peak_lr=1e-3, warmup=10,
+                                total=100))
+    lrp = float(cosine_schedule(jnp.asarray(10), peak_lr=1e-3, warmup=10,
+                                total=100))
+    lre = float(cosine_schedule(jnp.asarray(99), peak_lr=1e-3, warmup=10,
+                                total=100))
+    assert lr0 < lrp and lre < 0.1 * lrp
