@@ -5,6 +5,7 @@
   scaling.py     - Fig. 7/8 / Table V  weak & strong scaling projections
   accuracy.py    - Table IV  NEP-SPIN vs baseline accuracy
   kernels.py     - kernel-level microbenchmarks (fused vs reference)
+  ensemble.py    - Fig. 9 scenario engine: vmapped replicas vs sequential
 
 Prints ``name,us_per_call,derived`` CSV rows.
 """
@@ -15,10 +16,11 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import ablation, accuracy, kernels, scaling, throughput
+    from benchmarks import (ablation, accuracy, ensemble, kernels, scaling,
+                            throughput)
     print("name,us_per_call,derived")
     failures = []
-    for mod in (kernels, ablation, throughput, scaling, accuracy):
+    for mod in (kernels, ablation, throughput, scaling, accuracy, ensemble):
         try:
             mod.main()
         except Exception as e:

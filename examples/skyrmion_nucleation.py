@@ -1,15 +1,20 @@
 """End-to-end driver: real-temperature helix -> skyrmion transformation
-(paper Fig. 9 protocol at reduced scale).
+(paper Fig. 9 field-cooling protocol at reduced scale), run as an ENSEMBLE.
 
-  PYTHONPATH=src python examples/skyrmion_nucleation.py [--steps 3000]
+  PYTHONPATH=src python examples/skyrmion_nucleation.py [--steps 2000]
+      [--replicas 4] [--cold]
 
 A thin FeGe-like film (large D/J so textures fit the box) is initialized
-as a helix and driven at finite temperature under a perpendicular field.
-The run demonstrates the paper's central scientific claim at reduced
-scale: WITH thermal activation of the coupled spin-lattice system the
-helix breaks up and nonzero topological charge (skyrmion seeds) appears;
-withOUT thermal activation (--cold) the helix stays intact under the same
-field. Topological charge Q is tracked throughout.
+as a helix and driven through the paper's field-cooling protocol: hold hot
+under a perpendicular field, ramp the temperature down, hold cold.  All
+replicas advance together through the vmapped ensemble engine - one
+compiled scan per chunk serves every replica, with the (T, B) schedule
+evaluated inside the scan - and differ only in their thermostat RNG
+streams, so the run resolves nucleation *statistics*, not one trajectory:
+WITH thermal activation the helix breaks up and nonzero topological charge
+(skyrmion seeds) appears in most replicas; withOUT it (--cold) the helix
+stays intact in every replica under the same field.  Per-chunk topological
+charge Q is streamed for each replica throughout.
 """
 import argparse
 import sys
@@ -21,55 +26,61 @@ import numpy as np
 
 sys.path.insert(0, "src")
 
+from repro.configs.fege_spinlattice import nucleation_ensemble
 from repro.core.hamiltonian import HeisenbergDMIModel
-from repro.md.analysis import (magnetization, spin_structure_factor,
-                               topological_charge)
+from repro.ensemble import protocol
+from repro.ensemble.replica import ReplicaEnsemble, replicate
 from repro.md.integrator import IntegratorConfig
 from repro.md.lattice import simple_cubic
-from repro.md.simulate import Simulation
 from repro.md.state import init_state
 
 
-def run(thermal: bool, steps: int, field: float, seed: int = 0):
+def run(thermal: bool, steps: int, n_replicas: int, field: float,
+        seed: int = 0):
+    import dataclasses
+    ecfg = dataclasses.replace(nucleation_ensemble(), n_steps=steps,
+                               b_field=field)
     lat = simple_cubic()
     # strong DMI -> 8-site textures fit a 32-site film
     d_over_j = float(np.tan(2 * np.pi / 8))
     ham = HeisenbergDMIModel(d0=0.0166 * d_over_j, gamma_j=0.0,
                              gamma_d=0.0, ka=0.0)
-    n = (32, 32, 1)
-    st = init_state(lat, n, temperature=50.0 if thermal else 0.0,
-                    spin_init="helix_x", helix_pitch=8 * lat.a,
-                    key=jax.random.PRNGKey(seed))
+    st = init_state(lat, ecfg.n_cells, spin_init="helix_x",
+                    helix_pitch=8 * lat.a, key=jax.random.PRNGKey(seed))
     cfg = IntegratorConfig(
-        dt=4e-3,
-        temperature=95.0 if thermal else 0.0,   # ~0.5 Tc of this J
-        lattice_gamma=2.0 if thermal else 0.0,
-        spin_alpha=0.1 if thermal else 0.0)
-    sim = Simulation(potential=ham, cfg=cfg, state=st,
-                     masses=jnp.asarray(lat.masses),
-                     magnetic=jnp.asarray(lat.moments) > 0,
-                     cutoff=5.0, capacity=8,
-                     field=jnp.asarray([0.0, 0.0, field]))
+        dt=ecfg.dt,
+        lattice_gamma=ecfg.lattice_gamma if thermal else 0.0,
+        spin_alpha=ecfg.spin_alpha if thermal else 0.0)
+
+    # Fig. 9 field cooling: hold at ~0.5 Tc in field, cool, hold cold.
+    temp, bfield = ecfg.schedules()
+    if not thermal:
+        temp = protocol.constant(0.0)
+
+    ens = ReplicaEnsemble(
+        potential=ham, cfg=cfg, states=replicate(st, n_replicas),
+        masses=jnp.asarray(lat.masses),
+        magnetic=jnp.asarray(lat.moments) > 0,
+        cutoff=5.0, capacity=8, diag_grid=(32, 32))
+
     label = "thermal" if thermal else "cold"
-    print(f"\n=== {label}: T={cfg.temperature} K, B={field} T, "
-          f"{st.n_atoms} atoms ===")
+    print(f"\n=== {label}: T {ecfg.t_hot if thermal else 0:.0f}"
+          f" -> {ecfg.t_cold if thermal else 0:.0f} K, B = {field} T, "
+          f"{n_replicas} replicas x {st.n_atoms} atoms ===")
     t0 = time.time()
-    qs = []
-    for chunk in range(steps // 200):
-        sim.run(200, jax.random.fold_in(jax.random.PRNGKey(seed), chunk),
-                chunk=50)
-        q = float(topological_charge(sim.state.pos, sim.state.spin,
-                                     sim.state.box, grid=(32, 32)))
-        mz = float(magnetization(sim.state.spin)[2])
-        qs.append(q)
-        print(f"  step {(chunk+1)*200:5d}  Q = {q:+7.2f}  <Sz> = {mz:+.3f}"
-              f"  ({time.time()-t0:.0f}s)")
-    return qs
+    trace = ens.run(steps, jax.random.PRNGKey(seed), temperature=temp,
+                    field=bfield, chunk=ecfg.chunk)
+    for c in range(trace.charge.shape[0]):
+        qs = " ".join(f"{q:+6.2f}" for q in trace.charge[c])
+        print(f"  t={trace.time[c]:6.2f} ps  T={trace.temperature[c, 0]:5.1f} K"
+              f"  Q per replica: [{qs}]  ({time.time()-t0:.0f}s)")
+    return trace
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=2000)
+    ap.add_argument("--replicas", type=int, default=4)
     ap.add_argument("--field", type=float, default=25.0,
                     help="Tesla (reduced-scale analogue of 0.1-0.2 T)")
     ap.add_argument("--cold", action="store_true",
@@ -77,14 +88,21 @@ def main():
     args = ap.parse_args()
 
     if not args.cold:
-        q_thermal = run(True, args.steps, args.field)
-    q_cold = run(False, args.steps, args.field)
+        tr_thermal = run(True, args.steps, args.replicas, args.field)
+    # the cold control is deterministic (no thermostat noise), so replicas
+    # would be bit-identical - one is enough
+    tr_cold = run(False, args.steps, 1, args.field)
 
-    print("\n=== conclusion ===")
-    print(f"cold    |Q|_max = {max(abs(q) for q in q_cold):.2f} "
+    print("\n=== conclusion (ensemble statistics, settled half of run) ===")
+    half = tr_cold.charge.shape[0] // 2
+    q_cold = np.abs(tr_cold.charge[half:]).max(axis=0)  # per replica |Q|_max
+    print(f"cold    |Q|_max per replica = {np.round(q_cold, 2)} "
           "(helix intact: field alone cannot break it)")
     if not args.cold:
-        print(f"thermal |Q|_max = {max(abs(q) for q in q_thermal):.2f} "
+        q_th = np.abs(tr_thermal.charge[half:]).max(axis=0)
+        frac = float((q_th > 0.5).mean())
+        print(f"thermal |Q|_max per replica = {np.round(q_th, 2)}")
+        print(f"nucleation fraction = {frac:.2f} of {args.replicas} replicas "
               "(thermal fluctuations of the coupled spin-lattice system "
               "activate helix rupture / topological seeds)")
 

@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# Tier-1 verification (see ROADMAP.md). Usage: scripts/ci.sh [pytest args]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+# install prerequisites only when missing (the CI image bakes them in)
+python - <<'EOF' || pip install -r requirements.txt
+import importlib.util as u, sys
+sys.exit(0 if all(u.find_spec(m) for m in
+                  ("jax", "numpy", "pytest", "hypothesis")) else 1)
+EOF
+
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

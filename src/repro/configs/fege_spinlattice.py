@@ -51,3 +51,61 @@ def smoke_config() -> MDConfig:
         cell_size=5.5,
         dtype="float64",
     )
+
+
+# ---------------------------------------------------------------------------
+# Ensemble presets (repro.ensemble): replica counts, protocols, and (T, B)
+# grids for the paper's scenario workloads.  Reduced-scale parameters use
+# the strong-DMI effective lattice of examples/skyrmion_nucleation.py so
+# textures fit a laptop-sized box; production parameters target FeGe proper
+# (Tc ~ 278 K, 0.1-0.2 T, Fig. 9).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EnsembleConfig:
+    name: str
+    n_replicas: int
+    n_cells: tuple[int, int, int]     # supercell of the effective lattice
+    n_steps: int
+    chunk: int                        # steps per compiled scan
+    dt: float                         # ps
+    spin_alpha: float
+    lattice_gamma: float              # 1/ps
+    # field-cooling protocol (Fig. 9): hold hot -> ramp down -> hold cold
+    t_hot: float                      # K
+    t_cold: float                     # K
+    b_field: float                    # Tesla, along +z
+    hold_frac: float = 0.25           # fraction of the run spent hot
+    ramp_frac: float = 0.5            # fraction spent ramping down
+    # (T, B) sweep grid for repro.launch.sweep
+    sweep_temperatures: tuple[float, ...] = ()
+    sweep_fields: tuple[float, ...] = ()
+
+    def schedules(self):
+        """(temperature, field) Schedules for the field-cooling protocol."""
+        from repro.ensemble import protocol
+        total = self.n_steps * self.dt
+        return protocol.field_cooling(
+            self.t_hot, self.t_cold, self.b_field,
+            t_hold=self.hold_frac * total, t_ramp=self.ramp_frac * total,
+            t_final=max(0.0, 1.0 - self.hold_frac - self.ramp_frac) * total)
+
+
+def nucleation_ensemble() -> EnsembleConfig:
+    """Fig.-9 field cooling at reduced scale: 8 replicas of a thin film."""
+    return EnsembleConfig(
+        name="fege-nucleation-ensemble", n_replicas=8, n_cells=(32, 32, 1),
+        n_steps=2000, chunk=100, dt=4e-3, spin_alpha=0.1, lattice_gamma=2.0,
+        t_hot=95.0, t_cold=20.0, b_field=25.0,
+        sweep_temperatures=(40.0, 95.0, 150.0),
+        sweep_fields=(0.0, 15.0, 30.0))
+
+
+def nucleation_ensemble_smoke() -> EnsembleConfig:
+    """CI-sized: 4 replicas, a few chunks, same protocol shape."""
+    return EnsembleConfig(
+        name="fege-nucleation-ensemble-smoke", n_replicas=4,
+        n_cells=(16, 16, 1), n_steps=300, chunk=50, dt=4e-3,
+        spin_alpha=0.1, lattice_gamma=2.0,
+        t_hot=95.0, t_cold=20.0, b_field=25.0,
+        sweep_temperatures=(40.0, 95.0), sweep_fields=(0.0, 25.0))

@@ -1,0 +1,36 @@
+"""Ensemble engine: batched replicas, (T, B) protocols, replica exchange.
+
+The paper's flagship science result (Figs. 4 and 9) - the thermally driven
+helix -> skyrmion transformation under field cooling - is a *scenario*, not
+a single trajectory: nucleation statistics only exist over many stochastic
+replicas swept through temperature/field schedules.  This subsystem layers
+three pieces on top of the runtime-(T, B) integrator (repro.md.integrator):
+
+  protocol.py  composable piecewise-linear schedules for temperature and
+               external field (ramps, quenches, holds, Fig.-9 field
+               cooling), evaluated inside the jitted scan - one compiled
+               program per protocol chunk.
+  replica.py   the vmapped multi-replica engine: SpinLatticeState batched
+               over a leading replica axis, one shared neighbor table, one
+               compiled step for every replica, per-replica counter-derived
+               RNG streams, streaming per-chunk diagnostics
+               (EnsembleTrace), optional replica-axis device sharding.
+  exchange.py  parallel-tempering replica exchange over a temperature
+               ladder (Metropolis swap criterion, even/odd neighbor
+               sweeps, velocity rescaling on accepted swaps).
+  sweep.py     the (T, B) phase-diagram driver: fans replicas over a grid
+               as one flat batch and reduces diagnostics into a
+               PhaseDiagram.
+
+Entry points: ``examples/skyrmion_nucleation.py`` (Fig.-9 field cooling
+through the engine), ``repro.launch.sweep`` (phase-diagram CLI),
+``benchmarks/ensemble.py`` (vmapped-vs-sequential throughput).
+"""
+from repro.ensemble import protocol
+from repro.ensemble.exchange import (apply_exchange, swap_permutation,
+                                     swap_probability)
+from repro.ensemble.protocol import (Schedule, constant, field_cooling,
+                                     linear, piecewise, quench,
+                                     temperature_ladder)
+from repro.ensemble.replica import EnsembleTrace, ReplicaEnsemble, replicate
+from repro.ensemble.sweep import PhaseDiagram, run_sweep

@@ -1,0 +1,278 @@
+"""Vmapped multi-replica spin-lattice engine.
+
+Batches :class:`SpinLatticeState` over a leading replica axis and drives all
+replicas through ONE compiled chunk: a ``lax.scan`` over steps whose body
+``vmap``s the coupled integrator step, with per-step per-replica temperature
+and field evaluated from :mod:`repro.ensemble.protocol` schedules inside the
+jit.  All replicas share one neighbor table (crystalline FeGe barely
+diffuses; the table is rebuilt from the replica-mean positions whenever any
+replica trips the half-skin test) and consume independent counter-derived
+RNG streams (``fold_in(step_key, replica_id)``), so a vmapped chunk is
+bitwise-reproducible against a loop of single-replica steps driven with the
+same keys (tested in tests/test_ensemble.py).
+
+Streaming diagnostics (topological charge, magnetization, helix pitch,
+potential energy - the paper's Fig. 4/9 observables) are reduced per chunk
+inside the same jit and accumulated into an :class:`EnsembleTrace`.
+
+Optional parallel-tempering: pass a per-replica temperature ladder and
+``exchange_every`` to attempt Metropolis swaps between chunks
+(repro.ensemble.exchange).  Optional multi-device scaling: call
+:meth:`ReplicaEnsemble.shard` to shard the replica axis across devices.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ensemble import protocol
+from repro.ensemble.exchange import apply_exchange
+from repro.md.analysis import helix_pitch, magnetization, topological_charge
+from repro.md.integrator import ForceField, IntegratorConfig, make_step
+from repro.md.neighbor import (NeighborTable, cell_neighbor_table,
+                               dense_neighbor_table, needs_rebuild)
+from repro.md.state import SpinLatticeState
+
+
+class EnsembleTrace(NamedTuple):
+    """Per-chunk streaming diagnostics, stacked over chunks (C) x replicas (R)."""
+
+    time: np.ndarray           # (C,) ps at chunk ends
+    temperature: np.ndarray    # (C, R) applied bath temperature [K]
+    charge: np.ndarray         # (C, R) Berg-Luscher topological charge
+    magnetization: np.ndarray  # (C, R) <S_z> over magnetic sites
+    pitch: np.ndarray          # (C, R) helix pitch [A]
+    energy: np.ndarray         # (C, R) potential energy [eV]
+    exchange_accepts: int
+    exchange_attempts: int
+
+
+def replicate(state: SpinLatticeState, n_replicas: int) -> SpinLatticeState:
+    """Tile a single state over a leading replica axis."""
+    return jax.tree_util.tree_map(
+        lambda x: jnp.repeat(x[None], n_replicas, axis=0), state)
+
+
+def _as_schedule(value, default) -> protocol.Schedule:
+    if value is None:
+        return protocol.constant(default)
+    if isinstance(value, protocol.Schedule):
+        return value
+    return protocol.constant(value)
+
+
+@dataclasses.dataclass
+class ReplicaEnsemble:
+    """Replica-batched analogue of :class:`repro.md.simulate.Simulation`.
+
+    ``states`` must be replica-batched (use :func:`replicate`); ``types``
+    and ``box`` are assumed identical across replicas (same crystal), which
+    lets one neighbor table and one compiled step serve the whole batch.
+    """
+
+    potential: Any                 # .energy_forces_field(pos,spin,types,table,box,field)
+    cfg: IntegratorConfig
+    states: SpinLatticeState       # (R, N, ...) replica-batched
+    masses: jax.Array              # (n_types,)
+    magnetic: jax.Array            # (n_types,) bool
+    cutoff: float
+    capacity: int = 64
+    skin: float = 0.5
+    use_cell_list: bool = False
+    diag_grid: tuple[int, int] = (32, 32)
+    pitch_bins: int = 64
+    table: NeighborTable | None = None
+    _chunk: Callable | None = None
+    _veval: Callable | None = None
+    _ffs: ForceField | None = None
+
+    def __post_init__(self):
+        if self.states.pos.ndim != 3:
+            raise ValueError("states must be replica-batched (R, N, 3); "
+                             "use ensemble.replica.replicate()")
+        self._types0 = self.states.types[0]
+        self._box0 = self.states.box[0]
+        self._refresh(build_table=self.table is None, init_field=None)
+
+    # ------------------------------------------------------------------
+    @property
+    def n_replicas(self) -> int:
+        return self.states.pos.shape[0]
+
+    @property
+    def energies(self) -> jax.Array:
+        """Per-replica potential energy (R,) at the current state."""
+        return self._ffs.energy
+
+    @property
+    def time(self) -> float:
+        """Simulated time [ps] (replicas advance in lockstep)."""
+        return float(self.states.step[0]) * self.cfg.dt
+
+    # ------------------------------------------------------------------
+    def _reference_pos(self) -> jax.Array:
+        """Replica-mean positions (min-imaged around replica 0) - the
+        crystalline reference the shared table is built from."""
+        p0 = self.states.pos[0]
+        d = self.states.pos - p0[None]
+        d = d - self._box0 * jnp.round(d / self._box0)
+        return p0 + jnp.mean(d, axis=0)
+
+    def _build_table(self) -> NeighborTable:
+        build = (cell_neighbor_table if self.use_cell_list
+                 else dense_neighbor_table)
+        return build(self._reference_pos(), self._box0, self.cutoff,
+                     self.capacity, skin=self.skin)
+
+    def _needs_rebuild(self) -> bool:
+        trip = jax.vmap(lambda p: needs_rebuild(self.table, p, self._box0,
+                                                self.skin))(self.states.pos)
+        return bool(jnp.any(trip))
+
+    def _refresh(self, build_table: bool = True, init_field=None):
+        if build_table:
+            self.table = self._build_table()
+        table, types0, box0 = self.table, self._types0, self._box0
+        potential, diag_grid = self.potential, self.diag_grid
+        pitch_bins, mag_types = self.pitch_bins, self.magnetic
+        dt, r = self.cfg.dt, self.n_replicas
+
+        def evaluate(pos, spin, field=None):
+            return ForceField(*potential.energy_forces_field(
+                pos, spin, types0, table, box0, field))
+
+        step = make_step(evaluate, self.cfg, self.masses, self.magnetic)
+        vstep = jax.vmap(step, in_axes=(0, 0, 0, 0, 0))
+        self._veval = jax.jit(jax.vmap(evaluate, in_axes=(0, 0, 0)))
+
+        def diag_one(st: SpinLatticeState, f: ForceField):
+            mag = mag_types[jnp.maximum(st.types, 0)]
+            q = topological_charge(st.pos, st.spin, st.box, grid=diag_grid)
+            mz = magnetization(st.spin, mask=mag)[2]
+            lam = helix_pitch(st.pos, st.spin, st.box, axis=0,
+                              n_bins=pitch_bins)
+            return q, mz, lam, f.energy
+
+        @partial(jax.jit, static_argnames=("n",))
+        def chunk(states, ffs, key, tsched, fsched, n):
+            # schedules evaluated INSIDE the jit: the whole protocol chunk
+            # (ramp, quench, hold) is one compiled scan
+            t0 = states.step[0].astype(jnp.float32) * dt
+            ts = t0 + jnp.arange(n, dtype=jnp.float32) * dt
+            temps = tsched.at(ts)                       # (n,) or (n,R)
+            if temps.ndim == 1:
+                temps = jnp.broadcast_to(temps[:, None], (n, r))
+            fields = fsched.at(ts)                      # (n,3) or (n,R,3)
+            if fields.ndim == 2:
+                fields = jnp.broadcast_to(fields[:, None, :], (n, r, 3))
+
+            def body(carry, xs):
+                st, f = carry
+                k, temp, bfield = xs
+                keys = jax.vmap(lambda i: jax.random.fold_in(k, i))(
+                    jnp.arange(r))
+                return vstep(st, f, keys, temp, bfield), None
+
+            keys = jax.random.split(key, n)
+            (states, ffs), _ = jax.lax.scan(body, (states, ffs),
+                                            (keys, temps, fields))
+            q, mz, lam, e = jax.vmap(diag_one)(states, ffs)
+            return states, ffs, (q, mz, lam, e)
+
+        self._chunk = chunk
+        if init_field is not None or self._ffs is None:
+            f0 = (jnp.zeros((r, 3), self.states.pos.dtype)
+                  if init_field is None else init_field)
+            self._ffs = self._veval(self.states.pos, self.states.spin, f0)
+
+    # ------------------------------------------------------------------
+    def shard(self, devices=None) -> "ReplicaEnsemble":
+        """Shard the replica axis across devices (no-op on one device)."""
+        devices = list(devices if devices is not None else jax.devices())
+        if len(devices) <= 1:
+            return self
+        if self.n_replicas % len(devices) != 0:
+            raise ValueError(f"{self.n_replicas} replicas not divisible by "
+                             f"{len(devices)} devices")
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        mesh = Mesh(np.asarray(devices), ("replica",))
+        put = lambda tree: jax.tree_util.tree_map(
+            lambda x: jax.device_put(x, NamedSharding(mesh, P("replica"))),
+            tree)
+        self.states = put(self.states)
+        self._ffs = put(self._ffs)
+        return self
+
+    # ------------------------------------------------------------------
+    def run(self, n_steps: int, key: jax.Array, *,
+            temperature=None, field=None, chunk: int = 100,
+            exchange_every: int = 0,
+            callback: Callable[["ReplicaEnsemble"], None] | None = None,
+            ) -> EnsembleTrace:
+        """Advance every replica ``n_steps`` under the given protocol.
+
+        temperature: None (-> cfg.temperature), scalar, (R,) ladder, or a
+            :class:`protocol.Schedule` (values (K,) shared or (K,R)).
+        field: None (-> zero field), (3,) Tesla, (R,3), or a Schedule
+            (values (K,3) shared or (K,R,3)).
+        exchange_every: if > 0, attempt parallel-tempering swaps every that
+            many chunks (temperature must then be a constant (R,) ladder).
+        Returns the per-chunk :class:`EnsembleTrace`.
+        """
+        r = self.n_replicas
+        tsched = _as_schedule(temperature, self.cfg.temperature)
+        fsched = _as_schedule(field, jnp.zeros((3,)))
+        if exchange_every:
+            ladder = np.asarray(tsched.values)
+            if ladder.ndim != 2 or ladder.shape[1] != r or \
+                    not np.allclose(ladder[0], ladder[-1]):
+                raise ValueError("replica exchange needs a constant (R,) "
+                                 "temperature ladder")
+            ladder_j = jnp.asarray(ladder[0])
+
+        # re-evaluate forces at the protocol's starting field (the
+        # construction-time ffs were computed at zero field, and a previous
+        # run() may have left forces from a different schedule)
+        self._ffs = self._veval(
+            self.states.pos, self.states.spin,
+            jnp.broadcast_to(fsched.at(self.time), (r, 3)))
+
+        rows, times, temps_log = [], [], []
+        n_acc = n_att = 0
+        done = n_chunks = 0
+        parity = 0
+        while done < n_steps:
+            n = min(chunk, n_steps - done)
+            key, kc = jax.random.split(key)
+            if self._needs_rebuild():
+                self._refresh(build_table=True, init_field=jnp.broadcast_to(
+                    fsched.at(self.time), (r, 3)))
+            self.states, self._ffs, diag = self._chunk(
+                self.states, self._ffs, kc, tsched, fsched, n)
+            done += n
+            n_chunks += 1
+            rows.append(tuple(np.asarray(d) for d in diag))
+            times.append(self.time)
+            t_now = np.asarray(tsched.at(self.time))
+            temps_log.append(np.broadcast_to(t_now, (r,)).copy())
+            if exchange_every and n_chunks % exchange_every == 0:
+                key, kx = jax.random.split(key)
+                self.states, self._ffs, acc, att = apply_exchange(
+                    kx, self.states, self._ffs, ladder_j, parity)
+                n_acc += int(acc)
+                n_att += int(att)
+                parity ^= 1
+            if callback is not None:
+                callback(self)
+
+        q, mz, lam, e = (np.stack([row[i] for row in rows])
+                         for i in range(4))
+        return EnsembleTrace(
+            time=np.asarray(times), temperature=np.stack(temps_log),
+            charge=q, magnetization=mz, pitch=lam, energy=e,
+            exchange_accepts=n_acc, exchange_attempts=n_att)

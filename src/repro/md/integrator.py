@@ -23,12 +23,21 @@ Thermostats (optional, for real-temperature dynamics):
             plus an optional longitudinal Landau channel for |S| fluctuations
             (the paper's "longitudinal fluctuation of magnetic moment").
 
+Temperature and external field are **runtime inputs**: the built step
+accepts optional ``temperature`` (scalar, K) and ``field`` ((3,), Tesla)
+arguments so annealing / field-cooling protocols (repro.ensemble.protocol)
+can drive a single compiled step through a whole schedule, and ``vmap`` can
+batch replicas at different (T, B) points.  When omitted they fall back to
+the compile-time ``IntegratorConfig`` constants (the pre-ensemble behavior,
+bitwise compatible).
+
 With damping = noise = 0 the scheme is time-reversible, conserves |S_i|
 exactly and total energy to O(dt^2) (tested in tests/test_integrator.py).
 """
 from __future__ import annotations
 
 import dataclasses
+import inspect
 from functools import partial
 from typing import Any, Callable, NamedTuple
 
@@ -50,7 +59,7 @@ class IntegratorConfig:
     midpoint_tol: float = 1e-10
     midpoint_mixing: float = 1.0  # <1 = regularized fixed point
     # thermostats (0 = off -> NVE, structure-preserving)
-    temperature: float = 0.0      # K
+    temperature: float = 0.0      # K (default; runtime arg overrides)
     lattice_gamma: float = 0.0    # 1/ps Langevin friction
     spin_alpha: float = 0.0       # Gilbert damping
     spin_longitudinal: float = 0.0  # 1/ps longitudinal relaxation rate
@@ -67,8 +76,11 @@ class ForceField(NamedTuple):
     field: jax.Array   # (N,3) -dE/dS, eV
 
 
-# potential evaluation signature: (pos, spin) -> ForceField
-EvalFn = Callable[[jax.Array, jax.Array], ForceField]
+# potential evaluation signature: (pos, spin, field) -> ForceField, with
+# field the external (3,) B-field in Tesla (None -> evaluator's own default).
+# Legacy two-argument (pos, spin) evaluators are still accepted by
+# ``make_step`` (the runtime field is then ignored by the potential).
+EvalFn = Callable[..., ForceField]
 
 
 def _rodrigues(s: jax.Array, omega: jax.Array, dt: float) -> jax.Array:
@@ -83,7 +95,7 @@ def _rodrigues(s: jax.Array, omega: jax.Array, dt: float) -> jax.Array:
 
 
 def _precession_rate(field: jax.Array, spin: jax.Array, cfg: IntegratorConfig,
-                     key: jax.Array | None,
+                     key: jax.Array | None, temp,
                      duration: float | None = None) -> jax.Array:
     """Angular velocity omega (N,3) [rad/ps] incl. damping + thermal noise.
 
@@ -93,12 +105,12 @@ def _precession_rate(field: jax.Array, spin: jax.Array, cfg: IntegratorConfig,
     relation <b^2> = 2 alpha kB T / (gyro mu tau) for the *applied kick
     duration tau* (each half-step draws an independent kick, so tau = dt/2
     there; validated by tests/test_integrator.py::test_single_spin_boltzmann
-    against the Langevin function).
+    against the Langevin function).  ``temp`` may be a traced scalar.
     """
     b = field / (cfg.moment * units.MU_B)  # Tesla
     tau = duration if duration is not None else cfg.dt
-    if cfg.spin_alpha > 0.0 and cfg.temperature > 0.0 and key is not None:
-        sigma = jnp.sqrt(2.0 * cfg.spin_alpha * units.KB * cfg.temperature
+    if cfg.spin_alpha > 0.0 and key is not None:
+        sigma = jnp.sqrt(2.0 * cfg.spin_alpha * units.KB * temp
                          / (units.GYRO * cfg.moment * units.MU_B * tau))
         b = b + sigma * jax.random.normal(key, b.shape, b.dtype)
     gp = units.GYRO / (1.0 + cfg.spin_alpha ** 2)
@@ -110,13 +122,13 @@ def _precession_rate(field: jax.Array, spin: jax.Array, cfg: IntegratorConfig,
 
 def _spin_half_step(
     evaluate: EvalFn, pos: jax.Array, spin: jax.Array, ff: ForceField,
-    cfg: IntegratorConfig, key: jax.Array | None,
+    cfg: IntegratorConfig, key: jax.Array | None, temp, bfield,
 ) -> tuple[jax.Array, ForceField]:
     """Advance spins by dt/2; optionally self-consistent midpoint iteration."""
     half = 0.5 * cfg.dt
 
     def rotate(field, s0):
-        omega = _precession_rate(field, s0, cfg, key, duration=half)
+        omega = _precession_rate(field, s0, cfg, key, temp, duration=half)
         return _rodrigues(s0, omega, half)
 
     if not cfg.midpoint:
@@ -130,7 +142,7 @@ def _spin_half_step(
         nrm = jnp.linalg.norm(spin, axis=-1, keepdims=True)
         mid = mid / jnp.maximum(jnp.linalg.norm(mid, axis=-1, keepdims=True),
                                 1e-30) * nrm
-        ff_mid = evaluate(pos, mid)
+        ff_mid = evaluate(pos, mid, bfield)
         s_next = rotate(ff_mid.field, spin)
         if cfg.midpoint_mixing < 1.0:
             s_next = (cfg.midpoint_mixing * s_next
@@ -143,7 +155,7 @@ def _spin_half_step(
 
 
 def _longitudinal_step(spin: jax.Array, ff: ForceField,
-                       cfg: IntegratorConfig, key: jax.Array | None,
+                       cfg: IntegratorConfig, key: jax.Array | None, temp,
                        mag_mask: jax.Array) -> jax.Array:
     """Overdamped Langevin dynamics of |S| along s_hat (Landau channel)."""
     if cfg.spin_longitudinal <= 0.0:
@@ -154,8 +166,8 @@ def _longitudinal_step(spin: jax.Array, ff: ForceField,
     f_long = jnp.sum(ff.field * shat, axis=-1, keepdims=True)
     eta = cfg.spin_longitudinal
     dnrm = eta * cfg.dt * f_long
-    if cfg.temperature > 0.0 and key is not None:
-        dnrm = dnrm + jnp.sqrt(2.0 * eta * units.KB * cfg.temperature
+    if key is not None:
+        dnrm = dnrm + jnp.sqrt(2.0 * eta * units.KB * temp
                                * cfg.dt) * jax.random.normal(
                                    key, nrm.shape, spin.dtype)
     new_nrm = jnp.maximum(nrm + dnrm, 1e-3)
@@ -163,13 +175,32 @@ def _longitudinal_step(spin: jax.Array, ff: ForceField,
 
 
 def _lattice_langevin(vel: jax.Array, masses: jax.Array,
-                      cfg: IntegratorConfig, key: jax.Array) -> jax.Array:
+                      cfg: IntegratorConfig, key: jax.Array,
+                      temp) -> jax.Array:
     """Exact half-step Ornstein-Uhlenbeck velocity update (OBABO splitting)."""
     c1 = jnp.exp(-cfg.lattice_gamma * 0.5 * cfg.dt)
-    sigma = jnp.sqrt(units.KB * cfg.temperature * (1.0 - c1 ** 2)
+    sigma = jnp.sqrt(units.KB * temp * (1.0 - c1 ** 2)
                      / (masses * units.MVV2E))
     return c1 * vel + sigma[..., None] * jax.random.normal(key, vel.shape,
                                                            vel.dtype)
+
+
+def _adapt_eval(evaluate: EvalFn) -> EvalFn:
+    """Accept legacy (pos, spin) evaluators alongside (pos, spin, field).
+
+    Field-aware evaluators must name their third parameter ``field`` (a
+    bare arity check would misroute the field into closure-default params
+    like ``evaluate(pos, spin, tab=tab)``)."""
+    try:
+        pars = list(inspect.signature(evaluate).parameters.values())
+    except (TypeError, ValueError):  # builtins / exotic callables
+        return evaluate
+    if len(pars) >= 3 and pars[2].name == "field":
+        return evaluate
+
+    def ev(pos, spin, field):
+        return evaluate(pos, spin)
+    return ev
 
 
 def make_step(
@@ -179,15 +210,24 @@ def make_step(
     magnetic: jax.Array,        # (n_types,) bool
     atom_mask: jax.Array | None = None,  # empty-slot mask (domain decomp)
 ):
-    """Build the jit-able coupled step:  (state, ff, key) -> (state, ff).
+    """Build the jit-able coupled step:
 
-    ``evaluate`` must close over types/neighbor-table/box/field.  Neighbor
-    rebuild is the caller's responsibility (repro.md.simulate).  Works on
-    flat (N, ...) arrays AND cell-blocked (CX,CY,CZ,K, ...) domain arrays
-    (all updates are elementwise); ``atom_mask`` freezes empty slots.
+        (state, ff, key[, temperature[, field]]) -> (state, ff)
+
+    ``temperature`` (scalar K) and ``field`` ((3,) Tesla) are optional
+    runtime overrides of the ``IntegratorConfig`` constants; protocols and
+    replica ensembles thread per-step / per-replica values through them.
+    ``evaluate`` must close over types/neighbor-table/box; it receives the
+    runtime field as a third argument (legacy two-argument evaluators keep
+    working and ignore it).  Neighbor rebuild is the caller's responsibility
+    (repro.md.simulate).  Works on flat (N, ...) arrays AND cell-blocked
+    (CX,CY,CZ,K, ...) domain arrays (all updates are elementwise);
+    ``atom_mask`` freezes empty slots.
     """
+    ev = _adapt_eval(evaluate)
 
-    def step(state: SpinLatticeState, ff: ForceField, key: jax.Array):
+    def step(state: SpinLatticeState, ff: ForceField, key: jax.Array,
+             temperature=None, field=None):
         k1, k2, k3, k4, k5 = jax.random.split(key, 5)
         types_c = jnp.maximum(state.types, 0)
         m = masses[types_c][..., None]
@@ -195,20 +235,26 @@ def make_step(
         if atom_mask is not None:
             mag = mag & atom_mask
         dt = cfg.dt
+        # `temperature is None` is a trace-time (static) condition: with no
+        # runtime override the stochastic branches compile exactly as the
+        # static-config integrator did.
+        stochastic = (temperature is not None) or cfg.temperature > 0.0
+        temp = cfg.temperature if temperature is None else \
+            jnp.maximum(temperature, 0.0)
 
         vel = state.vel
         vmask = (atom_mask[..., None] if atom_mask is not None else
                  jnp.ones_like(vel, dtype=bool))
         if not cfg.frozen_lattice:
-            if cfg.lattice_gamma > 0.0 and cfg.temperature > 0.0:
+            if cfg.lattice_gamma > 0.0 and stochastic:
                 vel = jnp.where(vmask, _lattice_langevin(
-                    vel, masses[types_c], cfg, k1), vel)
+                    vel, masses[types_c], cfg, k1, temp), vel)
             # B: half kick
             vel = vel + 0.5 * dt * ff.force / m * units.FORCE2ACC
         # spin half step (scheduled last among half-step ops: may re-evaluate)
         spin, ff = _spin_half_step(
-            evaluate, state.pos, state.spin, ff, cfg,
-            k2 if cfg.temperature > 0 else None)
+            ev, state.pos, state.spin, ff, cfg,
+            k2 if stochastic else None, temp, field)
         spin = jnp.where(mag[..., None], spin, state.spin)
         # A: drift
         if cfg.frozen_lattice:
@@ -217,19 +263,19 @@ def make_step(
             pos = state.pos + dt * vel
             pos = pos - state.box * jnp.floor(pos / state.box)  # wrap PBC
         # recompute at new positions
-        ff = evaluate(pos, spin)
+        ff = ev(pos, spin, field)
         # spin half step
         spin2, ff = _spin_half_step(
-            evaluate, pos, spin, ff, cfg, k3 if cfg.temperature > 0 else None)
+            ev, pos, spin, ff, cfg, k3 if stochastic else None, temp, field)
         spin = jnp.where(mag[..., None], spin2, spin)
         spin = _longitudinal_step(spin, ff, cfg,
-                                  k4 if cfg.temperature > 0 else None, mag)
+                                  k4 if stochastic else None, temp, mag)
         if not cfg.frozen_lattice:
             # B: half kick
             vel = vel + 0.5 * dt * ff.force / m * units.FORCE2ACC
-            if cfg.lattice_gamma > 0.0 and cfg.temperature > 0.0:
+            if cfg.lattice_gamma > 0.0 and stochastic:
                 vel = jnp.where(vmask, _lattice_langevin(
-                    vel, masses[types_c], cfg, k5), vel)
+                    vel, masses[types_c], cfg, k5, temp), vel)
 
         return SpinLatticeState(pos=pos, vel=vel, spin=spin,
                                 types=state.types, box=state.box,

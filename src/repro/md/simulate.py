@@ -39,25 +39,7 @@ class Simulation:
     _ff: ForceField | None = None
 
     def __post_init__(self):
-        if self.table is None:
-            self.table = self._build_table(self.state.pos)
-        evaluate = self._make_eval(self.table)
-        step = make_step(evaluate, self.cfg, self.masses, self.magnetic)
-
-        @partial(jax.jit, static_argnames=("n",))
-        def chunk(state, ff, key, n):
-            def body(carry, k):
-                st, f = carry
-                st, f = step(st, f, k)
-                return (st, f), None
-            keys = jax.random.split(key, n)
-            (state, ff), _ = jax.lax.scan(body, (state, ff), keys)
-            return state, ff
-
-        self._step_chunk = chunk
-        self._ff = ForceField(*self.potential.energy_forces_field(
-            self.state.pos, self.state.spin, self.state.types, self.table,
-            self.state.box, self.field))
+        self._refresh(build_table=self.table is None)
 
     # ------------------------------------------------------------------
     def _build_table(self, pos) -> NeighborTable:
@@ -66,15 +48,16 @@ class Simulation:
                      skin=self.skin)
 
     def _make_eval(self, table):
-        def evaluate(pos, spin):
+        def evaluate(pos, spin, field=None):
+            f = self.field if field is None else field
             return ForceField(*self.potential.energy_forces_field(
-                pos, spin, self.state.types, table, self.state.box,
-                self.field))
+                pos, spin, self.state.types, table, self.state.box, f))
         return evaluate
 
-    def _refresh(self):
-        """Rebuild table + recompile closure chain after atoms drift."""
-        self.table = self._build_table(self.state.pos)
+    def _refresh(self, build_table: bool = True):
+        """(Re)build table + recompile closure chain after atoms drift."""
+        if build_table:
+            self.table = self._build_table(self.state.pos)
         evaluate = self._make_eval(self.table)
         step = make_step(evaluate, self.cfg, self.masses, self.magnetic)
 

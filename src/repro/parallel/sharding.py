@@ -103,9 +103,23 @@ def set_mode(mode: str):
     _ACTIVE_MODE[0] = mode
 
 
+def _current_mesh():
+    """The active mesh, portable across jax versions: the abstract mesh
+    (jax >= 0.5) when available, else the `with Mesh(...)` physical-mesh
+    context (jax 0.4.x); None when neither is set."""
+    get_abstract = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_abstract is not None:
+        return get_abstract()
+    try:
+        from jax._src.mesh import thread_resources
+        return thread_resources.env.physical_mesh
+    except Exception:
+        return None
+
+
 def shard(x: jax.Array, *logical) -> jax.Array:
     """Activation sharding constraint; no-op when no mesh is active."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = _current_mesh()
     if mesh is None or mesh.empty or not mesh.axis_names:
         return x
     spec = resolve_spec(mesh, logical, x.shape, _ACTIVE_MODE[0])

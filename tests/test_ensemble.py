@@ -1,0 +1,277 @@
+"""Ensemble engine: protocols, vmapped replicas, exchange, (T,B) sweep."""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hamiltonian import HeisenbergDMIModel
+from repro.ensemble import protocol
+from repro.ensemble.exchange import (apply_exchange, swap_permutation,
+                                     swap_probability)
+from repro.ensemble.replica import ReplicaEnsemble, replicate
+from repro.ensemble.sweep import run_sweep
+from repro.md.integrator import ForceField, IntegratorConfig, make_step
+from repro.md.lattice import simple_cubic
+from repro.md.neighbor import dense_neighbor_table
+from repro.md.state import init_state
+from repro.utils import units
+
+
+# ---------------------------------------------------------------- protocol
+
+def test_schedule_hits_endpoints():
+    sch = protocol.linear(1.0, 3.0, 100.0, 20.0)
+    assert float(sch.at(1.0)) == pytest.approx(100.0)
+    assert float(sch.at(3.0)) == pytest.approx(20.0)
+    assert float(sch.at(2.0)) == pytest.approx(60.0)
+    # clamped outside the knot range
+    assert float(sch.at(0.0)) == pytest.approx(100.0)
+    assert float(sch.at(99.0)) == pytest.approx(20.0)
+
+
+def test_schedule_piecewise_and_quench():
+    sch = protocol.piecewise([0.0, 1.0, 2.0, 4.0], [50.0, 50.0, 10.0, 10.0])
+    ts = jnp.asarray([0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0])
+    got = np.asarray(sch.at(ts))
+    np.testing.assert_allclose(got, [50, 50, 50, 30, 10, 10, 10], atol=1e-5)
+    q = protocol.quench(2.0, 80.0, 5.0)
+    assert float(q.at(1.999)) == pytest.approx(80.0)
+    assert float(q.at(2.001)) == pytest.approx(5.0)
+
+
+def test_field_cooling_protocol_shape():
+    temp, fld = protocol.field_cooling(95.0, 20.0, 25.0, t_hold=1.0,
+                                       t_ramp=2.0, t_final=1.0)
+    assert float(temp.at(0.5)) == pytest.approx(95.0)   # hold hot
+    assert float(temp.at(2.0)) == pytest.approx(57.5)   # mid-ramp
+    assert float(temp.at(3.5)) == pytest.approx(20.0)   # hold cold
+    b = np.asarray(fld.at(jnp.asarray([0.0, 2.0, 4.0])))
+    np.testing.assert_allclose(b, [[0, 0, 25]] * 3, atol=1e-6)
+
+
+def test_temperature_ladder_geometric():
+    lad = np.asarray(protocol.temperature_ladder(10.0, 160.0, 5))
+    assert lad.shape == (5,)
+    assert lad[0] == pytest.approx(10.0) and lad[-1] == pytest.approx(160.0)
+    ratios = lad[1:] / lad[:-1]
+    np.testing.assert_allclose(ratios, ratios[0], rtol=1e-5)
+
+
+def test_per_replica_schedule_broadcasting():
+    ladder = protocol.constant(jnp.asarray([10.0, 20.0, 40.0]))
+    out = ladder.at(jnp.zeros((7,)))
+    assert out.shape == (7, 3)
+    np.testing.assert_allclose(np.asarray(out[0]), [10, 20, 40], atol=1e-6)
+
+
+# ------------------------------------------------------- replica engine
+
+def _film(n=4, seed=0):
+    lat = simple_cubic()
+    st = init_state(lat, (n, n, 1), spin_init="helix_x",
+                    key=jax.random.PRNGKey(seed))
+    ham = HeisenbergDMIModel(d0=0.01)
+    return lat, ham, st
+
+
+def test_vmapped_matches_sequential_chunks():
+    """The acceptance-criterion test: a vmapped-replica chunk must match a
+    loop of single-replica chunks driven with the same per-replica keys and
+    schedule.  Spins agree bitwise; positions to 1 ulp (XLA fuses the
+    force/mass scaling differently for batched shapes)."""
+    lat, ham, st = _film()
+    cfg = IntegratorConfig(dt=2e-3, lattice_gamma=2.0, spin_alpha=0.1)
+    R, NSTEP, CHUNK = 3, 20, 10
+    temp = protocol.linear(0.0, NSTEP * cfg.dt, 80.0, 20.0)
+    fld = protocol.constant(jnp.asarray([0.0, 0.0, 3.0]))
+    masses = jnp.asarray(lat.masses)
+    magnetic = jnp.asarray(lat.moments) > 0
+
+    ens = ReplicaEnsemble(potential=ham, cfg=cfg, states=replicate(st, R),
+                          masses=masses, magnetic=magnetic, cutoff=5.0,
+                          capacity=8, diag_grid=(4, 4), pitch_bins=4)
+    ens.run(NSTEP, jax.random.PRNGKey(42), temperature=temp, field=fld,
+            chunk=CHUNK)
+
+    # sequential reference: same shared table, same key/schedule threading
+    table = dense_neighbor_table(st.pos, st.box, 5.0, 8, skin=0.5)
+
+    def evaluate(pos, spin, field=None):
+        return ForceField(*ham.energy_forces_field(
+            pos, spin, st.types, table, st.box, field))
+
+    step = make_step(evaluate, cfg, masses, magnetic)
+
+    @partial(jax.jit, static_argnames=("n", "r"))
+    def seq_chunk(s, ff, key, n, r):
+        t0 = s.step.astype(jnp.float32) * cfg.dt
+        ts = t0 + jnp.arange(n, dtype=jnp.float32) * cfg.dt
+        def body(carry, xs):
+            s, f = carry
+            k, t, b = xs
+            return step(s, f, jax.random.fold_in(k, r), t, b), None
+        keys = jax.random.split(key, n)
+        (s, ff), _ = jax.lax.scan(body, (s, ff),
+                                  (keys, temp.at(ts), fld.at(ts)))
+        return s, ff
+
+    for r in range(R):
+        s, ff = st, evaluate(st.pos, st.spin, fld.at(0.0))
+        k = jax.random.PRNGKey(42)
+        done = 0
+        while done < NSTEP:
+            n = min(CHUNK, NSTEP - done)
+            k, kc = jax.random.split(k)
+            s, ff = seq_chunk(s, ff, kc, n, r)
+            done += n
+        np.testing.assert_array_equal(np.asarray(s.spin),
+                                      np.asarray(ens.states.spin[r]))
+        np.testing.assert_allclose(np.asarray(s.pos),
+                                   np.asarray(ens.states.pos[r]),
+                                   rtol=0, atol=1e-7)
+        np.testing.assert_allclose(np.asarray(s.vel),
+                                   np.asarray(ens.states.vel[r]),
+                                   rtol=0, atol=1e-6)
+
+
+def test_engine_applies_schedule_and_streams_diagnostics():
+    lat, ham, st = _film(n=6)
+    cfg = IntegratorConfig(dt=2e-3, lattice_gamma=2.0, spin_alpha=0.1)
+    temp = protocol.linear(0.0, 40 * cfg.dt, 90.0, 30.0)
+    ens = ReplicaEnsemble(potential=ham, cfg=cfg, states=replicate(st, 4),
+                          masses=jnp.asarray(lat.masses),
+                          magnetic=jnp.asarray(lat.moments) > 0,
+                          cutoff=5.0, capacity=8, diag_grid=(6, 6),
+                          pitch_bins=6)
+    tr = ens.run(40, jax.random.PRNGKey(0), temperature=temp,
+                 field=jnp.asarray([0.0, 0.0, 2.0]), chunk=20)
+    assert tr.charge.shape == (2, 4)
+    assert tr.temperature.shape == (2, 4)
+    # schedule endpoints reached through the engine
+    assert tr.temperature[-1, 0] == pytest.approx(30.0, abs=1e-3)
+    for f in (tr.charge, tr.magnetization, tr.pitch, tr.energy):
+        assert np.isfinite(f).all()
+    # replicas diverge under independent noise streams
+    assert np.std(np.asarray(ens.states.spin), axis=0).max() > 1e-6
+
+
+# ------------------------------------------------------------- exchange
+
+def test_swap_probability_detailed_balance_identity():
+    """A(swap)/A(reverse swap) = exp[(bi-bj)(Ei-Ej)]: the reverse of
+    swapping configs (x at slot i, y at slot j) starts from (y at i, x at
+    j), i.e. the same betas with the energies exchanged."""
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        bi, bj = rng.uniform(0.5, 5.0, 2)
+        ei, ej = rng.uniform(-2.0, 2.0, 2)
+        a_fwd = float(swap_probability(bi, bj, ei, ej))
+        a_rev = float(swap_probability(bi, bj, ej, ei))
+        np.testing.assert_allclose(a_fwd / a_rev,
+                                   np.exp((bi - bj) * (ei - ej)), rtol=1e-4)
+
+
+def test_exchange_preserves_two_level_product_distribution():
+    """Two replicas on a two-level system {0, eps}: the product Boltzmann
+    distribution must be exactly stationary under the swap move."""
+    eps = 1.0
+    t1, t2 = 0.6, 2.5  # in units of eps/kB
+    b1, b2 = 1.0 / (units.KB * t1), 1.0 / (units.KB * t2)
+    eps_ev = eps * units.KB  # scale so beta*E is O(1)
+    levels = np.array([0.0, eps_ev])
+
+    def boltz(beta):
+        w = np.exp(-beta * levels)
+        return w / w.sum()
+
+    p1, p2 = boltz(b1), boltz(b2)
+    pi = np.outer(p1, p2)  # pi[x, y] = P(replica1 = x, replica2 = y)
+    pi_new = np.zeros_like(pi)
+    for x in range(2):
+        for y in range(2):
+            a = float(swap_probability(b1, b2, levels[x], levels[y]))
+            pi_new[y, x] += pi[x, y] * a        # swap accepted
+            pi_new[x, y] += pi[x, y] * (1 - a)  # rejected
+    np.testing.assert_allclose(pi_new, pi, rtol=1e-5)  # f32 swap_probability
+
+
+def test_swap_permutation_is_neighbor_permutation():
+    key = jax.random.PRNGKey(3)
+    e = jnp.asarray([5.0, 1.0, 4.0, 0.5])  # inverted ladder: swaps likely
+    t = jnp.asarray([10.0, 20.0, 40.0, 80.0])
+    for parity in (0, 1):
+        perm, acc = swap_permutation(key, e, t, parity)
+        perm = np.asarray(perm)
+        assert sorted(perm) == [0, 1, 2, 3]
+        assert np.abs(perm - np.arange(4)).max() <= 1  # neighbor swaps only
+    # hot high-energy / cold low-energy always swaps (A = 1)
+    perm, acc = swap_permutation(key, jnp.asarray([5.0, 0.0]),
+                                 jnp.asarray([10.0, 100.0]), 0)
+    assert list(np.asarray(perm)) == [1, 0] and bool(acc[0])
+
+
+def test_apply_exchange_swaps_states_and_rescales_velocities():
+    from repro.md.state import SpinLatticeState
+    r, n = 2, 3
+    mk = lambda v: jnp.full((r, n, 3), 1.0) * jnp.asarray(v)[:, None, None]
+    states = SpinLatticeState(
+        pos=mk([1.0, 2.0]), vel=mk([1.0, 2.0]), spin=mk([1.0, 2.0]),
+        types=jnp.zeros((r, n), jnp.int32), box=jnp.ones((r, 3)),
+        step=jnp.zeros((r,), jnp.int32))
+    ffs = ForceField(energy=jnp.asarray([5.0, 0.0]),
+                     force=mk([0.0, 0.0]), field=mk([0.0, 0.0]))
+    temps = jnp.asarray([10.0, 40.0])
+    # slot 0 (cold) has HIGHER energy -> swap is always accepted
+    states2, ffs2, n_acc, n_att = apply_exchange(
+        jax.random.PRNGKey(0), states, ffs, temps, 0)
+    assert int(n_acc) == 1 and n_att == 1
+    np.testing.assert_allclose(np.asarray(ffs2.energy), [0.0, 5.0])
+    np.testing.assert_allclose(np.asarray(states2.pos[0]), 2.0)
+    # velocities rescaled to the new bath: sqrt(T0/T1) = sqrt(10/40) = 0.5
+    np.testing.assert_allclose(np.asarray(states2.vel[0]), 2.0 * 0.5,
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(states2.vel[1]), 1.0 * 2.0,
+                               rtol=1e-6)
+
+
+def test_parallel_tempering_runs_and_counts():
+    lat, ham, st = _film()
+    cfg = IntegratorConfig(dt=2e-3, lattice_gamma=5.0, spin_alpha=0.2)
+    ladder = protocol.temperature_ladder(20.0, 120.0, 4)
+    ens = ReplicaEnsemble(potential=ham, cfg=cfg, states=replicate(st, 4),
+                          masses=jnp.asarray(lat.masses),
+                          magnetic=jnp.asarray(lat.moments) > 0,
+                          cutoff=5.0, capacity=8, diag_grid=(4, 4),
+                          pitch_bins=4)
+    tr = ens.run(40, jax.random.PRNGKey(1), temperature=ladder,
+                 chunk=10, exchange_every=1)
+    # parity alternates: 2 pairs (even) + 1 pair (odd) + 2 + 1 = 6 attempts
+    assert tr.exchange_attempts == 6
+    assert 0 <= tr.exchange_accepts <= tr.exchange_attempts
+    # scalar temperature is rejected for exchange
+    with pytest.raises(ValueError):
+        ens.run(10, jax.random.PRNGKey(2), temperature=50.0,
+                chunk=10, exchange_every=1)
+
+
+# ----------------------------------------------------------------- sweep
+
+def test_sweep_returns_filled_phase_diagram():
+    lat, ham, st = _film()
+    cfg = IntegratorConfig(dt=2e-3, lattice_gamma=2.0, spin_alpha=0.1)
+    temps, fields = [30.0, 80.0], [0.0, 5.0]
+    pd = run_sweep(st, ham, cfg, jnp.asarray(lat.masses),
+                   jnp.asarray(lat.moments) > 0, temps, fields,
+                   n_replicas=2, n_steps=30, key=jax.random.PRNGKey(0),
+                   cutoff=5.0, capacity=8, chunk=10, diag_grid=(4, 4))
+    assert pd.n_replicas == 2
+    np.testing.assert_allclose(pd.temperatures, temps)
+    np.testing.assert_allclose(pd.fields, fields)
+    for f in (pd.charge, pd.charge_abs, pd.charge_std, pd.magnetization,
+              pd.pitch, pd.energy):
+        assert f.shape == (2, 2)
+        assert np.isfinite(f).all(), "phase-diagram grid not filled"
+    assert pd.charge_abs.min() >= 0
+    assert pd.summary()  # renders
