@@ -1,13 +1,20 @@
 """Shared benchmark utilities."""
 from __future__ import annotations
 
+import os
 import time
 
 import jax
 
+# smoke mode (scripts/ci.sh --smoke): every benchmark runs 1 iteration on
+# downscaled problems - enough to catch bit-rotted perf code, not to time it
+SMOKE = bool(os.environ.get("BENCH_SMOKE"))
+
 
 def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:
     """Median wall-time per call [s], after jit warmup."""
+    if SMOKE:
+        warmup, iters = 0, 1
     for _ in range(warmup):
         out = fn(*args)
         jax.block_until_ready(out)

@@ -47,12 +47,11 @@ def main() -> list[str]:
     for n_rep in (1, 4, 16):
         ens, temp, fld, n_atoms = _ensemble(n_rep)
 
-        def do_chunk(states, ffs, key):
-            s, f, diag = ens._chunk(states, ffs, key, temp, fld, CHUNK)
-            return s, f, diag
+        def do_chunk(key):
+            return ens._chunk(ens.states, ens._ffs, ens.table, ens._nbh,
+                              key, temp, fld, CHUNK)
 
-        t = timeit(lambda: do_chunk(ens.states, ens._ffs,
-                                    jax.random.PRNGKey(1)),
+        t = timeit(lambda: do_chunk(jax.random.PRNGKey(1)),
                    warmup=1, iters=3)
         rate = n_rep * n_atoms * CHUNK / t
         if base_t is None:

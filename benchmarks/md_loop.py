@@ -1,0 +1,143 @@
+"""Fused MD hot loop vs the pre-fusion driver: steps/s + recompile count.
+
+The PR-2 acceptance benchmark: chunked stepping at N~4k atoms through
+
+* the FUSED driver - whole chunk (half-skin test, ``lax.cond`` table
+  rebuild, gather-once force evaluation) inside one compiled ``lax.scan``,
+  compiled exactly once per geometry; and
+* the LEGACY driver (``fused=False``) - host-side skin test between chunks
+  and a fresh jit of the step closure on every rebuild, i.e. the pre-PR
+  orchestration cost this PR removes.
+
+Both paths are warmed up (initial compile excluded), then timed over a run
+whose thermal motion trips >=3 neighbor rebuilds - so the legacy number
+pays its recompiles and per-chunk host syncs, exactly as it did in
+production.  Compilations are counted two ways: ``jax.monitoring``
+backend-compile events observed during the timed run, and the jit cache
+size of the fused chunk (must be exactly 1).
+
+Emits machine-readable ``BENCH_md_loop.json`` (repo root) so the perf
+trajectory is tracked from this PR onward.  CSV rows: name, us_per_call
+(=us/step), derived=steps/s|speedup|rebuilds|compiles.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import SMOKE, row
+from repro.core.descriptor import NEPSpinSpec
+from repro.core.hamiltonian import HeisenbergDMIModel
+from repro.core.potential import NEPSpinPotential, init_params
+from repro.md.integrator import IntegratorConfig
+from repro.md.lattice import simple_cubic
+from repro.md.simulate import Simulation
+from repro.md.state import init_state
+
+CELLS = (4, 4, 4) if SMOKE else (16, 16, 16)       # 64 / 4096 atoms
+STEPS = {"heisenberg": 40 if SMOKE else 400, "nep": 20 if SMOKE else 60}
+CHUNK = 20
+SKIN = 0.2   # half-skin 0.1 A: 500 K thermal motion trips rebuilds fast
+
+
+class _CompileCounter:
+    """Counts XLA backend compiles via jax.monitoring duration events."""
+
+    def __init__(self):
+        self.count = 0
+        jax.monitoring.register_event_duration_secs_listener(self._on_event)
+
+    def _on_event(self, name, _dur, **kw):
+        if name == "/jax/core/compile/backend_compile_duration":
+            self.count += 1
+
+
+_COMPILES = _CompileCounter()
+
+
+def _sim(potential, fused: bool) -> Simulation:
+    lat = simple_cubic()
+    st = init_state(lat, CELLS, temperature=500.0, spin_init="helix_x",
+                    key=jax.random.PRNGKey(0), dtype=jnp.float32)
+    return Simulation(
+        potential=potential, cfg=IntegratorConfig(dt=2e-3), state=st,
+        masses=jnp.asarray(lat.masses, jnp.float32),
+        magnetic=jnp.asarray(lat.moments) > 0, cutoff=5.0, capacity=8,
+        skin=SKIN, use_cell_list=not SMOKE, fused=fused)
+
+
+def _time_run(sim: Simulation, n_steps: int) -> tuple[float, int, int]:
+    """(wall s, compiles, rebuilds) observed during a warmed-up run."""
+    sim.run(CHUNK, jax.random.PRNGKey(1), chunk=CHUNK)  # warmup compile
+    jax.block_until_ready(sim.state.pos)
+    c0, r0 = _COMPILES.count, sim.n_rebuilds
+    t0 = time.perf_counter()
+    sim.run(n_steps, jax.random.PRNGKey(2), chunk=CHUNK)
+    jax.block_until_ready(sim.state.pos)
+    return (time.perf_counter() - t0, _COMPILES.count - c0,
+            sim.n_rebuilds - r0)
+
+
+def bench_potential(name: str, make_potential) -> dict:
+    n_steps = STEPS[name]
+    res = {"n_steps": n_steps}
+    for label, fused in (("fused", True), ("legacy", False)):
+        sim = _sim(make_potential(), fused)
+        dt, compiles, rebuilds = _time_run(sim, n_steps)
+        res[label] = {
+            "steps_per_s": n_steps / dt,
+            "wall_s": dt,
+            "rebuilds": rebuilds,
+            "compiles_during_run": compiles,
+        }
+        res["n_atoms"] = sim.state.n_atoms
+        if fused:
+            res[label]["chunk_cache_size"] = sim._chunk_fn._cache_size()
+    res["speedup"] = (res["fused"]["steps_per_s"]
+                      / res["legacy"]["steps_per_s"])
+    return res
+
+
+def main() -> list[str]:
+    out = {"n_atoms": None, "chunk": CHUNK, "skin": SKIN, "smoke": SMOKE,
+           "potentials": {}}
+    rows = []
+    cases = [("heisenberg", lambda: HeisenbergDMIModel(d0=0.01))]
+    spec = NEPSpinSpec(l_max=2, n_ang=2, n_rad=4, n_spin=2, basis_size=6)
+    cases.append(("nep", lambda: NEPSpinPotential(
+        spec, init_params(spec, jax.random.PRNGKey(0),
+                          dtype=jnp.float32))))
+    for name, make in cases:
+        res = bench_potential(name, make)
+        out["n_atoms"] = res["n_atoms"]
+        out["potentials"][name] = res
+        for label in ("fused", "legacy"):
+            r = res[label]
+            rows.append(row(
+                f"md_loop/{name}/{label}/N={res['n_atoms']}",
+                1e6 / r["steps_per_s"],
+                f"{r['steps_per_s']:.1f} steps/s|"
+                f"{res['speedup']:.2f}x|"
+                f"{r['rebuilds']} rebuilds|"
+                f"{r['compiles_during_run']} compiles"))
+        fused = res["fused"]
+        if not SMOKE:
+            # acceptance: one compiled chunk across a >=3-rebuild run
+            assert fused["rebuilds"] >= 3, fused
+            assert fused["chunk_cache_size"] == 1, fused
+            assert fused["compiles_during_run"] == 0, fused
+    if not SMOKE:  # the tracked perf trajectory holds full-size runs only
+        path = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "BENCH_md_loop.json")
+        with open(path, "w") as f:
+            json.dump(out, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    main()

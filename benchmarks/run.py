@@ -6,21 +6,28 @@
   accuracy.py    - Table IV  NEP-SPIN vs baseline accuracy
   kernels.py     - kernel-level microbenchmarks (fused vs reference)
   ensemble.py    - Fig. 9 scenario engine: vmapped replicas vs sequential
+  md_loop.py     - fused in-scan hot loop vs pre-fusion driver (PR 2)
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows.  ``--smoke`` (or
+BENCH_SMOKE=1) runs every benchmark for 1 iteration on downscaled problems
+so perf code can't silently rot (wired into scripts/ci.sh --smoke).
 """
 from __future__ import annotations
 
+import os
 import sys
 import traceback
 
 
 def main() -> None:
-    from benchmarks import (ablation, accuracy, ensemble, kernels, scaling,
-                            throughput)
+    if "--smoke" in sys.argv[1:]:
+        os.environ["BENCH_SMOKE"] = "1"
+    from benchmarks import (ablation, accuracy, ensemble, kernels, md_loop,
+                            scaling, throughput)
     print("name,us_per_call,derived")
     failures = []
-    for mod in (kernels, ablation, throughput, scaling, accuracy, ensemble):
+    for mod in (kernels, ablation, throughput, scaling, accuracy, ensemble,
+                md_loop):
         try:
             mod.main()
         except Exception as e:

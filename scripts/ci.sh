@@ -1,7 +1,17 @@
 #!/usr/bin/env bash
-# Tier-1 verification (see ROADMAP.md). Usage: scripts/ci.sh [pytest args]
+# Tier-1 verification (see ROADMAP.md).
+# Usage: scripts/ci.sh [pytest args]   - run the tier-1 test suite
+#        scripts/ci.sh --smoke         - 1-iteration benchmark smoke run
+#                                        (every benchmarks/ module executes
+#                                        on downscaled problems, so perf
+#                                        code can't silently rot)
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+if [[ "${1:-}" == "--smoke" ]]; then
+  exec env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" BENCH_SMOKE=1 \
+      python -m benchmarks.run --smoke
+fi
 
 # install prerequisites only when missing (the CI image bakes them in)
 python - <<'EOF' || pip install -r requirements.txt

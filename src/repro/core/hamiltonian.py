@@ -39,7 +39,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.descriptor import cutoff_fn
-from repro.md.neighbor import NeighborTable, gather_neighbors
+from repro.md.neighbor import (NeighborTable, Neighborhood,
+                               compute_from_blocks, gather_neighbors)
 from repro.utils import units
 
 
@@ -118,3 +119,25 @@ class HeisenbergDMIModel:
             lambda p, s: self.energy(p, s, types, table, box, field),
             argnums=(0, 1))(pos, spin)
         return e, -g[0], -g[1]
+
+    # ------------------------------------------------------------------
+    def compute(self, nbh: Neighborhood, spin, types, field=None):
+        """Gather-once evaluation: (E, F, H_eff) from pre-gathered blocks.
+
+        Same surface as :meth:`energy_forces_field` but positions enter only
+        through ``nbh.dr`` (gathered once per drift by the fused step);
+        forces are recovered from dE/ddr via the explicit pair scatter.
+        Neighbor spins are re-gathered here because spins change between
+        evaluations at fixed positions (half-steps, midpoint iterations).
+        """
+        def etot(dr, s):
+            dist = jnp.sqrt(jnp.sum(dr * dr, axis=-1) + 1e-30)
+            e = jnp.sum(self.atom_energies(dr, dist, nbh.mask, types,
+                                           nbh.tj, s, s[nbh.idx]))
+            if field is not None:
+                mag = (types == self.magnetic_type).astype(dr.dtype)
+                e = e - units.MU_B * self.moment * jnp.sum(
+                    mag[:, None] * s * field)
+            return e
+
+        return compute_from_blocks(etot, nbh, spin)

@@ -7,13 +7,15 @@ path and with the fused Pallas kernel (repro.kernels.nep) in the fast path.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.descriptor import NEPSpinSpec, descriptors
-from repro.md.neighbor import NeighborTable, gather_neighbors
+from repro.md.neighbor import (NeighborTable, Neighborhood,
+                               compute_from_blocks, gather_neighbors)
 from repro.utils import units
 
 
@@ -117,3 +119,62 @@ def energy_forces_field(
 
     e, grads = jax.value_and_grad(efn, argnums=(0, 1))(pos, spin)
     return e, -grads[0], -grads[1]
+
+
+def compute(
+    spec: NEPSpinSpec, params: NEPSpinParams,
+    nbh: Neighborhood, spin: jax.Array, types: jax.Array,
+    field: jax.Array | None = None,
+    moments: jax.Array | None = None,
+):
+    """Gather-once autodiff evaluation from pre-gathered neighbor blocks.
+
+    Positions enter only through ``nbh.dr``; forces are dE/ddr assembled
+    with the explicit pair scatter (same values as
+    :func:`energy_forces_field`, which differentiates through the gather).
+    """
+    def etot(dr, s):
+        dist = jnp.sqrt(jnp.sum(dr * dr, axis=-1) + 1e-30)
+        e = atom_energies(spec, params, dr, dist, nbh.mask, types, nbh.tj,
+                          s, s[nbh.idx])
+        etot_ = jnp.sum(e)
+        if field is not None:
+            mom = moments[types] if moments is not None else jnp.ones_like(e)
+            etot_ = etot_ - units.MU_B * jnp.sum(mom[:, None] * s * field)
+        return etot_
+
+    return compute_from_blocks(etot, nbh, spin)
+
+
+@dataclasses.dataclass(frozen=True)
+class NEPSpinPotential:
+    """Bound NEP-SPIN surface: (spec, params) with the driver-facing API.
+
+    ``energy_forces_field`` is the legacy whole-evaluation surface;
+    ``compute`` is the gather-once surface consumed by the fused MD loop.
+    ``use_kernel`` routes both through the fused Pallas kernels
+    (repro.kernels.nep) instead of autodiff.
+    """
+
+    spec: NEPSpinSpec
+    params: NEPSpinParams
+    moments: jax.Array | None = None
+    use_kernel: bool = False
+    interpret: bool = True
+
+    def energy_forces_field(self, pos, spin, types, table, box, field=None):
+        if self.use_kernel:
+            from repro.kernels.nep.ops import nep_energy_forces_field
+            return nep_energy_forces_field(
+                self.spec, self.params, pos, spin, types, table, box,
+                field, self.moments, interpret=self.interpret)
+        return energy_forces_field(self.spec, self.params, pos, spin, types,
+                                   table, box, field, self.moments)
+
+    def compute(self, nbh: Neighborhood, spin, types, field=None):
+        if self.use_kernel:
+            from repro.kernels.nep.ops import nep_compute
+            return nep_compute(self.spec, self.params, nbh, spin, types,
+                               field, self.moments, interpret=self.interpret)
+        return compute(self.spec, self.params, nbh, spin, types, field,
+                       self.moments)

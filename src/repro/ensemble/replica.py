@@ -1,15 +1,26 @@
-"""Vmapped multi-replica spin-lattice engine.
+"""Vmapped multi-replica spin-lattice engine (fused hot loop).
 
 Batches :class:`SpinLatticeState` over a leading replica axis and drives all
 replicas through ONE compiled chunk: a ``lax.scan`` over steps whose body
-``vmap``s the coupled integrator step, with per-step per-replica temperature
-and field evaluated from :mod:`repro.ensemble.protocol` schedules inside the
-jit.  All replicas share one neighbor table (crystalline FeGe barely
-diffuses; the table is rebuilt from the replica-mean positions whenever any
-replica trips the half-skin test) and consume independent counter-derived
-RNG streams (``fold_in(step_key, replica_id)``), so a vmapped chunk is
-bitwise-reproducible against a loop of single-replica steps driven with the
-same keys (tested in tests/test_ensemble.py).
+``vmap``s the gather-once coupled step
+(:func:`repro.md.integrator.make_fused_step`), with per-step per-replica
+temperature and field evaluated from :mod:`repro.ensemble.protocol`
+schedules inside the jit.
+
+All replicas share one neighbor table (crystalline FeGe barely diffuses):
+the table-static blocks of the :class:`~repro.md.neighbor.Neighborhood`
+(idx/mask/neighbor-types) are carried **unbatched** - one copy serves every
+replica - and only the position-dependent ``dr`` block is replica-batched,
+refreshed by a single batched gather inside the vmapped step.  The
+half-skin rebuild test runs per step *in-graph*: when any replica trips it,
+a ``lax.cond`` branch rebuilds the shared table from the replica-mean
+positions, re-gathers, and re-evaluates forces - no recompiles and no host
+round-trips, closing the ROADMAP item on fusing the chunk loop.
+
+Replicas consume independent counter-derived RNG streams
+(``fold_in(step_key, replica_id)``), so a vmapped chunk is bitwise-
+reproducible against a loop of single-replica steps driven with the same
+keys (tested in tests/test_fused_loop.py).
 
 Streaming diagnostics (topological charge, magnetization, helix pitch,
 potential energy - the paper's Fig. 4/9 observables) are reduced per chunk
@@ -33,10 +44,14 @@ import numpy as np
 from repro.ensemble import protocol
 from repro.ensemble.exchange import apply_exchange
 from repro.md.analysis import helix_pitch, magnetization, topological_charge
-from repro.md.integrator import ForceField, IntegratorConfig, make_step
-from repro.md.neighbor import (NeighborTable, cell_neighbor_table,
-                               dense_neighbor_table, needs_rebuild)
+from repro.md.integrator import ForceField, IntegratorConfig, make_fused_step
+from repro.md.neighbor import (NeighborTable, Neighborhood,
+                               make_table_builder, needs_rebuild, refresh_dr)
 from repro.md.state import SpinLatticeState
+
+# vmap axis spec for a replica-shared Neighborhood: table-static blocks are
+# unbatched (one copy for all replicas), dr is replica-batched
+_NBH_AXES = Neighborhood(idx=None, mask=None, tj=None, dr=0)
 
 
 class EnsembleTrace(NamedTuple):
@@ -72,10 +87,12 @@ class ReplicaEnsemble:
 
     ``states`` must be replica-batched (use :func:`replicate`); ``types``
     and ``box`` are assumed identical across replicas (same crystal), which
-    lets one neighbor table and one compiled step serve the whole batch.
+    lets one neighbor table, one set of gathered table blocks, and one
+    compiled chunk serve the whole batch.  The potential must expose the
+    gather-once ``compute(nbh, spin, types, field)`` surface.
     """
 
-    potential: Any                 # .energy_forces_field(pos,spin,types,table,box,field)
+    potential: Any                 # .compute(nbh, spin, types, field)
     cfg: IntegratorConfig
     states: SpinLatticeState       # (R, N, ...) replica-batched
     masses: jax.Array              # (n_types,)
@@ -84,20 +101,23 @@ class ReplicaEnsemble:
     capacity: int = 64
     skin: float = 0.5
     use_cell_list: bool = False
+    cell_capacity: int = 24
     diag_grid: tuple[int, int] = (32, 32)
     pitch_bins: int = 64
     table: NeighborTable | None = None
     _chunk: Callable | None = None
-    _veval: Callable | None = None
     _ffs: ForceField | None = None
 
     def __post_init__(self):
         if self.states.pos.ndim != 3:
             raise ValueError("states must be replica-batched (R, N, 3); "
                              "use ensemble.replica.replicate()")
+        if not hasattr(self.potential, "compute"):
+            raise ValueError("ReplicaEnsemble drives the fused loop and "
+                             "needs a potential with .compute()")
         self._types0 = self.states.types[0]
         self._box0 = self.states.box[0]
-        self._refresh(build_table=self.table is None, init_field=None)
+        self._setup()
 
     # ------------------------------------------------------------------
     @property
@@ -115,40 +135,55 @@ class ReplicaEnsemble:
         return float(self.states.step[0]) * self.cfg.dt
 
     # ------------------------------------------------------------------
-    def _reference_pos(self) -> jax.Array:
-        """Replica-mean positions (min-imaged around replica 0) - the
-        crystalline reference the shared table is built from."""
-        p0 = self.states.pos[0]
-        d = self.states.pos - p0[None]
-        d = d - self._box0 * jnp.round(d / self._box0)
-        return p0 + jnp.mean(d, axis=0)
-
-    def _build_table(self) -> NeighborTable:
-        build = (cell_neighbor_table if self.use_cell_list
-                 else dense_neighbor_table)
-        return build(self._reference_pos(), self._box0, self.cutoff,
-                     self.capacity, skin=self.skin)
-
-    def _needs_rebuild(self) -> bool:
-        trip = jax.vmap(lambda p: needs_rebuild(self.table, p, self._box0,
-                                                self.skin))(self.states.pos)
-        return bool(jnp.any(trip))
-
-    def _refresh(self, build_table: bool = True, init_field=None):
-        if build_table:
-            self.table = self._build_table()
-        table, types0, box0 = self.table, self._types0, self._box0
+    def _setup(self):
+        """Compile-once setup: geometry statics, fused chunk, initial carry."""
+        types0, box0 = self._types0, self._box0
         potential, diag_grid = self.potential, self.diag_grid
         pitch_bins, mag_types = self.pitch_bins, self.magnetic
-        dt, r = self.cfg.dt, self.n_replicas
+        skin, dt, r = self.skin, self.cfg.dt, self.n_replicas
 
-        def evaluate(pos, spin, field=None):
-            return ForceField(*potential.energy_forces_field(
-                pos, spin, types0, table, box0, field))
+        build, _, _ = make_table_builder(box0, self.cutoff, self.capacity,
+                                         self.cell_capacity, skin,
+                                         self.use_cell_list)
 
-        step = make_step(evaluate, self.cfg, self.masses, self.magnetic)
-        vstep = jax.vmap(step, in_axes=(0, 0, 0, 0, 0))
-        self._veval = jax.jit(jax.vmap(evaluate, in_axes=(0, 0, 0)))
+        def compute_ff(nbh, spin, types, field=None):
+            return ForceField(*potential.compute(nbh, spin, types, field))
+
+        def reference_pos(states):
+            """Replica-mean positions (min-imaged around replica 0) - the
+            crystalline reference the shared table is built from."""
+            p0 = states.pos[0]
+            d = states.pos - p0[None]
+            d = d - box0 * jnp.round(d / box0)
+            return p0 + jnp.mean(d, axis=0)
+
+        def shared_blocks(table, pos_r):
+            """Table-static blocks (one copy) + per-replica dr gather."""
+            base = Neighborhood(idx=table.idx, mask=table.mask,
+                                tj=types0[table.idx],
+                                dr=jnp.zeros(table.idx.shape + (3,),
+                                             pos_r.dtype))
+            drs = jax.vmap(lambda p: refresh_dr(base, p, box0).dr)(pos_r)
+            return base._replace(dr=drs)
+
+        def build_shared(states, field_r):
+            """Rebuild the shared table + per-replica dr / forces."""
+            table = build(reference_pos(states), box0)
+            nbh = shared_blocks(table, states.pos)
+            ffs = jax.vmap(
+                lambda d, s, f: compute_ff(nbh._replace(dr=d), s, types0, f)
+            )(nbh.dr, states.spin, field_r)
+            return table, nbh, ffs
+
+        step = make_fused_step(
+            gather=lambda pos, nbh: refresh_dr(nbh, pos, box0),
+            compute=compute_ff, cfg=self.cfg, masses=self.masses,
+            magnetic=self.magnetic)
+        vstep = jax.vmap(step, in_axes=(0, 0, _NBH_AXES, 0, 0, 0),
+                         out_axes=(0, 0, _NBH_AXES))
+        self._vcompute = jax.jit(jax.vmap(
+            lambda d, s, f, nbh: compute_ff(nbh._replace(dr=d), s, types0, f),
+            in_axes=(0, 0, 0, _NBH_AXES)))
 
         def diag_one(st: SpinLatticeState, f: ForceField):
             mag = mag_types[jnp.maximum(st.types, 0)]
@@ -159,7 +194,7 @@ class ReplicaEnsemble:
             return q, mz, lam, f.energy
 
         @partial(jax.jit, static_argnames=("n",))
-        def chunk(states, ffs, key, tsched, fsched, n):
+        def chunk(states, ffs, table, nbh, key, tsched, fsched, n):
             # schedules evaluated INSIDE the jit: the whole protocol chunk
             # (ramp, quench, hold) is one compiled scan
             t0 = states.step[0].astype(jnp.float32) * dt
@@ -172,23 +207,40 @@ class ReplicaEnsemble:
                 fields = jnp.broadcast_to(fields[:, None, :], (n, r, 3))
 
             def body(carry, xs):
-                st, f = carry
+                states, ffs, table, nbh = carry
                 k, temp, bfield = xs
+
+                def do_rebuild(c):
+                    states, _ffs, _table, _nbh = c
+                    table2, nbh2, ffs2 = build_shared(states, bfield)
+                    return states, ffs2, table2, nbh2
+
+                trip = jnp.any(jax.vmap(
+                    lambda p: needs_rebuild(table, p, box0, skin))(states.pos))
+                states, ffs, table, nbh = jax.lax.cond(
+                    trip, do_rebuild, lambda c: c, (states, ffs, table, nbh))
                 keys = jax.vmap(lambda i: jax.random.fold_in(k, i))(
                     jnp.arange(r))
-                return vstep(st, f, keys, temp, bfield), None
+                states, ffs, nbh = vstep(states, ffs, nbh, keys, temp, bfield)
+                return (states, ffs, table, nbh), None
 
             keys = jax.random.split(key, n)
-            (states, ffs), _ = jax.lax.scan(body, (states, ffs),
-                                            (keys, temps, fields))
+            (states, ffs, table, nbh), _ = jax.lax.scan(
+                body, (states, ffs, table, nbh), (keys, temps, fields))
             q, mz, lam, e = jax.vmap(diag_one)(states, ffs)
-            return states, ffs, (q, mz, lam, e)
+            return states, ffs, table, nbh, (q, mz, lam, e)
 
         self._chunk = chunk
-        if init_field is not None or self._ffs is None:
-            f0 = (jnp.zeros((r, 3), self.states.pos.dtype)
-                  if init_field is None else init_field)
-            self._ffs = self._veval(self.states.pos, self.states.spin, f0)
+
+        # initial shared table + blocks + forces (zero field; run() re-
+        # evaluates at the protocol's starting field)
+        f0 = jnp.zeros((r, 3), self.states.pos.dtype)
+        if self.table is not None:
+            self._nbh = shared_blocks(self.table, self.states.pos)
+            self._ffs = self._vcompute(self._nbh.dr, self.states.spin, f0,
+                                       self._nbh)
+        else:
+            self.table, self._nbh, self._ffs = build_shared(self.states, f0)
 
     # ------------------------------------------------------------------
     def shard(self, devices=None) -> "ReplicaEnsemble":
@@ -206,6 +258,7 @@ class ReplicaEnsemble:
             tree)
         self.states = put(self.states)
         self._ffs = put(self._ffs)
+        self._nbh = self._nbh._replace(dr=put(self._nbh.dr))
         return self
 
     # ------------------------------------------------------------------
@@ -235,12 +288,17 @@ class ReplicaEnsemble:
                                  "temperature ladder")
             ladder_j = jnp.asarray(ladder[0])
 
-        # re-evaluate forces at the protocol's starting field (the
-        # construction-time ffs were computed at zero field, and a previous
-        # run() may have left forces from a different schedule)
-        self._ffs = self._veval(
-            self.states.pos, self.states.spin,
-            jnp.broadcast_to(fsched.at(self.time), (r, 3)))
+        # refresh dr at the CURRENT positions (the caller may have nudged
+        # ``states`` between runs; sub-half-skin moves never trip the
+        # in-scan rebuild) and re-evaluate forces at the protocol's
+        # starting field (construction-time ffs were computed at zero
+        # field, and a previous run() may have used a different schedule)
+        self._nbh = self._nbh._replace(dr=jax.vmap(
+            lambda p: refresh_dr(self._nbh, p, self._box0).dr)(
+                self.states.pos))
+        self._ffs = self._vcompute(
+            self._nbh.dr, self.states.spin,
+            jnp.broadcast_to(fsched.at(self.time), (r, 3)), self._nbh)
 
         rows, times, temps_log = [], [], []
         n_acc = n_att = 0
@@ -249,11 +307,9 @@ class ReplicaEnsemble:
         while done < n_steps:
             n = min(chunk, n_steps - done)
             key, kc = jax.random.split(key)
-            if self._needs_rebuild():
-                self._refresh(build_table=True, init_field=jnp.broadcast_to(
-                    fsched.at(self.time), (r, 3)))
-            self.states, self._ffs, diag = self._chunk(
-                self.states, self._ffs, kc, tsched, fsched, n)
+            self.states, self._ffs, self.table, self._nbh, diag = \
+                self._chunk(self.states, self._ffs, self.table, self._nbh,
+                            kc, tsched, fsched, n)
             done += n
             n_chunks += 1
             rows.append(tuple(np.asarray(d) for d in diag))
@@ -264,6 +320,13 @@ class ReplicaEnsemble:
                 key, kx = jax.random.split(key)
                 self.states, self._ffs, acc, att = apply_exchange(
                     kx, self.states, self._ffs, ladder_j, parity)
+                # dr rows travel with their replica's configuration
+                # (apply_exchange permutes states/ffs with the same perm it
+                # derived; recompute dr from the permuted positions instead
+                # of threading the permutation out)
+                self._nbh = self._nbh._replace(dr=jax.vmap(
+                    lambda p: refresh_dr(self._nbh, p, self._box0).dr
+                )(self.states.pos))
                 n_acc += int(acc)
                 n_att += int(att)
                 parity ^= 1

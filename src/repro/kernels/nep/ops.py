@@ -7,6 +7,13 @@ Pipeline (one MD force call):
      in the distributed path this is the second halo exchange)
   3. K2: fused force + torque in one neighbor traversal
   4. Zeeman term added in closed form (external field is not learned)
+
+Step 0 is split out as the repo-wide gather -> compute contract
+(repro.md.neighbor.Neighborhood): ``nep_compute`` consumes pre-gathered
+blocks so the fused MD loop gathers positions once per drift and reuses the
+blocks across both spin half-steps and all midpoint iterations;
+``nep_energy_forces_field`` keeps the legacy whole-evaluation signature by
+gathering then computing.
 """
 from __future__ import annotations
 
@@ -19,7 +26,7 @@ from repro.core.descriptor import NEPSpinSpec
 from repro.core.potential import NEPSpinParams
 from repro.kernels.nep.kernel import (TILE_ATOMS, acc_keys, nep_atom_pass,
                                       nep_force_pass)
-from repro.md.neighbor import NeighborTable
+from repro.md.neighbor import NeighborTable, Neighborhood, gather_blocks
 from repro.utils import units
 
 
@@ -30,6 +37,57 @@ def _pad_to(x, n, axis=0):
     widths = [(0, 0)] * x.ndim
     widths[axis] = (0, pad)
     return jnp.pad(x, widths)
+
+
+@partial(jax.jit, static_argnames=("spec", "interpret"))
+def nep_compute(
+    spec: NEPSpinSpec,
+    params: NEPSpinParams,
+    nbh: Neighborhood,
+    spin: jax.Array,
+    types: jax.Array,
+    field: jax.Array | None = None,
+    moments: jax.Array | None = None,
+    interpret: bool = True,
+):
+    """Fused-kernel (E, F, H_eff) from pre-gathered neighbor blocks."""
+    n = spin.shape[0]
+    n_pad = -(-n // TILE_ATOMS) * TILE_ATOMS
+
+    sj = spin[nbh.idx]
+
+    amask = jnp.ones((n,), bool)
+    dr_p = _pad_to(nbh.dr, n_pad)
+    mask_p = _pad_to(nbh.mask, n_pad)
+    amask_p = _pad_to(amask, n_pad)
+    ti_p = _pad_to(types, n_pad)
+    tj_p = _pad_to(nbh.tj, n_pad)
+    si_p = _pad_to(spin, n_pad)
+    sj_p = _pad_to(sj, n_pad)
+
+    e, hdir, abar = nep_atom_pass(spec, params, dr_p, mask_p, amask_p,
+                                  ti_p, tj_p, si_p, sj_p,
+                                  interpret=interpret)
+
+    # gather neighbor adjoints (q_Fp exchange). Table indices are < n and
+    # padded rows gather row 0 harmlessly (masked out in K2).
+    idx_p = _pad_to(nbh.idx, n_pad)
+    abar_j = {k: v[idx_p] for k, v in abar.items()}
+
+    f, h2 = nep_force_pass(spec, params, dr_p, mask_p, ti_p, tj_p, si_p,
+                           sj_p, abar, abar_j, interpret=interpret)
+
+    energy = jnp.sum(e[:n])
+    force = f[:n]
+    heff = hdir[:n] + h2[:n]
+    if field is not None:
+        mom = moments[types] if moments is not None else jnp.ones((n,),
+                                                                  spin.dtype)
+        energy = energy - units.MU_B * jnp.sum(
+            mom[:, None] * spin * jnp.asarray(field, spin.dtype))
+        heff = heff + units.MU_B * mom[:, None] * jnp.asarray(field,
+                                                              spin.dtype)
+    return energy, force, heff
 
 
 @partial(jax.jit, static_argnames=("spec", "interpret"))
@@ -46,44 +104,6 @@ def nep_energy_forces_field(
     interpret: bool = True,
 ):
     """Fused-kernel evaluation of (E, F, H_eff). Matches the ref oracle."""
-    n = pos.shape[0]
-    n_pad = -(-n // TILE_ATOMS) * TILE_ATOMS
-
-    nbr_pos = pos[table.idx]
-    dr = nbr_pos - pos[:, None, :]
-    dr = dr - box * jnp.round(dr / box)
-    sj = spin[table.idx]
-    tj = types[table.idx]
-
-    amask = jnp.ones((n,), bool)
-    dr_p = _pad_to(dr, n_pad)
-    mask_p = _pad_to(table.mask, n_pad)
-    amask_p = _pad_to(amask, n_pad)
-    ti_p = _pad_to(types, n_pad)
-    tj_p = _pad_to(tj, n_pad)
-    si_p = _pad_to(spin, n_pad)
-    sj_p = _pad_to(sj, n_pad)
-
-    e, hdir, abar = nep_atom_pass(spec, params, dr_p, mask_p, amask_p,
-                                  ti_p, tj_p, si_p, sj_p,
-                                  interpret=interpret)
-
-    # gather neighbor adjoints (q_Fp exchange). Table indices are < n and
-    # padded rows gather row 0 harmlessly (masked out in K2).
-    idx_p = _pad_to(table.idx, n_pad)
-    abar_j = {k: v[idx_p] for k, v in abar.items()}
-
-    f, h2 = nep_force_pass(spec, params, dr_p, mask_p, ti_p, tj_p, si_p,
-                           sj_p, abar, abar_j, interpret=interpret)
-
-    energy = jnp.sum(e[:n])
-    force = f[:n]
-    heff = hdir[:n] + h2[:n]
-    if field is not None:
-        mom = moments[types] if moments is not None else jnp.ones((n,),
-                                                                  pos.dtype)
-        energy = energy - units.MU_B * jnp.sum(
-            mom[:, None] * spin * jnp.asarray(field, pos.dtype))
-        heff = heff + units.MU_B * mom[:, None] * jnp.asarray(field,
-                                                              pos.dtype)
-    return energy, force, heff
+    nbh = gather_blocks(pos, types, table, box)
+    return nep_compute(spec, params, nbh, spin, types, field, moments,
+                       interpret=interpret)

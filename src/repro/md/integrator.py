@@ -121,10 +121,16 @@ def _precession_rate(field: jax.Array, spin: jax.Array, cfg: IntegratorConfig,
 
 
 def _spin_half_step(
-    evaluate: EvalFn, pos: jax.Array, spin: jax.Array, ff: ForceField,
-    cfg: IntegratorConfig, key: jax.Array | None, temp, bfield,
+    field_eval: Callable[[jax.Array], ForceField], spin: jax.Array,
+    ff: ForceField, cfg: IntegratorConfig, key: jax.Array | None, temp,
 ) -> tuple[jax.Array, ForceField]:
-    """Advance spins by dt/2; optionally self-consistent midpoint iteration."""
+    """Advance spins by dt/2; optionally self-consistent midpoint iteration.
+
+    ``field_eval(spin) -> ForceField`` re-evaluates the potential at the
+    *current positions* - in the fused path it closes over one pre-gathered
+    :class:`~repro.md.neighbor.Neighborhood`, so every midpoint iteration
+    reuses the same neighbor blocks instead of re-gathering.
+    """
     half = 0.5 * cfg.dt
 
     def rotate(field, s0):
@@ -142,7 +148,7 @@ def _spin_half_step(
         nrm = jnp.linalg.norm(spin, axis=-1, keepdims=True)
         mid = mid / jnp.maximum(jnp.linalg.norm(mid, axis=-1, keepdims=True),
                                 1e-30) * nrm
-        ff_mid = evaluate(pos, mid, bfield)
+        ff_mid = field_eval(mid)
         s_next = rotate(ff_mid.field, spin)
         if cfg.midpoint_mixing < 1.0:
             s_next = (cfg.midpoint_mixing * s_next
@@ -203,30 +209,34 @@ def _adapt_eval(evaluate: EvalFn) -> EvalFn:
     return ev
 
 
-def make_step(
-    evaluate: EvalFn,
+def make_fused_step(
+    gather: Callable,           # (pos, nbh) -> nbh (refresh after drift)
+    compute: Callable,          # (nbh, spin, types, field) -> ForceField
     cfg: IntegratorConfig,
     masses: jax.Array,          # (n_types,)
     magnetic: jax.Array,        # (n_types,) bool
     atom_mask: jax.Array | None = None,  # empty-slot mask (domain decomp)
 ):
-    """Build the jit-able coupled step:
+    """Build the gather-once coupled step:
 
-        (state, ff, key[, temperature[, field]]) -> (state, ff)
+        (state, ff, nbh, key[, temperature[, field]]) -> (state, ff, nbh)
+
+    The step owns the neighbor-block lifecycle *within* a step: the incoming
+    ``nbh`` (gathered at ``state.pos``) serves the first spin half-step and
+    all of its midpoint iterations; after the position drift, ``gather``
+    refreshes it exactly once and the refreshed block serves the force
+    recompute, the second spin half-step (+ iterations), and the
+    longitudinal channel.  Table rebuild remains the caller's responsibility
+    (repro.md.simulate runs it in-scan behind a ``lax.cond``).
 
     ``temperature`` (scalar K) and ``field`` ((3,) Tesla) are optional
     runtime overrides of the ``IntegratorConfig`` constants; protocols and
     replica ensembles thread per-step / per-replica values through them.
-    ``evaluate`` must close over types/neighbor-table/box; it receives the
-    runtime field as a third argument (legacy two-argument evaluators keep
-    working and ignore it).  Neighbor rebuild is the caller's responsibility
-    (repro.md.simulate).  Works on flat (N, ...) arrays AND cell-blocked
-    (CX,CY,CZ,K, ...) domain arrays (all updates are elementwise);
-    ``atom_mask`` freezes empty slots.
+    Works on flat (N, ...) arrays AND cell-blocked (CX,CY,CZ,K, ...) domain
+    arrays (all updates are elementwise); ``atom_mask`` freezes empty slots.
     """
-    ev = _adapt_eval(evaluate)
 
-    def step(state: SpinLatticeState, ff: ForceField, key: jax.Array,
+    def step(state: SpinLatticeState, ff: ForceField, nbh, key: jax.Array,
              temperature=None, field=None):
         k1, k2, k3, k4, k5 = jax.random.split(key, 5)
         types_c = jnp.maximum(state.types, 0)
@@ -242,6 +252,9 @@ def make_step(
         temp = cfg.temperature if temperature is None else \
             jnp.maximum(temperature, 0.0)
 
+        def field_eval(nb):
+            return lambda s: compute(nb, s, state.types, field)
+
         vel = state.vel
         vmask = (atom_mask[..., None] if atom_mask is not None else
                  jnp.ones_like(vel, dtype=bool))
@@ -253,8 +266,8 @@ def make_step(
             vel = vel + 0.5 * dt * ff.force / m * units.FORCE2ACC
         # spin half step (scheduled last among half-step ops: may re-evaluate)
         spin, ff = _spin_half_step(
-            ev, state.pos, state.spin, ff, cfg,
-            k2 if stochastic else None, temp, field)
+            field_eval(nbh), state.spin, ff, cfg,
+            k2 if stochastic else None, temp)
         spin = jnp.where(mag[..., None], spin, state.spin)
         # A: drift
         if cfg.frozen_lattice:
@@ -262,11 +275,12 @@ def make_step(
         else:
             pos = state.pos + dt * vel
             pos = pos - state.box * jnp.floor(pos / state.box)  # wrap PBC
-        # recompute at new positions
-        ff = ev(pos, spin, field)
+        # recompute at new positions: the ONE gather of this step
+        nbh = gather(pos, nbh)
+        ff = compute(nbh, spin, state.types, field)
         # spin half step
         spin2, ff = _spin_half_step(
-            ev, pos, spin, ff, cfg, k3 if stochastic else None, temp, field)
+            field_eval(nbh), spin, ff, cfg, k3 if stochastic else None, temp)
         spin = jnp.where(mag[..., None], spin2, spin)
         spin = _longitudinal_step(spin, ff, cfg,
                                   k4 if stochastic else None, temp, mag)
@@ -279,6 +293,37 @@ def make_step(
 
         return SpinLatticeState(pos=pos, vel=vel, spin=spin,
                                 types=state.types, box=state.box,
-                                step=state.step + 1), ff
+                                step=state.step + 1), ff, nbh
+
+    return step
+
+
+def make_step(
+    evaluate: EvalFn,
+    cfg: IntegratorConfig,
+    masses: jax.Array,          # (n_types,)
+    magnetic: jax.Array,        # (n_types,) bool
+    atom_mask: jax.Array | None = None,  # empty-slot mask (domain decomp)
+):
+    """Build the jit-able coupled step (un-split evaluation):
+
+        (state, ff, key[, temperature[, field]]) -> (state, ff)
+
+    ``evaluate`` must close over types/neighbor-table/box; it receives the
+    runtime field as a third argument (legacy two-argument evaluators keep
+    working and ignore it).  Implemented as :func:`make_fused_step` with the
+    positions themselves standing in for the gathered blocks, which makes it
+    graph-identical to the pre-fusion integrator.
+    """
+    ev = _adapt_eval(evaluate)
+    fstep = make_fused_step(
+        gather=lambda pos, _nbh: pos,
+        compute=lambda nbh, spin, types, field: ev(nbh, spin, field),
+        cfg=cfg, masses=masses, magnetic=magnetic, atom_mask=atom_mask)
+
+    def step(state: SpinLatticeState, ff: ForceField, key: jax.Array,
+             temperature=None, field=None):
+        state, ff, _ = fstep(state, ff, state.pos, key, temperature, field)
+        return state, ff
 
     return step

@@ -16,13 +16,33 @@ Both return a ``NeighborTable`` with per-atom index lists + validity mask.
 Crystalline solids (the paper's regime) do not diffuse, so the table is
 reusable across many steps; ``needs_rebuild`` implements the standard
 half-skin displacement test.
+
+The gather -> compute split (the fused MD hot loop, DESIGN: one gather per
+position change):
+
+* ``gather_blocks`` packs everything a potential needs that depends on the
+  *table* (idx, mask, neighbor types) plus the position-dependent ``dr``
+  block into a :class:`Neighborhood`;
+* ``refresh_dr`` refreshes only ``dr`` after a drift (the table-static
+  blocks are reused);
+* potentials evaluate from the ``Neighborhood`` alone (``compute`` methods),
+  differentiating w.r.t. ``dr`` and assembling atomic forces with
+  ``assemble_pair_forces`` - so the two spin half-steps and every midpoint
+  iteration at unchanged positions reuse one gathered block instead of
+  re-gathering per evaluation.
+
+``cell_order`` returns the linked-cell-bin permutation used by the fused
+driver to keep neighbor gathers near-contiguous (the TPU/JAX analogue of the
+paper's NUMA-aware first-touch layout).
 """
 from __future__ import annotations
 
+from functools import partial
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 class NeighborTable(NamedTuple):
@@ -56,14 +76,11 @@ def dense_neighbor_table(
     neg = jnp.where(within, -d2, -jnp.inf)
     vals, idx = jax.lax.top_k(neg, min(capacity, n))
     mask = vals > -jnp.inf
-    idx = jnp.where(mask, idx, jnp.arange(n)[:, None])  # self-pad invalid slots
     if idx.shape[1] < capacity:  # pad columns if capacity > n
         pad = capacity - idx.shape[1]
-        idx = jnp.pad(idx, ((0, 0), (0, pad)), constant_values=0)
-        idx = jnp.where(mask if mask.shape[1] == capacity else
-                        jnp.pad(mask, ((0, 0), (0, pad))), idx,
-                        jnp.arange(n)[:, None])
+        idx = jnp.pad(idx, ((0, 0), (0, pad)))
         mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    idx = jnp.where(mask, idx, jnp.arange(n)[:, None])  # self-pad invalid slots
     return NeighborTable(idx=idx.astype(jnp.int32), mask=mask,
                          r0=pos, cutoff=jnp.asarray(rc))
 
@@ -93,8 +110,132 @@ def gather_neighbors(
 
 
 # ---------------------------------------------------------------------------
+# Gather -> compute split (fused hot loop)
+# ---------------------------------------------------------------------------
+
+class Neighborhood(NamedTuple):
+    """Pre-gathered neighbor blocks consumed by potential ``compute``.
+
+    ``idx``/``mask``/``tj`` are table-static (valid until the next rebuild);
+    ``dr`` depends on positions and is refreshed once per drift by
+    :func:`refresh_dr`.  Spins are gathered inside ``compute`` (they change
+    within a step, positions do not).
+    """
+
+    idx: jax.Array   # (N, M) int32 neighbor indices (self-padded)
+    mask: jax.Array  # (N, M) bool
+    tj: jax.Array    # (N, M) neighbor types
+    dr: jax.Array    # (N, M, 3) min-imaged r_j - r_i
+
+
+def gather_blocks(pos: jax.Array, types: jax.Array, table: NeighborTable,
+                  box: jax.Array) -> Neighborhood:
+    """Full gather after a table (re)build."""
+    dr = pos[table.idx] - pos[:, None, :]
+    dr = dr - box * jnp.round(dr / box)
+    return Neighborhood(idx=table.idx, mask=table.mask,
+                        tj=types[table.idx], dr=dr)
+
+
+def refresh_dr(nbh: Neighborhood, pos: jax.Array,
+               box: jax.Array) -> Neighborhood:
+    """Refresh only the position-dependent block (one gather per drift)."""
+    dr = pos[nbh.idx] - pos[:, None, :]
+    dr = dr - box * jnp.round(dr / box)
+    return nbh._replace(dr=dr)
+
+
+def compute_from_blocks(etot, nbh: Neighborhood, spin: jax.Array):
+    """The gather-once evaluation contract, in one place.
+
+    ``etot(dr, spin) -> ()`` is the potential's total energy from the
+    pre-gathered ``dr`` block; returns ``(E, F, H_eff)`` with forces
+    assembled from dE/ddr via the explicit pair scatter and the effective
+    field as -dE/dS.  Both shipped potentials' ``compute`` methods route
+    through this so the force-assembly convention cannot diverge.
+    """
+    e, (g_dr, g_s) = jax.value_and_grad(etot, argnums=(0, 1))(nbh.dr, spin)
+    return e, assemble_pair_forces(g_dr, nbh), -g_s
+
+
+def assemble_pair_forces(g_dr: jax.Array, nbh: Neighborhood) -> jax.Array:
+    """Atomic forces from dE/ddr (N, M, 3).
+
+    With ``dr_im = pos[idx[i,m]] - pos[i]``, atom i feels the direct term
+    ``+sum_m g[i,m]`` and the reaction ``-g[k,m]`` from every pair (k, m)
+    that lists it as the neighbor - the scatter-add XLA would emit for the
+    backward pass of the position gather, made explicit.
+    """
+    g = jnp.where(nbh.mask[..., None], g_dr, 0.0)
+    direct = jnp.sum(g, axis=1)
+    react = jnp.zeros_like(direct).at[nbh.idx.reshape(-1)].add(
+        g.reshape(-1, g.shape[-1]))
+    return direct - react
+
+
+# ---------------------------------------------------------------------------
 # Linked-cell construction (scalable path)
 # ---------------------------------------------------------------------------
+
+def _cell_coords(pos: jax.Array, box: jax.Array,
+                 n_cells: tuple[int, int, int]):
+    """Per-atom integer cell coordinates (ci, cj, ck) and flat cell id."""
+    cx, cy, cz = n_cells
+    frac = pos / box
+    ci = jnp.clip((frac[:, 0] * cx).astype(jnp.int32), 0, cx - 1)
+    cj = jnp.clip((frac[:, 1] * cy).astype(jnp.int32), 0, cy - 1)
+    ck = jnp.clip((frac[:, 2] * cz).astype(jnp.int32), 0, cz - 1)
+    return ci, cj, ck, (ci * cy + cj) * cz + ck
+
+
+def grid_shape(box, cutoff: float, skin: float = 0.5) -> tuple[int, int, int]:
+    """Linked-cell grid dims for a (concrete) box: cells >= cutoff+skin wide.
+
+    Returns dims only; callers must fall back to the dense table when any
+    dim is < 3 (the 27-cell stencil would wrap onto itself).
+    """
+    rc = cutoff + skin
+    return tuple(int(x) for x in np.maximum(np.floor(np.asarray(box) / rc),
+                                            1).astype(int))
+
+
+def make_table_builder(box, cutoff: float, capacity: int,
+                       cell_capacity: int = 24, skin: float = 0.5,
+                       use_cell_list: bool = True):
+    """Geometry-static builder closure for in-scan rebuilds.
+
+    Resolves everything that must be static under jit from a *concrete*
+    ``box``: returns ``(build, n_cells, use_cell)`` where
+    ``build(pos, box) -> NeighborTable`` is the linked-cell construction
+    with pinned grid dims when the box fits the 27-stencil (and
+    ``use_cell_list``), else the dense fallback.  Shared by the fused
+    ``Simulation`` driver and the replica ensemble so the fallback rule
+    cannot diverge between them.
+    """
+    n_cells = grid_shape(np.asarray(box), cutoff, skin)
+    use_cell = use_cell_list and min(n_cells) >= 3
+    if use_cell:
+        build = partial(cell_neighbor_table, cutoff=cutoff,
+                        capacity=capacity, cell_capacity=cell_capacity,
+                        skin=skin, n_cells=n_cells)
+    else:
+        build = partial(dense_neighbor_table, cutoff=cutoff,
+                        capacity=capacity, skin=skin)
+    return build, n_cells, use_cell
+
+
+def cell_order(pos: jax.Array, box: jax.Array,
+               n_cells: tuple[int, int, int]) -> jax.Array:
+    """Permutation sorting atoms by linked-cell bin (cell-major layout).
+
+    Applying it to the state rows makes each atom's stencil neighborhood
+    near-contiguous in memory, so the (N, M) table gathers of the hot loop
+    hit clustered rows - the JAX analogue of the paper's NUMA-aware layout.
+    Stable sort: atoms within a cell keep their relative order.
+    """
+    *_, flat = _cell_coords(pos, box, n_cells)
+    return jnp.argsort(flat, stable=True).astype(jnp.int32)
+
 
 def bin_atoms(pos: jax.Array, box: jax.Array, n_cells: tuple[int, int, int],
               capacity: int):
@@ -106,11 +247,7 @@ def bin_atoms(pos: jax.Array, box: jax.Array, n_cells: tuple[int, int, int],
     assert the flag).
     """
     cx, cy, cz = n_cells
-    frac = pos / box
-    ci = jnp.clip((frac[:, 0] * cx).astype(jnp.int32), 0, cx - 1)
-    cj = jnp.clip((frac[:, 1] * cy).astype(jnp.int32), 0, cy - 1)
-    ck = jnp.clip((frac[:, 2] * cz).astype(jnp.int32), 0, cz - 1)
-    flat = (ci * cy + cj) * cz + ck
+    *_, flat = _cell_coords(pos, box, n_cells)
     n = pos.shape[0]
     # rank of each atom within its cell via sort
     order = jnp.argsort(flat, stable=True)
@@ -130,21 +267,28 @@ def bin_atoms(pos: jax.Array, box: jax.Array, n_cells: tuple[int, int, int],
 def cell_neighbor_table(
     pos: jax.Array, box: jax.Array, cutoff: float, capacity: int,
     cell_capacity: int = 24, skin: float = 0.5,
+    n_cells: tuple[int, int, int] | None = None,
 ) -> NeighborTable:
     """Linked-cell neighbor table: bin into cells >= cutoff+skin wide, then
-    search the 27-cell stencil and keep the ``capacity`` nearest neighbors."""
+    search the 27-cell stencil and keep the ``capacity`` nearest neighbors.
+
+    ``n_cells`` pins the (static) grid dims so the build can run *inside* a
+    jitted scan with a traced ``box`` (the fused driver's in-graph rebuild);
+    when omitted it is derived from the concrete box as before.
+    """
+    if n_cells is None:
+        n_cells = grid_shape(box, cutoff, skin)
+        if min(n_cells) < 3:
+            # stencil would wrap onto itself; fall back to dense
+            return dense_neighbor_table(pos, box, cutoff, capacity, skin)
+    elif min(n_cells) < 3:
+        raise ValueError(f"n_cells {n_cells} too small for the 27-stencil; "
+                         "use dense_neighbor_table")
     rc = cutoff + skin
-    n_cells = tuple(int(x) for x in jnp.maximum(jnp.floor(box / rc), 1))
     cx, cy, cz = n_cells
-    if cx < 3 or cy < 3 or cz < 3:
-        # stencil would wrap onto itself; fall back to dense
-        return dense_neighbor_table(pos, box, cutoff, capacity, skin)
     grid, gmask, _ = bin_atoms(pos, box, n_cells, cell_capacity)
     n = pos.shape[0]
-    frac = pos / box
-    ci = jnp.clip((frac[:, 0] * cx).astype(jnp.int32), 0, cx - 1)
-    cj = jnp.clip((frac[:, 1] * cy).astype(jnp.int32), 0, cy - 1)
-    ck = jnp.clip((frac[:, 2] * cz).astype(jnp.int32), 0, cz - 1)
+    ci, cj, ck, _ = _cell_coords(pos, box, n_cells)
 
     # candidates: 27 stencil cells x cell_capacity
     offs = jnp.array([(a, b, c) for a in (-1, 0, 1) for b in (-1, 0, 1)

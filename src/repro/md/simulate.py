@@ -1,30 +1,83 @@
-"""High-level simulation driver: neighbor-table lifecycle + stepping.
+"""High-level simulation driver: fused in-scan neighbor lifecycle + stepping.
 
-The jit boundary is a ``lax.scan`` over a chunk of steps with a frozen
-neighbor table; between chunks the half-skin displacement test decides
-whether to rebuild (host-side).  Crystalline FeGe barely diffuses, so tables
-survive hundreds of steps - the static-topology fast path described in
-DESIGN.md.
+The fused hot loop (default whenever the potential exposes the gather-once
+``compute`` surface) keeps an entire chunk of steps inside ONE compiled
+``lax.scan``:
+
+* the half-skin rebuild test runs at every step *in-graph*, behind a
+  ``lax.cond`` whose taken branch rebuilds the fixed-shape
+  :class:`~repro.md.neighbor.NeighborTable`, re-gathers the
+  :class:`~repro.md.neighbor.Neighborhood` blocks, and re-evaluates forces -
+  so the step function compiles once per geometry instead of once per
+  rebuild, and chunks dispatch with **no host round-trip**;
+* each step gathers neighbor blocks once (after the drift) and reuses them
+  across both spin half-steps and every midpoint iteration
+  (:func:`repro.md.integrator.make_fused_step`);
+* on rebuild, atoms are optionally re-sorted by linked-cell bin
+  (``cell_order``, the TPU/JAX analogue of the paper's NUMA-aware layout) so
+  table gathers hit near-contiguous rows; the inverse permutation is applied
+  at observation boundaries, so ``sim.state`` is always in the original atom
+  order;
+* per-chunk diagnostics (potential/kinetic energy, magnetization,
+  topological charge) are reduced inside the compiled chunk and surfaced as
+  ``sim.trace`` - no host callbacks needed on the hot path.
+
+The pre-fusion driver (host-side skin test between chunks, recompile per
+rebuild) is retained as ``fused=False`` - it is the reference path for
+parity tests and the baseline for ``benchmarks/md_loop.py``, and the only
+path for potentials that implement ``energy_forces_field`` but not
+``compute``.
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any, Callable
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.md.integrator import ForceField, IntegratorConfig, make_step
-from repro.md.neighbor import (NeighborTable, dense_neighbor_table,
-                               cell_neighbor_table, needs_rebuild)
-from repro.md.state import SpinLatticeState
+from repro.md.analysis import magnetization, topological_charge
+from repro.md.integrator import (ForceField, IntegratorConfig,
+                                 make_fused_step, make_step)
+from repro.md.neighbor import (NeighborTable, Neighborhood,
+                               cell_neighbor_table, cell_order,
+                               dense_neighbor_table, gather_blocks,
+                               make_table_builder, needs_rebuild, refresh_dr)
+from repro.md.state import SpinLatticeState, kinetic_energy
+
+
+class FusedCarry(NamedTuple):
+    """Device-resident loop state of the fused driver (the scan carry)."""
+
+    state: SpinLatticeState   # hot (possibly cell-ordered) row order
+    ff: ForceField
+    table: NeighborTable
+    nbh: Neighborhood
+    perm: jax.Array           # (N,) int32: hot row -> original atom id
+    n_rebuilds: jax.Array     # () int32 in-scan rebuild count
+
+
+class ChunkTrace(NamedTuple):
+    """Per-chunk diagnostics reduced inside the compiled chunk (C chunks)."""
+
+    time: np.ndarray           # (C,) ps at chunk ends
+    energy: np.ndarray         # (C,) potential energy [eV]
+    kinetic: np.ndarray        # (C,) lattice kinetic energy [eV]
+    magnetization: np.ndarray  # (C, 3) mean spin over magnetic sites
+    charge: np.ndarray         # (C,) Berg-Luscher topological charge
+
+
+def _permute_atoms(state: SpinLatticeState, order) -> SpinLatticeState:
+    return state._replace(pos=state.pos[order], vel=state.vel[order],
+                          spin=state.spin[order], types=state.types[order])
 
 
 @dataclasses.dataclass
 class Simulation:
-    potential: Any                     # .energy_forces_field(pos,spin,types,table,box,field)
+    potential: Any                     # .compute(nbh,spin,types,field) and/or
+                                       # .energy_forces_field(pos,spin,types,table,box,field)
     cfg: IntegratorConfig
     state: SpinLatticeState
     masses: jax.Array                  # (n_types,)
@@ -34,18 +87,170 @@ class Simulation:
     skin: float = 0.5
     field: jax.Array | None = None     # (3,) Tesla
     use_cell_list: bool = False
+    cell_capacity: int = 24
+    fused: bool | None = None          # None -> fused iff potential.compute
+    cell_order: bool | None = None     # cell-ordered layout; None -> cell list
+    diag_grid: tuple[int, int] = (32, 32)
     table: NeighborTable | None = None
+    trace: ChunkTrace | None = None
     _step_chunk: Callable | None = None
     _ff: ForceField | None = None
 
     def __post_init__(self):
-        self._refresh(build_table=self.table is None)
+        self._fused = (hasattr(self.potential, "compute")
+                       if self.fused is None else self.fused)
+        self._legacy_rebuilds = 0
+        if self._fused:
+            if not hasattr(self.potential, "compute"):
+                raise ValueError("fused=True requires a potential with the "
+                                 "gather-once .compute() surface")
+            self._setup_fused()
+        else:
+            self._reorder = False
+            self._refresh(build_table=self.table is None)
 
-    # ------------------------------------------------------------------
+    # ==================================================================
+    # fused path
+    # ==================================================================
+    def _setup_fused(self):
+        """Compile-once setup: everything geometry-static is resolved here."""
+        build, n_cells, use_cell = make_table_builder(
+            self.state.box, self.cutoff, self.capacity, self.cell_capacity,
+            self.skin, self.use_cell_list)
+        self._reorder = (self.cell_order if self.cell_order is not None
+                         else use_cell)
+
+        potential = self.potential
+        masses, magnetic, skin = self.masses, self.magnetic, self.skin
+        box0, reorder, diag_grid = self.state.box, self._reorder, self.diag_grid
+
+        def compute_ff(nbh, spin, types, field):
+            return ForceField(*potential.compute(nbh, spin, types, field))
+
+        def rebuild(state, perm, field):
+            """In-graph: (re)order atoms, rebuild table, gather, evaluate."""
+            if reorder:
+                order = cell_order(state.pos, state.box, n_cells)
+                state = _permute_atoms(state, order)
+                perm = perm[order]
+            table = build(state.pos, state.box)
+            nbh = gather_blocks(state.pos, state.types, table, state.box)
+            ff = compute_ff(nbh, state.spin, state.types, field)
+            return state, ff, table, nbh, perm
+
+        step = make_fused_step(
+            gather=lambda pos, nbh: refresh_dr(nbh, pos, box0),
+            compute=compute_ff, cfg=self.cfg, masses=masses,
+            magnetic=magnetic)
+
+        def diag(state, ff):
+            mag = magnetic[jnp.maximum(state.types, 0)]
+            return (ff.energy, kinetic_energy(state, masses),
+                    magnetization(state.spin, mask=mag),
+                    topological_charge(state.pos, state.spin, state.box,
+                                       grid=diag_grid))
+
+        # ``field`` is a chunk argument (not baked into the closure) so
+        # reassigning ``sim.field`` between runs is honored, as on the
+        # legacy path (None <-> array flips retrace once; values don't)
+        @partial(jax.jit, static_argnames=("n",))
+        def chunk(carry: FusedCarry, key, field, n: int):
+            def body(c, k):
+                def do_rebuild(c):
+                    st, ff, tab, nbh, perm = rebuild(c.state, c.perm, field)
+                    return FusedCarry(st, ff, tab, nbh, perm,
+                                      c.n_rebuilds + 1)
+                trip = needs_rebuild(c.table, c.state.pos, box0, skin)
+                c = jax.lax.cond(trip, do_rebuild, lambda c: c, c)
+                st, ff, nbh = step(c.state, c.ff, c.nbh, k, None, field)
+                return FusedCarry(st, ff, c.table, nbh, c.perm,
+                                  c.n_rebuilds), None
+            keys = jax.random.split(key, n)
+            carry, _ = jax.lax.scan(body, carry, keys)
+            return carry, diag(carry.state, carry.ff)
+
+        self._chunk_fn = chunk
+        self._compute_ff = compute_ff
+        self._rebuild = rebuild
+        self._init_carry(table=self.table)
+
+    def _restart_if_swapped(self):
+        """Honor a caller-swapped ``sim.state`` (legacy-path parity).
+
+        A swap with the same box restarts the carry; a changed box is a new
+        geometry, so the compile-once statics (grid dims, builder, closures)
+        are re-derived (one retrace, exactly as at construction).
+        """
+        if self.state is self._obs_state:
+            return
+        if np.array_equal(np.asarray(self.state.box),
+                          np.asarray(self._carry.state.box)):
+            self._init_carry()
+        else:
+            self.table = None
+            self._setup_fused()
+
+    def _init_carry(self, table: NeighborTable | None = None):
+        """(Re)build the hot carry from ``self.state``/``self.field``."""
+        n = self.state.pos.shape[0]
+        perm0 = jnp.arange(n, dtype=jnp.int32)
+        # in-scan rebuild count is cumulative across carry restarts
+        count0 = (self._carry.n_rebuilds if getattr(self, "_carry", None)
+                  is not None else jnp.asarray(0, jnp.int32))
+        if table is not None:
+            # honor a caller-provided table (assumed to match the row order)
+            nbh = gather_blocks(self.state.pos, self.state.types, table,
+                                self.state.box)
+            ff = self._compute_ff(nbh, self.state.spin, self.state.types,
+                                  self.field)
+            self._carry = FusedCarry(self.state, ff, table, nbh,
+                                     perm0, count0)
+        else:
+            st, ff, tab, nbh, perm = self._rebuild(self.state, perm0,
+                                                   self.field)
+            self._carry = FusedCarry(st, ff, tab, nbh, perm, count0)
+        self._sync_observation()
+
+    def _sync_observation(self):
+        """Map the hot (cell-ordered) carry back to original atom order.
+
+        Everything observable - ``state``, forces, and the ``table`` - comes
+        back in the ORIGINAL atom order, so the legacy evaluation surface
+        (``potential.energy_forces_field(..., sim.table, ...)``) stays
+        consistent with ``sim.state``.
+        """
+        c = self._carry
+        inv = jnp.argsort(c.perm)
+        self.state = _permute_atoms(c.state, inv)
+        self._ff = ForceField(energy=c.ff.energy, force=c.ff.force[inv],
+                              field=c.ff.field[inv])
+        if self._reorder:
+            self.table = NeighborTable(idx=c.perm[c.table.idx[inv]],
+                                       mask=c.table.mask[inv],
+                                       r0=c.table.r0[inv],
+                                       cutoff=c.table.cutoff)
+        else:
+            self.table = c.table
+        self._obs_state = self.state
+
+    @property
+    def n_rebuilds(self) -> int:
+        """In-scan neighbor-table rebuilds so far (fused path)."""
+        if self._fused:
+            return int(self._carry.n_rebuilds)
+        return self._legacy_rebuilds
+
+    # ==================================================================
+    # legacy (pre-fusion) path: host-side skin test, recompile per rebuild
+    # ==================================================================
     def _build_table(self, pos) -> NeighborTable:
-        build = cell_neighbor_table if self.use_cell_list else dense_neighbor_table
-        return build(pos, self.state.box, self.cutoff, self.capacity,
-                     skin=self.skin)
+        if self.use_cell_list:
+            return cell_neighbor_table(pos, self.state.box, self.cutoff,
+                                       self.capacity,
+                                       cell_capacity=self.cell_capacity,
+                                       skin=self.skin)
+        return dense_neighbor_table(pos, self.state.box, self.cutoff,
+                                    self.capacity, skin=self.skin)
 
     def _make_eval(self, table):
         def evaluate(pos, spin, field=None):
@@ -76,17 +281,58 @@ class Simulation:
             self.state.pos, self.state.spin, self.state.types, self.table,
             self.state.box, self.field))
 
-    # ------------------------------------------------------------------
+    # ==================================================================
     def run(self, n_steps: int, key: jax.Array, chunk: int = 20,
             callback: Callable[[SpinLatticeState, ForceField], None] | None = None):
         """Advance ``n_steps``; rebuilds the neighbor table when the skin
-        test trips. Returns the final state."""
+        test trips (in-scan on the fused path). Returns the final state.
+        On the fused path, per-chunk diagnostics land in ``self.trace``
+        (the legacy path leaves it None - use ``callback`` there).
+
+        A ``callback`` receives the (observation-order) state and forces
+        after every chunk; note this forces a host sync per chunk, which the
+        fused path otherwise avoids entirely.
+        """
+        if not self._fused:
+            return self._run_legacy(n_steps, key, chunk, callback)
+
+        self._restart_if_swapped()
+        carry = self._carry
+        t0 = float(self.state.step) * self.cfg.dt
+        rows, times = [], []
+        done = 0
+        while done < n_steps:
+            n = min(chunk, n_steps - done)
+            key, sub = jax.random.split(key)
+            carry, d = self._chunk_fn(carry, sub, self.field, n)
+            done += n
+            rows.append(d)
+            times.append(t0 + done * self.cfg.dt)
+            if callback is not None:
+                self._carry = carry
+                self._sync_observation()
+                callback(self.state, self._ff)
+                self._restart_if_swapped()  # callback may perturb the state
+                carry = self._carry
+        self._carry = carry
+        self._sync_observation()
+        if rows:
+            self.trace = ChunkTrace(
+                time=np.asarray(times),
+                energy=np.asarray([r[0] for r in rows]),
+                kinetic=np.asarray([r[1] for r in rows]),
+                magnetization=np.stack([np.asarray(r[2]) for r in rows]),
+                charge=np.asarray([r[3] for r in rows]))
+        return self.state
+
+    def _run_legacy(self, n_steps, key, chunk, callback):
         done = 0
         while done < n_steps:
             n = min(chunk, n_steps - done)
             key, sub = jax.random.split(key)
             if bool(needs_rebuild(self.table, self.state.pos, self.state.box,
                                   self.skin)):
+                self._legacy_rebuilds += 1
                 self._refresh()
             self.state, self._ff = self._step_chunk(self.state, self._ff,
                                                     sub, n)

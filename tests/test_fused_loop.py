@@ -1,0 +1,220 @@
+"""Fused hot-loop correctness: parity vs the pre-fusion driver.
+
+The acceptance-criterion tests for the in-scan neighbor lifecycle:
+
+* f64 trajectory parity (subprocess, like test_precision.py) between the
+  fused driver (in-scan ``lax.cond`` rebuild, gather-once evaluation) and
+  the legacy driver (host-side skin test, whole-evaluation autodiff) over
+  120 steps spanning several neighbor rebuilds, for BOTH potentials
+  (Heisenberg-DMI with midpoint iterations, and autodiff NEP-SPIN).
+  ``chunk=1`` pins both paths to the same per-step rebuild decision so the
+  comparison isolates the gather->compute split + in-graph rebuild.
+* exactly ONE compilation of the fused chunk across a run with >=3 in-scan
+  rebuilds (cache inspection on the jitted chunk).
+* cell-ordered layout: the inverse permutation restores the original atom
+  order exactly at observation boundaries, and the ordered trajectory
+  tracks the unordered one.
+* vmapped-replica parity: identical NVE replicas driven through the shared
+  in-scan rebuild stay bitwise identical and track a single-replica fused
+  ``Simulation``.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hamiltonian import HeisenbergDMIModel
+from repro.md.integrator import IntegratorConfig
+from repro.md.lattice import simple_cubic
+from repro.md.simulate import Simulation
+from repro.md.state import init_state
+
+_SCRIPT = r"""
+import jax
+jax.config.update("jax_enable_x64", True)
+import json
+import jax.numpy as jnp
+import numpy as np
+from repro.core.hamiltonian import HeisenbergDMIModel
+from repro.core.potential import NEPSpinPotential, init_params
+from repro.core.descriptor import NEPSpinSpec
+from repro.md.integrator import IntegratorConfig
+from repro.md.lattice import simple_cubic
+from repro.md.simulate import Simulation
+from repro.md.state import init_state
+
+STEPS = 120
+
+def build(potential, cfg, fused, key=7):
+    lat = simple_cubic()
+    st = init_state(lat, (3, 3, 3), temperature=400.0, spin_init="random",
+                    key=jax.random.PRNGKey(key))
+    assert st.pos.dtype == jnp.float64
+    return Simulation(potential=potential, cfg=cfg, state=st,
+                      masses=jnp.asarray(lat.masses),
+                      magnetic=jnp.asarray(lat.moments) > 0, cutoff=5.0,
+                      capacity=8, skin=0.2, fused=fused)
+
+def parity(name, potential, cfg):
+    # chunk=1: both paths run the half-skin test before every step, so the
+    # rebuild schedule is identical and the diff isolates the
+    # gather->compute split + in-graph table rebuild
+    sims = {f: build(potential, cfg, fused=f) for f in (True, False)}
+    for s in sims.values():
+        s.run(STEPS, jax.random.PRNGKey(1), chunk=1)
+    a, b = sims[True].state, sims[False].state
+    return {
+        "pos": float(jnp.abs(a.pos - b.pos).max()),
+        "vel": float(jnp.abs(a.vel - b.vel).max()),
+        "spin": float(jnp.abs(a.spin - b.spin).max()),
+        "rebuilds_fused": sims[True].n_rebuilds,
+        "rebuilds_legacy": sims[False].n_rebuilds,
+    }
+
+out = {}
+out["heisenberg"] = parity(
+    "heisenberg", HeisenbergDMIModel(d0=0.008, ka=0.001),
+    IntegratorConfig(dt=2e-3, midpoint=True, midpoint_iters=2))
+spec = NEPSpinSpec(l_max=2, n_ang=2, n_rad=4, n_spin=2, basis_size=6)
+params = init_params(spec, jax.random.PRNGKey(0), dtype=jnp.float64)
+out["nep"] = parity("nep", NEPSpinPotential(spec, params, use_kernel=False),
+                    IntegratorConfig(dt=2e-3))
+print("RESULT " + json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def parity_result():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    r = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=1800,
+                       cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))))
+    assert r.returncode == 0, r.stderr[-3000:]
+    line = [ln for ln in r.stdout.splitlines()
+            if ln.startswith("RESULT ")][0]
+    return json.loads(line[len("RESULT "):])
+
+
+@pytest.mark.parametrize("pot", ["heisenberg", "nep"])
+def test_fused_matches_legacy_f64(parity_result, pot):
+    """120-step f64 trajectory parity spanning in-scan rebuilds."""
+    res = parity_result[pot]
+    assert res["rebuilds_fused"] >= 1, res
+    assert res["rebuilds_fused"] == res["rebuilds_legacy"], res
+    for fld in ("pos", "vel", "spin"):
+        assert res[fld] < 1e-7, (pot, res)
+
+
+# ---------------------------------------------------------------- in-process
+
+def _fused_sim(cells=(4, 4, 4), skin=0.2, key=3, **kw):
+    lat = simple_cubic()
+    st = init_state(lat, cells, temperature=500.0, spin_init="random",
+                    key=jax.random.PRNGKey(key))
+    sim = Simulation(potential=HeisenbergDMIModel(d0=0.008),
+                     cfg=IntegratorConfig(dt=2e-3), state=st,
+                     masses=jnp.asarray(lat.masses),
+                     magnetic=jnp.asarray(lat.moments) > 0, cutoff=5.0,
+                     capacity=8, skin=skin, **kw)
+    return st, sim
+
+
+def test_single_compile_across_in_scan_rebuilds():
+    """The whole point of the fusion: >=3 rebuilds, ONE compiled chunk."""
+    _, sim = _fused_sim()
+    assert sim._fused
+    sim.run(150, jax.random.PRNGKey(0), chunk=10)
+    assert sim.n_rebuilds >= 3, f"only {sim.n_rebuilds} rebuilds"
+    assert sim._chunk_fn._cache_size() == 1
+
+
+def test_chunk_diagnostics_in_scan():
+    _, sim = _fused_sim()
+    sim.run(40, jax.random.PRNGKey(0), chunk=10)
+    tr = sim.trace
+    assert tr.energy.shape == (4,) and tr.magnetization.shape == (4, 3)
+    for f in (tr.time, tr.energy, tr.kinetic, tr.magnetization, tr.charge):
+        assert np.isfinite(f).all()
+    np.testing.assert_allclose(tr.time, sim.cfg.dt * np.arange(10, 50, 10),
+                               rtol=1e-6)
+
+
+def test_cell_order_roundtrip_exact():
+    """Construction applies the cell permutation to the hot carry; the
+    observed state must come back in the ORIGINAL atom order, exactly."""
+    st, sim = _fused_sim(cells=(4, 4, 4), use_cell_list=True,
+                         cell_order=True)
+    assert sim._reorder
+    # the hot carry is genuinely permuted ...
+    assert not np.array_equal(np.asarray(sim._carry.perm),
+                              np.arange(st.n_atoms))
+    # ... but observation is bitwise in input order
+    np.testing.assert_array_equal(np.asarray(sim.state.pos),
+                                  np.asarray(st.pos))
+    np.testing.assert_array_equal(np.asarray(sim.state.spin),
+                                  np.asarray(st.spin))
+    np.testing.assert_array_equal(np.asarray(sim.state.types),
+                                  np.asarray(st.types))
+
+
+def test_cell_order_trajectory_tracks_unordered():
+    _, plain = _fused_sim(cells=(4, 4, 4), use_cell_list=True,
+                          cell_order=False)
+    _, ordered = _fused_sim(cells=(4, 4, 4), use_cell_list=True,
+                            cell_order=True)
+    plain.run(30, jax.random.PRNGKey(0), chunk=10)
+    ordered.run(30, jax.random.PRNGKey(0), chunk=10)
+    assert ordered.n_rebuilds >= 1  # permutation re-derived in-scan
+    np.testing.assert_array_equal(np.asarray(ordered.state.types),
+                                  np.asarray(plain.state.types))
+    # f32 dynamics amplifies the permuted-reduction roundoff; row-for-row
+    # agreement at loose tolerance still catches any ordering bug (rows
+    # would differ by whole lattice constants)
+    np.testing.assert_allclose(np.asarray(ordered.state.pos),
+                               np.asarray(plain.state.pos), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(ordered.state.spin),
+                               np.asarray(plain.state.spin), atol=5e-2)
+
+
+def test_vmapped_replicas_share_in_scan_rebuild():
+    """Identical NVE replicas must stay bitwise identical through the
+    SHARED in-scan table rebuild, and track a single fused Simulation."""
+    from repro.ensemble import protocol
+    from repro.ensemble.replica import ReplicaEnsemble, replicate
+
+    lat = simple_cubic()
+    st = init_state(lat, (3, 3, 3), temperature=500.0, spin_init="helix_x",
+                    key=jax.random.PRNGKey(2))
+    ham = HeisenbergDMIModel(d0=0.01)
+    cfg = IntegratorConfig(dt=2e-3)  # NVE: keys drawn but noise-free
+    masses = jnp.asarray(lat.masses)
+    magnetic = jnp.asarray(lat.moments) > 0
+
+    ens = ReplicaEnsemble(potential=ham, cfg=cfg, states=replicate(st, 3),
+                          masses=masses, magnetic=magnetic, cutoff=5.0,
+                          capacity=8, skin=0.2, diag_grid=(3, 3),
+                          pitch_bins=3)
+    ens.run(60, jax.random.PRNGKey(9),
+            temperature=protocol.constant(0.0),
+            field=jnp.zeros(3), chunk=20)
+    for r in (1, 2):
+        np.testing.assert_array_equal(np.asarray(ens.states.pos[0]),
+                                      np.asarray(ens.states.pos[r]))
+        np.testing.assert_array_equal(np.asarray(ens.states.spin[0]),
+                                      np.asarray(ens.states.spin[r]))
+
+    sim = Simulation(potential=ham, cfg=cfg, state=st, masses=masses,
+                     magnetic=magnetic, cutoff=5.0, capacity=8, skin=0.2)
+    sim.run(60, jax.random.PRNGKey(9), chunk=20)
+    assert sim.n_rebuilds >= 1
+    np.testing.assert_allclose(np.asarray(ens.states.pos[0]),
+                               np.asarray(sim.state.pos), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ens.states.spin[0]),
+                               np.asarray(sim.state.spin), atol=1e-4)

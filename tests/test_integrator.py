@@ -45,19 +45,26 @@ def test_spin_norm_exactly_conserved():
 
 
 def test_energy_drift_scales_as_dt2():
-    """Halving dt must cut the energy error by ~4x (2nd-order scheme)."""
+    """Halving dt must cut the energy error by ~4x (2nd-order scheme).
+
+    Uses the paper's self-consistent midpoint spin update (Sec. 5-A3): the
+    explicit one-shot rotation leaves a secular energy drift that is linear
+    in dt at fixed total time (it swamps the dt^2 shadow term at every
+    stable dt), while the converged midpoint scheme restores clean
+    second-order scaling - measured ratio ~4.05 in f32, ~4.35 in f64
+    (tests/test_precision.py).
+    """
     drifts = []
     # dts large enough that truncation dominates the f32 noise floor but
     # below the ~10 fs Morse phonon stability limit
     for dt in (8e-3, 4e-3):
-        lat, sim = _sim(IntegratorConfig(dt=dt), key=5, d0=0.008)
+        lat, sim = _sim(IntegratorConfig(dt=dt, midpoint=True,
+                                         midpoint_iters=3), key=5, d0=0.008)
         e0 = _total_e(lat, sim)
         sim.run(int(0.8 / dt), jax.random.PRNGKey(1), chunk=50)
         drifts.append(abs(_total_e(lat, sim) - e0))
     ratio = drifts[0] / max(drifts[1], 1e-12)
-    # exact 4x checked in f64 (tests/test_precision.py); f32 noise floor
-    # compresses the ratio here
-    assert ratio > 1.8, f"dt-scaling ratio {ratio} (expected ~4)"
+    assert 2.5 < ratio < 7.0, f"dt-scaling ratio {ratio} (expected ~4)"
 
 
 def test_midpoint_selfconsistency_improves_conservation():

@@ -49,6 +49,24 @@ def test_needs_rebuild_half_skin():
     assert bool(needs_rebuild(tab, moved, st.box, 0.5))
 
 
+def test_dense_capacity_exceeds_n():
+    """capacity > n: the padded columns must be masked out and self-padded
+    (regression for the old conditional re-pad of ``mask``, which rebuilt
+    ``idx`` from a stale pre-pad mask)."""
+    lat = simple_cubic()
+    st = init_state(lat, (2, 2, 2), key=jax.random.PRNGKey(4))
+    n = st.n_atoms
+    ref = dense_neighbor_table(st.pos, st.box, 5.0, n - 1)
+    big = dense_neighbor_table(st.pos, st.box, 5.0, n + 5)
+    assert big.idx.shape == (n, n + 5) and big.mask.shape == (n, n + 5)
+    # same neighbor set; the extra columns are all invalid
+    assert _pairs(big, n) == _pairs(ref, n)
+    idx, mask = np.asarray(big.idx), np.asarray(big.mask)
+    assert not mask[:, n:].any()
+    rows = np.broadcast_to(np.arange(n)[:, None], idx.shape)
+    np.testing.assert_array_equal(idx[~mask], rows[~mask])  # self-padded
+
+
 def test_bin_atoms_no_overflow_and_complete():
     lat = b20_fege()
     st = init_state(lat, (3, 3, 3), key=jax.random.PRNGKey(3))
