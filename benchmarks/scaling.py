@@ -1,99 +1,219 @@
-"""Paper Fig. 7/8 + Table V analogue: weak & strong scaling projections.
+"""Weak scaling of the SHARDED fused MD loop (paper Fig. 7 analogue).
 
-No multi-node hardware exists here, so scaling curves are DERIVED from the
-dry-run artifacts the same way the roofline is: per-device compute time is
-the dominant roofline term of the compiled step, and communication is the
-halo volume (MD: one ghost-cell layer per face = O(N_local^{2/3})) over the
-ICI/DCN bandwidth.  This reproduces the paper's weak-scaling-efficiency
-structure (small case less comm-amortized than large) and the strong-
-scaling efficiency droop as per-device work shrinks.
+Unlike the projection-only predecessor, this drives the real thing
+end-to-end: :class:`repro.md.simulate.SimulationSharded` - the shard_map
+domain-decomposed fused loop (in-scan rebuild + cell migration, one
+position halo per drift, adjoint-halo force fold-back) - on 1/2/4/8
+*simulated* host devices (``XLA_FLAGS=--xla_force_host_platform_device_
+count=N``), with a fixed per-device subdomain (weak scaling).
 
-CSV: name, us_per_call(=modelled step us), derived=efficiency.
+Each device count runs in its OWN subprocess (the forced device count must
+be set before jax initializes); the parent collects per-worker JSON and
+emits ``BENCH_scaling.json`` with
+
+* steps/s and weak-scaling efficiency vs the 1-device *flat* fused
+  baseline (``Simulation`` at the same per-device atom count),
+* per-step halo traffic by tag (position drift / spin / adjoint fold-back)
+  from the trace-time exchange ledger (``repro.parallel.halo.TRACE``),
+* recompile counts during the measured run (must be 0: one compiled chunk
+  covers every in-scan rebuild + migration), and
+* the drift-exchange invariant: exactly ONE position halo per drift,
+  asserted from the traced step body.
+
+Simulated devices share this host's cores, so wall-clock efficiency here
+measures the *orchestration + communication overhead floor* of the sharded
+loop, not multi-chip hardware scaling - the number every later multi-host
+PR measures against.
+
+CSV rows: name, us_per_call(=us/step), derived=steps/s|eff|rebuilds|comp.
 """
 from __future__ import annotations
 
-import glob
 import json
 import os
+import subprocess
+import sys
+import time
 
-import numpy as np
-
-from benchmarks.common import row
-from repro.launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
-
-# per-chip MD cost model extracted from the dry-run records
-_DRYRUN_GLOB = os.path.join("experiments", "dryrun",
-                            "fege-spinlattice__md_{case}__pod1.json")
-
-
-def _load(case):
-    path = _DRYRUN_GLOB.format(case=case)
-    if not os.path.exists(path):
-        return None
-    with open(path) as f:
-        return json.load(f)
+DEVICE_COUNTS = (1, 2, 4, 8)
+SMOKE_DEVICES = (2,)
+# per-device lattice supercells: "floor" is small enough that a step is
+# dominated by fixed orchestration + collective latency (the overhead
+# floor the acceptance gate tracks); "bulk" is compute-bound and shows the
+# honest raw falloff when simulated devices oversubscribe the host cores
+SIZES = {"floor": (4, 4, 4), "bulk": (8, 8, 8)}     # 64 / 512 atoms
+CHUNK = 80
+CUTOFF, SKIN, CAPACITY = 5.0, 0.3, 8
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def _md_step_time(flops_dev, atoms_dev, cells_per_dev, ici_bw=ICI_BW):
-    """(compute_s, comm_s): halo = 6 faces x cell layer x state payload."""
-    compute = flops_dev / PEAK_FLOPS
-    face_cells = 6 * cells_per_dev ** 2
-    payload = face_cells * 16 * (3 + 3 + 1 + 1) * 4   # pos+spin+type+id f32
-    comm = payload / ici_bw
-    return compute, comm
+# ---------------------------------------------------------------------------
+# worker: runs under a forced device count, prints one RESULT json line
+# ---------------------------------------------------------------------------
+
+def _worker(ndev: int, size: str, smoke: bool) -> None:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.hamiltonian import HeisenbergDMIModel
+    from repro.md.integrator import IntegratorConfig
+    from repro.md.lattice import simple_cubic
+    from repro.md.simulate import Simulation, SimulationSharded
+    from repro.md.state import init_state
+    from repro.parallel.halo import TRACE
+
+    assert len(jax.devices()) == ndev, (len(jax.devices()), ndev)
+    steps = CHUNK if smoke else 3 * CHUNK
+
+    compiles = {"n": 0}
+
+    def on_event(name, _dur, **kw):
+        if name == "/jax/core/compile/backend_compile_duration":
+            compiles["n"] += 1
+
+    jax.monitoring.register_event_duration_secs_listener(on_event)
+
+    lat = simple_cubic()
+    per_dev = SIZES[size]
+    cells = (per_dev[0] * ndev,) + per_dev[1:]
+    st = init_state(lat, cells, temperature=300.0, spin_init="helix_x",
+                    key=jax.random.PRNGKey(0), dtype=jnp.float32)
+    ham = HeisenbergDMIModel(d0=0.01)
+    cfg = IntegratorConfig(dt=2e-3)
+    masses = jnp.asarray(lat.masses, jnp.float32)
+    magnetic = jnp.asarray(lat.moments) > 0
+    kw = dict(potential=ham, cfg=cfg, masses=masses, magnetic=magnetic,
+              cutoff=CUTOFF, capacity=CAPACITY, skin=SKIN)
+
+    def timed(sim, warm_key, run_key):
+        sim.run(CHUNK, warm_key, chunk=CHUNK)          # compile + warm
+        jax.block_until_ready(sim.state.pos)
+        c0 = compiles["n"]
+        t0 = time.perf_counter()
+        sim.run(steps, run_key, chunk=CHUNK)
+        jax.block_until_ready(sim.state.pos)
+        return (time.perf_counter() - t0, compiles["n"] - c0)
+
+    out = {"ndev": ndev, "size": size, "atoms": st.n_atoms,
+           "atoms_per_device": st.n_atoms // ndev, "steps": steps}
+
+    if ndev == 1:
+        flat = Simulation(state=st, **kw)
+        wall, _ = timed(flat, jax.random.PRNGKey(1), jax.random.PRNGKey(2))
+        out["flat_steps_per_s"] = steps / wall
+
+    sh = SimulationSharded(state=st, **kw)
+    TRACE.reset()
+    wall, n_comp = timed(sh, jax.random.PRNGKey(1), jax.random.PRNGKey(2))
+    # one traced chunk covers warmup AND the measured run: counts are
+    # per-step-body occurrences, bytes are per-device per occurrence
+    per_exchange = {t: (TRACE.bytes[t] // max(TRACE.counts[t], 1))
+                    for t in TRACE.counts}
+    out.update({
+        "steps_per_s": steps / wall,
+        "wall_s": wall,
+        "rebuilds": sh.n_rebuilds,
+        "migrated": sh.n_migrated,
+        "compiles_during_run": n_comp,
+        "chunk_cache": len(sh._chunk_cache),
+        "cells": sh._dspec.cells,
+        "cell_capacity": sh._dspec.capacity,
+        "drift_pos_exchanges_per_step": TRACE.counts.get("drift-pos", 0),
+        "halo_bytes_per_exchange": per_exchange,
+        # per executed step: one drift-pos, one spin, one adjoint round
+        "halo_bytes_per_step": sum(per_exchange.get(t, 0) for t in
+                                   ("drift-pos", "spin", "adjoint")),
+    })
+    # the drift-exchange invariant of the gather->compute contract
+    assert out["drift_pos_exchanges_per_step"] == 1, TRACE.counts
+    print("RESULT " + json.dumps(out), flush=True)
 
 
-def weak_scaling() -> list[str]:
-    rows = []
-    for case, cells in (("small", 8), ("large", 16)):
-        rec = _load(case)
-        if rec is None:
-            continue
-        flops_dev = rec["flops_total"]
-        atoms_dev = rec["meta"]["atoms_per_device"]
-        comp, comm = _md_step_time(flops_dev, atoms_dev, cells)
-        t1 = comp  # single chip: no halo cost
-        for chips in (1, 16, 256, 512, 4096, 20480):
-            # cross-pod halo crosses DCN (~5x slower) beyond 256 chips
-            scale = 1.0 if chips <= 256 else 5.0
-            tn = comp + comm * scale * (0.0 if chips == 1 else 1.0)
-            eff = t1 / tn
-            rows.append(row(
-                f"weak/{case}/chips={chips}", tn * 1e6,
-                f"eff={eff*100:.1f}%|atoms={atoms_dev*chips:.2e}"))
-    return rows
+# ---------------------------------------------------------------------------
+# parent: one subprocess per device count (XLA_FLAGS must precede jax init)
+# ---------------------------------------------------------------------------
 
-
-def strong_scaling() -> list[str]:
-    """Fixed global system, chips swept: per-chip work shrinks, halo
-    surface/volume ratio grows (paper Table V structure)."""
-    rows = []
-    rec = _load("large")
-    if rec is None:
-        return rows
-    flops_dev0 = rec["flops_total"]
-    cells0 = 16
-    base_chips = 512
-    total_flops = flops_dev0 * base_chips
-    t_base = None
-    for chips in (512, 1024, 2048, 4096, 8192):
-        flops_dev = total_flops / chips
-        cells = cells0 * (base_chips / chips) ** (1 / 3)
-        comp, comm = _md_step_time(flops_dev, None, cells)
-        tn = comp + comm * 5.0
-        if t_base is None:
-            t_base = tn
-        speedup = t_base / tn
-        ideal = chips / 512
-        rows.append(row(f"strong/268B-analogue/chips={chips}", tn * 1e6,
-                        f"speedup={speedup:.2f}x|"
-                        f"eff={speedup/ideal*100:.1f}%"))
-    return rows
+def _run_worker(ndev: int, size: str, smoke: bool) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={ndev}"
+    if smoke:
+        env["BENCH_SMOKE"] = "1"
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    cmd = [sys.executable, "-m", "benchmarks.scaling", "--worker",
+           str(ndev), "--size", size]
+    r = subprocess.run(cmd, env=env, cwd=_ROOT, capture_output=True,
+                       text=True, timeout=3600)
+    if r.returncode != 0:
+        raise RuntimeError(
+            f"scaling worker ndev={ndev} failed:\n{r.stderr[-4000:]}")
+    line = [ln for ln in r.stdout.splitlines() if ln.startswith("RESULT ")]
+    return json.loads(line[0][len("RESULT "):])
 
 
 def main() -> list[str]:
-    return weak_scaling() + strong_scaling()
+    from benchmarks.common import SMOKE, row
+
+    rows = []
+    counts = SMOKE_DEVICES if SMOKE else DEVICE_COUNTS
+    sizes = ("floor",) if SMOKE else tuple(SIZES)
+    cores = os.cpu_count() or 1
+    out = {"smoke": SMOKE, "potential": "heisenberg", "chunk": CHUNK,
+           "skin": SKIN, "capacity": CAPACITY, "host_cores": cores,
+           "efficiency_definition": (
+               "weak_efficiency = steps/s(n) / (steps/s(1 dev, sharded) * "
+               "min(1, host_cores/n)): simulated devices share this "
+               "host's cores, so the achievable ideal caps at cores/n of "
+               "the 1-device rate; weak_efficiency_raw is the "
+               "uncorrected steps/s(n) / steps/s(1)"),
+           "sizes": {}}
+    for size in sizes:
+        results = {n: _run_worker(n, size, SMOKE) for n in counts}
+        base_sh = results.get(1, {}).get("steps_per_s")
+        base_flat = results.get(1, {}).get("flat_steps_per_s")
+        entry = {"atoms_per_device":
+                 results[counts[0]]["atoms_per_device"],
+                 "flat_1dev_steps_per_s": base_flat, "sharded": {}}
+        for n, res in results.items():
+            if base_sh:
+                res["weak_efficiency_raw"] = res["steps_per_s"] / base_sh
+                res["weak_efficiency"] = (
+                    res["steps_per_s"] / (base_sh * min(1.0, cores / n)))
+            eff = res.get("weak_efficiency")
+            entry["sharded"][str(n)] = res
+            rows.append(row(
+                f"scaling/{size}/sharded/ndev={n}/N={res['atoms']}",
+                1e6 / res["steps_per_s"],
+                f"{res['steps_per_s']:.1f} steps/s|"
+                + (f"eff={eff * 100:.1f}%|" if eff else "")
+                + f"{res['rebuilds']} rebuilds|"
+                f"{res['compiles_during_run']} compiles|"
+                f"halo={res['halo_bytes_per_step']}B/step"))
+        if base_flat:
+            rows.append(row(f"scaling/{size}/baseline/flat-fused/ndev=1",
+                            1e6 / base_flat, f"{base_flat:.1f} steps/s"))
+        out["sizes"][size] = entry
+    if not SMOKE:
+        # acceptance (on the overhead-floor size): 4 simulated devices
+        # within 35% of the achievable ideal, zero recompiles, one
+        # position halo per drift (asserted in-worker)
+        four = out["sizes"]["floor"]["sharded"]["4"]
+        assert four["weak_efficiency"] >= 0.65, four
+        for size in sizes:
+            for res in out["sizes"][size]["sharded"].values():
+                assert res["compiles_during_run"] == 0, res
+                assert res["chunk_cache"] == 1, res
+        with open(os.path.join(_ROOT, "BENCH_scaling.json"), "w") as f:
+            json.dump(out, f, indent=2)
+    return rows
 
 
 if __name__ == "__main__":
-    main()
+    if "--worker" in sys.argv:
+        size = (sys.argv[sys.argv.index("--size") + 1]
+                if "--size" in sys.argv else "floor")
+        _worker(int(sys.argv[sys.argv.index("--worker") + 1]), size,
+                bool(os.environ.get("BENCH_SMOKE")))
+    else:
+        print("name,us_per_call,derived")
+        main()

@@ -4,7 +4,12 @@
 #        scripts/ci.sh --smoke         - 1-iteration benchmark smoke run
 #                                        (every benchmarks/ module executes
 #                                        on downscaled problems, so perf
-#                                        code can't silently rot)
+#                                        code can't silently rot; CI FAILS
+#                                        if any module crashes).  This
+#                                        includes benchmarks/scaling.py,
+#                                        which spawns a 2-simulated-device
+#                                        subprocess so the shard_map domain
+#                                        loop compiles in CI.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 

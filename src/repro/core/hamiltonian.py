@@ -121,6 +121,18 @@ class HeisenbergDMIModel:
         return e, -g[0], -g[1]
 
     # ------------------------------------------------------------------
+    def pair_energies(self, dr, dist, mask, ti, tj, si, sj) -> jax.Array:
+        """Per-atom energies from pre-gathered pair blocks (flat (N, M)
+        shapes) - the potential-agnostic surface the domain-decomposed
+        evaluator consumes (repro.parallel.domain).  Identical math to
+        :meth:`atom_energies`."""
+        return self.atom_energies(dr, dist, mask, ti, tj, si, sj)
+
+    def site_moments(self, types) -> jax.Array:
+        """Per-site magnetic moment [mu_B] entering the Zeeman term."""
+        return self.moment * (types == self.magnetic_type)
+
+    # ------------------------------------------------------------------
     def compute(self, nbh: Neighborhood, spin, types, field=None):
         """Gather-once evaluation: (E, F, H_eff) from pre-gathered blocks.
 

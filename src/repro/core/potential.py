@@ -171,6 +171,20 @@ class NEPSpinPotential:
         return energy_forces_field(self.spec, self.params, pos, spin, types,
                                    table, box, field, self.moments)
 
+    def pair_energies(self, dr, dist, mask, ti, tj, si, sj):
+        """Per-atom energies from pre-gathered pair blocks (flat (N, M)
+        shapes) - the surface the domain-decomposed evaluator consumes
+        (repro.parallel.domain).  Always the autodiff path: the sharded
+        loop differentiates through it, so it must be jax-transparent."""
+        return atom_energies(self.spec, self.params, dr, dist, mask, ti, tj,
+                             si, sj)
+
+    def site_moments(self, types):
+        """Per-site magnetic moment [mu_B] entering the Zeeman term."""
+        if self.moments is not None:
+            return self.moments[types]
+        return jnp.ones(types.shape, jnp.float32)
+
     def compute(self, nbh: Neighborhood, spin, types, field=None):
         if self.use_kernel:
             from repro.kernels.nep.ops import nep_compute

@@ -339,3 +339,56 @@ class ReplicaEnsemble:
             time=np.asarray(times), temperature=np.stack(temps_log),
             charge=q, magnetization=mz, pitch=lam, energy=e,
             exchange_accepts=n_acc, exchange_attempts=n_att)
+
+
+# ---------------------------------------------------------------------------
+# Replica axis composed with the spatial mesh (sharded fused loop)
+# ---------------------------------------------------------------------------
+
+def sharded_replica_mesh(replica_shards: int, spatial: int,
+                         replica_axis: str = "replica",
+                         spatial_axis: str = "sx"):
+    """2-D device mesh composing a replica axis with a spatial axis.
+
+    ``replica_shards * spatial`` devices are arranged so each replica shard
+    owns a full spatial decomposition: halos/psums run over
+    ``spatial_axis`` only, replicas never communicate (except nothing - the
+    sharded loop has no replica collectives), and per-replica (T, B) points
+    ride the same compiled chunk.
+    """
+    from jax.sharding import Mesh
+    devs = jax.devices()
+    need = replica_shards * spatial
+    if len(devs) < need:
+        raise ValueError(f"need {need} devices, have {len(devs)}")
+    return Mesh(np.asarray(devs[:need]).reshape(replica_shards, spatial),
+                (replica_axis, spatial_axis))
+
+
+def run_sharded_sweep(potential, cfg, state, masses, magnetic, cutoff,
+                      temperatures, fields=None, *, n_steps: int = 1000,
+                      key=None, chunk: int = 100, mesh=None, **sim_kw):
+    """(T, B) sweep on the domain-decomposed fused loop.
+
+    The replica-batched analogue of :class:`PhaseDiagram` for systems too
+    large for one device: every replica is a full spatial decomposition of
+    the same crystal, stepped at its own runtime ``(temperature, field)``
+    point inside ONE compiled sharded chunk
+    (:class:`repro.md.simulate.SimulationSharded` with ``replicas=R``).
+    ``temperatures`` is (R,) [K]; ``fields`` is (R, 3) Tesla or None.
+    Returns ``(sim, trace)`` with the per-chunk per-replica
+    :class:`~repro.md.simulate.DomainChunkTrace` (psum-reduced in-graph).
+    """
+    from repro.md.simulate import SimulationSharded
+
+    temps = jnp.asarray(temperatures)
+    r = temps.shape[0]
+    if fields is not None:
+        fields = jnp.broadcast_to(jnp.asarray(fields), (r, 3))
+    sim = SimulationSharded(
+        potential=potential, cfg=cfg, state=state, masses=masses,
+        magnetic=magnetic, cutoff=cutoff, replicas=r, mesh=mesh,
+        field=fields, **sim_kw)
+    key = key if key is not None else jax.random.PRNGKey(0)
+    sim.run(n_steps, key, chunk=chunk, temperature=temps)
+    return sim, sim.trace

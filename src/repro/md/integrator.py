@@ -215,7 +215,8 @@ def make_fused_step(
     cfg: IntegratorConfig,
     masses: jax.Array,          # (n_types,)
     magnetic: jax.Array,        # (n_types,) bool
-    atom_mask: jax.Array | None = None,  # empty-slot mask (domain decomp)
+    atom_mask: jax.Array | str | None = None,  # empty-slot mask (domain)
+    spin_aware_gather: bool | None = None,     # None -> infer from arity
 ):
     """Build the gather-once coupled step:
 
@@ -233,8 +234,25 @@ def make_fused_step(
     runtime overrides of the ``IntegratorConfig`` constants; protocols and
     replica ensembles thread per-step / per-replica values through them.
     Works on flat (N, ...) arrays AND cell-blocked (CX,CY,CZ,K, ...) domain
-    arrays (all updates are elementwise); ``atom_mask`` freezes empty slots.
+    arrays (all updates are elementwise); ``atom_mask`` freezes empty
+    slots.  In the fixed-capacity domain layout the occupancy changes when
+    atoms migrate between cells, so ``atom_mask="from_types"`` derives the
+    mask from ``state.types >= 0`` at every call instead of baking in an
+    array (the sharded fused loop uses this; types == -1 marks empties).
+
+    ``gather`` may accept a third ``spin`` argument: it is then called as
+    ``gather(pos, nbh, spin)`` with the post-half-step spins, letting the
+    distributed loop refresh neighbor-spin blocks in the SAME fused halo
+    round as the position exchange (classical MD's one-message step).
     """
+    if spin_aware_gather is not None:
+        gather_takes_spin = spin_aware_gather
+    else:
+        try:
+            gather_takes_spin = len(
+                inspect.signature(gather).parameters) >= 3
+        except (TypeError, ValueError):
+            gather_takes_spin = False
 
     def step(state: SpinLatticeState, ff: ForceField, nbh, key: jax.Array,
              temperature=None, field=None):
@@ -242,8 +260,10 @@ def make_fused_step(
         types_c = jnp.maximum(state.types, 0)
         m = masses[types_c][..., None]
         mag = magnetic[types_c]
-        if atom_mask is not None:
-            mag = mag & atom_mask
+        amask = (state.types >= 0 if isinstance(atom_mask, str)
+                 else atom_mask)
+        if amask is not None:
+            mag = mag & amask
         dt = cfg.dt
         # `temperature is None` is a trace-time (static) condition: with no
         # runtime override the stochastic branches compile exactly as the
@@ -256,7 +276,7 @@ def make_fused_step(
             return lambda s: compute(nb, s, state.types, field)
 
         vel = state.vel
-        vmask = (atom_mask[..., None] if atom_mask is not None else
+        vmask = (amask[..., None] if amask is not None else
                  jnp.ones_like(vel, dtype=bool))
         if not cfg.frozen_lattice:
             if cfg.lattice_gamma > 0.0 and stochastic:
@@ -275,8 +295,11 @@ def make_fused_step(
         else:
             pos = state.pos + dt * vel
             pos = pos - state.box * jnp.floor(pos / state.box)  # wrap PBC
-        # recompute at new positions: the ONE gather of this step
-        nbh = gather(pos, nbh)
+        # recompute at new positions: the ONE gather of this step (a
+        # spin-aware gather also refreshes neighbor-spin blocks here - the
+        # distributed loop fuses both into one halo exchange)
+        nbh = gather(pos, nbh, spin) if gather_takes_spin else \
+            gather(pos, nbh)
         ff = compute(nbh, spin, state.types, field)
         # spin half step
         spin2, ff = _spin_half_step(

@@ -31,6 +31,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core.descriptor import (NEPSpinSpec, init_accumulators, accumulate,
                                    finalize)
 from repro.core.potential import NEPSpinParams, mlp_energy
+from repro.parallel.sharding import shard_map_compat
 from repro.utils import units
 
 
@@ -45,16 +46,45 @@ class DomainSpec:
     # mesh axis name sharding each spatial dim (None = replicated/local)
     axis_map: tuple[str | None, str | None, str | None] = ("data", "model",
                                                            None)
+    # neighbor-list skin [A]: cells must be >= cutoff+skin wide so a pruned
+    # per-device table survives between half-skin-triggered rebuilds (the
+    # sharded fused loop; 0.0 keeps the legacy per-eval stencil semantics)
+    skin: float = 0.0
 
     @property
     def cell_size(self) -> tuple[float, float, float]:
         return tuple(b / c for b, c in zip(self.box, self.cells))
 
+    @property
+    def rc(self) -> float:
+        """Neighbor-table reach: cutoff + skin."""
+        return self.cutoff + self.skin
+
     def check(self):
         for b, c in zip(self.box, self.cells):
-            assert b / c >= self.cutoff, (
-                f"cell size {b/c:.3f} < cutoff {self.cutoff}; stencil would "
-                "miss neighbors")
+            assert b / c >= self.rc, (
+                f"cell size {b/c:.3f} < cutoff+skin {self.rc}; stencil "
+                "would miss neighbors")
+
+    def check_loop(self, mesh: Mesh):
+        """Extra invariants the sharded fused loop needs: every global dim
+        >= 3 (27-stencil cells must be distinct) and sharded dims divisible
+        by their mesh axis."""
+        self.check()
+        assert min(self.cells) >= 3, (
+            f"global cell grid {self.cells} too small for the 27-stencil")
+        for d, name in enumerate(self.axis_map):
+            if name is not None:
+                n = mesh.shape[name]
+                assert self.cells[d] % n == 0, (
+                    f"cells[{d}]={self.cells[d]} not divisible by mesh "
+                    f"axis {name}={n}")
+
+    def local_shape(self, mesh: Mesh) -> tuple[int, int, int]:
+        """Per-device cell-grid dims under ``mesh``."""
+        return tuple(
+            c // (mesh.shape[name] if name is not None else 1)
+            for c, name in zip(self.cells, self.axis_map))
 
     def pspec(self, *trailing) -> P:
         return P(*self.axis_map, *trailing)
@@ -70,8 +100,14 @@ class DomainState(NamedTuple):
     mask: jax.Array   # (CX, CY, CZ, K) bool
 
 
-def pack_domain(spec: DomainSpec, pos, vel, spin, types) -> DomainState:
-    """Host-side binning of flat atom arrays into the cell grid."""
+def pack_domain(spec: DomainSpec, pos, vel, spin, types,
+                extras: dict | None = None):
+    """Host-side binning of flat atom arrays into the cell grid.
+
+    ``extras`` maps name -> (N, ...) array to bin alongside (e.g. original
+    atom ids for the sharded loop); when given, returns
+    ``(DomainState, {name: packed})`` with extras filled with -1.
+    """
     pos = np.asarray(pos)
     box = np.asarray(spec.box)
     cells = np.asarray(spec.cells)
@@ -92,13 +128,18 @@ def pack_domain(spec: DomainSpec, pos, vel, spin, types) -> DomainState:
         out[flat * k + slot] = a
         return out.reshape(*spec.cells, k, *a.shape[1:])
 
-    return DomainState(
+    state = DomainState(
         pos=jnp.asarray(scatter(pos, 0.0)),
         vel=jnp.asarray(scatter(np.asarray(vel), 0.0)),
         spin=jnp.asarray(scatter(np.asarray(spin), 0.0)),
         types=jnp.asarray(scatter(np.asarray(types), -1)),
         mask=jnp.asarray(scatter(np.ones(pos.shape[0], bool), False)),
     )
+    if extras is None:
+        return state
+    packed = {name: jnp.asarray(scatter(np.asarray(a), -1))
+              for name, a in extras.items()}
+    return state, packed
 
 
 def unpack_domain(state: DomainState):
@@ -212,17 +253,15 @@ def distributed_energy_fn(
     mom = moments if moments is not None else jnp.ones((max(spec.n_types, 1),))
     cell_spec = dspec.pspec()            # P(axes..., ) for (CX,CY,CZ,...) dims
 
-    @partial(
-        jax.shard_map,
-        mesh=mesh,
-        in_specs=(P(), dspec.pspec(None, None), dspec.pspec(None, None),
-                  dspec.pspec(None), dspec.pspec(None)),
-        out_specs=P(),
-        check_vma=False,
-    )
-    def _energy(params, pos, spin, types, mask):
+    def _energy_local(params, pos, spin, types, mask):
         return _local_energy(spec, dspec, params, pos, spin, types, mask,
                              field, mom)
+
+    _energy = shard_map_compat(
+        _energy_local, mesh,
+        in_specs=(P(), dspec.pspec(None, None), dspec.pspec(None, None),
+                  dspec.pspec(None), dspec.pspec(None)),
+        out_specs=P())
 
     def energy(params, state: DomainState):
         return _energy(params, state.pos, state.spin, state.types, state.mask)
@@ -380,22 +419,20 @@ def distributed_energy_fn_pruned(spec, dspec, mesh, capacity=64,
                                                             1),))
     cell = dspec.pspec
 
-    build = jax.shard_map(
-        partial(build_domain_table, spec, dspec, capacity),
-        mesh=mesh,
+    build = shard_map_compat(
+        partial(build_domain_table, spec, dspec, capacity), mesh,
         in_specs=(cell(None, None), cell(None), cell(None)),
-        out_specs=(cell(None, None), cell(None, None)),
-        check_vma=False)
+        out_specs=(cell(None, None), cell(None, None)))
 
-    @partial(
-        jax.shard_map, mesh=mesh,
-        in_specs=(P(), cell(None, None), cell(None, None), cell(None),
-                  cell(None), cell(None, None), cell(None, None)),
-        out_specs=P(),
-        check_vma=False)
-    def _energy(params, pos, spin, types, mask, tbl_idx, tbl_mask):
+    def _energy_local(params, pos, spin, types, mask, tbl_idx, tbl_mask):
         return _local_energy_pruned(spec, dspec, params, pos, spin, types,
                                     mask, tbl_idx, tbl_mask, field, mom)
+
+    _energy = shard_map_compat(
+        _energy_local, mesh,
+        in_specs=(P(), cell(None, None), cell(None, None), cell(None),
+                  cell(None), cell(None, None), cell(None, None)),
+        out_specs=P())
 
     def energy_forces_field(params, pos, spin, types, mask, tbl_idx,
                             tbl_mask):
@@ -437,12 +474,10 @@ def distributed_kernel_force_fn(spec, dspec, mesh, capacity=64,
     cell = dspec.pspec
     keys = acc_keys(spec)
 
-    build = jax.shard_map(
-        partial(build_domain_table, spec, dspec, capacity),
-        mesh=mesh,
+    build = shard_map_compat(
+        partial(build_domain_table, spec, dspec, capacity), mesh,
         in_specs=(cell(None, None), cell(None), cell(None)),
-        out_specs=(cell(None, None), cell(None, None)),
-        check_vma=False)
+        out_specs=(cell(None, None), cell(None, None)))
 
     def body(params, pos, spin, types, mask, tbl_idx, tbl_mask):
         cx, cy, cz, k = mask.shape
@@ -501,11 +536,426 @@ def distributed_kernel_force_fn(spec, dspec, mesh, capacity=64,
         shape = (cx, cy, cz, k, 3)
         return etot, f.reshape(shape), heff.reshape(shape)
 
-    effn = jax.shard_map(
-        body, mesh=mesh,
+    effn = shard_map_compat(
+        body, mesh,
         in_specs=(P(), cell(None, None), cell(None, None), cell(None),
                   cell(None), cell(None, None), cell(None, None)),
-        out_specs=(P(), cell(None, None), cell(None, None)),
-        check_vma=False)
+        out_specs=(P(), cell(None, None), cell(None, None)))
 
     return build, effn
+
+
+# ---------------------------------------------------------------------------
+# Sharded fused MD loop: per-device building blocks
+# ---------------------------------------------------------------------------
+#
+# Everything below runs INSIDE shard_map on one device's (cx, cy, cz, K, ...)
+# block and is consumed by repro.md.simulate.SimulationSharded, the domain-
+# decomposed twin of the fused single-device driver.  The layout contract:
+#
+# * atom rows live in fixed-capacity link cells; ``types == -1`` marks empty
+#   slots (the occupancy mask is derived, never carried separately);
+# * the per-device pruned neighbor table (``Neighborhood`` with cell-major
+#   (cx, cy, cz, K, M) blocks) indexes the *halo-extended flat* arrays - one
+#   position halo after each drift refreshes ``dr`` for every owned pair;
+# * neighbor spins are re-exchanged inside each potential evaluation (spins
+#   change between evaluations at fixed positions), and the spin-gradient
+#   fold-back is the automatic adjoint of that exchange;
+# * reaction forces scattered onto ghost rows return to their owners through
+#   one explicit ``fold_halo`` round (the paper's reverse communication);
+# * at rebuild, atoms migrate to their new cells (possibly on a neighboring
+#   device) through ONE fused multi-field exchange; capacity overflow and
+#   out-of-reach migrations are *counted*, never silently dropped - the
+#   driver raises at the next chunk boundary.
+
+
+def _ext_flat_index(local_shape: tuple[int, int, int], k: int):
+    """Candidate bookkeeping for the 27-stencil over the halo-extended grid.
+
+    Returns (cand, own, shift_id):
+      cand  (cx, cy, cz, 27*K) int32 - ext-flat slot index of every stencil
+            candidate of each cell;
+      own   (cx, cy, cz, K) int32    - each slot's own ext-flat index;
+      shift_id (27*K,) int32         - which of the 27 shifts a candidate
+            column came from (column-major pairing with ``_SHIFTS``).
+    """
+    cx, cy, cz = local_shape
+    ex_cy, ex_cz = cy + 2, cz + 2
+
+    def cell_flat(ix, iy, iz):
+        return (ix * ex_cy + iy) * ex_cz + iz
+
+    gx, gy, gz = jnp.meshgrid(jnp.arange(cx), jnp.arange(cy),
+                              jnp.arange(cz), indexing="ij")
+    offs = jnp.asarray(_SHIFTS, jnp.int32)                     # (27, 3)
+    nb_cell = cell_flat(gx[..., None] + 1 + offs[:, 0],
+                        gy[..., None] + 1 + offs[:, 1],
+                        gz[..., None] + 1 + offs[:, 2])        # (cx,cy,cz,27)
+    cand = (nb_cell[..., :, None] * k
+            + jnp.arange(k)[None, None, None, None, :])        # (...,27,K)
+    cand = cand.reshape(cx, cy, cz, 27 * k).astype(jnp.int32)
+    own = (cell_flat(gx + 1, gy + 1, gz + 1)[..., None] * k
+           + jnp.arange(k)[None, None, None, :]).astype(jnp.int32)
+    shift_id = jnp.repeat(jnp.arange(27, dtype=jnp.int32), k)
+    return cand, own, shift_id
+
+
+def build_local_table(dspec: DomainSpec, local_shape: tuple[int, int, int],
+                      capacity: int, pos, types, allgather: bool = False):
+    """Per-device pruned neighbor table (call inside shard_map).
+
+    Enumerates each owned atom's 27-stencil candidates in the halo-extended
+    block, keeps the ``capacity`` nearest within cutoff+skin (top-k, like
+    the flat tables), and returns a cell-major table:
+    (idx (cx,cy,cz,K,M) int32 into the ext-flat arrays - self-padded where
+    invalid, mask, tj neighbor types).  One fused (pos, types) halo round.
+    """
+    from repro.parallel.halo import exchange_halo_multi
+
+    cx, cy, cz = local_shape
+    k = types.shape[3]
+    dtype = pos.dtype
+    box = jnp.asarray(dspec.box, dtype)
+    rc = dspec.rc
+    occ = types >= 0
+
+    ext = exchange_halo_multi({"pos": pos, "types": types},
+                              dspec.axis_map, tag="rebuild",
+                              allgather=allgather)
+    exf_pos = ext["pos"].reshape(-1, 3)
+    exf_typ = ext["types"].reshape(-1)
+
+    cand, own, _ = _ext_flat_index(local_shape, k)
+    cpos = exf_pos[cand]                                # (cx,cy,cz,27K,3)
+    cocc = exf_typ[cand] >= 0
+    dr = cpos[..., None, :, :] - pos[..., :, None, :]   # (...,K,27K,3)
+    dr = dr - box * jnp.round(dr / box)
+    d2 = jnp.sum(dr * dr, axis=-1)
+    good = (cocc[..., None, :]
+            & (cand[..., None, :] != own[..., :, None])
+            & (d2 <= rc * rc)
+            & occ[..., None])
+    neg = jnp.where(good, -d2, -jnp.inf)
+    m_cap = min(capacity, neg.shape[-1])
+    vals, sel = jax.lax.top_k(neg, m_cap)               # (cx,cy,cz,K,M)
+    mask = vals > -jnp.inf
+    idx = jnp.take_along_axis(
+        jnp.broadcast_to(cand[..., None, :], d2.shape), sel, axis=-1)
+    idx = jnp.where(mask, idx, own[..., None])          # self-pad invalid
+    tj = jnp.where(mask, exf_typ[idx], 0)
+    return idx.astype(jnp.int32), mask, tj.astype(jnp.int32)
+
+
+def migrate_cells(dspec: DomainSpec, local_shape: tuple[int, int, int],
+                  pos, vel, spin, types, aid, allgather: bool = False):
+    """Re-bin every atom into its current cell, moving emigrants to the
+    neighboring device that owns their new cell (call inside shard_map).
+
+    Between rebuilds atoms move less than the skin, so the new cell is
+    always within the 27-stencil of the old one: ONE fused multi-field halo
+    round makes every migrating atom visible to its new owner, and each
+    target cell packs its claimants with a predicated rank-scatter.
+
+    Returns (pos, vel, spin, types, aid, n_moved, n_dropped) with the
+    per-device counts NOT yet psummed:
+      n_moved   - owned atoms that changed cell (diagnostics);
+      n_dropped - atoms lost to capacity overflow in some cell plus atoms
+                  that moved further than one cell (skin violation).  The
+                  driver psums this and fails loudly at chunk boundaries.
+    """
+    from repro.parallel.halo import exchange_halo_multi
+
+    cx, cy, cz = local_shape
+    k = types.shape[3]
+    n_cells = cx * cy * cz
+    dtype = pos.dtype
+    box = jnp.asarray(dspec.box, dtype)
+    cells = jnp.asarray(dspec.cells, jnp.int32)
+    occ = types >= 0
+
+    # new global cell of every owned atom (positions are PBC-wrapped)
+    newc = jnp.floor(pos / box * cells.astype(dtype)).astype(jnp.int32)
+    newc = jnp.clip(newc, 0, cells - 1)                 # fp edge guard
+
+    # this device's global coords of each slot
+    offs = []
+    for d, name in enumerate(dspec.axis_map):
+        o = (jax.lax.axis_index(name) * local_shape[d]
+             if name is not None else 0)
+        offs.append(o)
+    gx, gy, gz = jnp.meshgrid(jnp.arange(cx) + offs[0],
+                              jnp.arange(cy) + offs[1],
+                              jnp.arange(cz) + offs[2], indexing="ij")
+    ownc = jnp.stack([jnp.broadcast_to(g[..., None], types.shape)
+                      for g in (gx, gy, gz)], axis=-1).astype(jnp.int32)
+
+    # minimum-image cell displacement on the periodic global grid
+    delta = jnp.mod(newc - ownc, cells)
+    delta = jnp.where(delta > cells // 2, delta - cells, delta)
+    in_reach = jnp.all(jnp.abs(delta) <= 1, axis=-1) & occ
+    moved = in_reach & jnp.any(delta != 0, axis=-1)
+    n_moved = jnp.sum(moved.astype(jnp.int32))
+    n_out_of_reach = jnp.sum(
+        (occ & ~in_reach).astype(jnp.int32))
+    # -1 encodes "not claimable" (empty slot or skin-violating jump)
+    enc = jnp.where(in_reach,
+                    ((delta[..., 0] + 1) * 3 + (delta[..., 1] + 1)) * 3
+                    + (delta[..., 2] + 1), -1).astype(jnp.int32)
+
+    ext = exchange_halo_multi(
+        {"pos": pos, "vel": vel, "spin": spin,
+         "types": types, "aid": aid, "enc": enc},
+        dspec.axis_map, tag="migrate", allgather=allgather)
+
+    cand, _, shift_id = _ext_flat_index(local_shape, k)
+    cand_enc = ext["enc"].reshape(-1)[cand]             # (cx,cy,cz,27K)
+    # a candidate seen through stencil shift s belongs here iff its cell
+    # displacement is exactly -s
+    offs27 = jnp.asarray(_SHIFTS, jnp.int32)            # (27, 3)
+    want = (((-offs27[:, 0] + 1) * 3 + (-offs27[:, 1] + 1)) * 3
+            + (-offs27[:, 2] + 1))                      # (27,)
+    belongs = cand_enc == want[shift_id][None, None, None, :]
+
+    rank = jnp.cumsum(belongs.astype(jnp.int32), axis=-1) - 1
+    slot = jnp.where(belongs & (rank < k), rank, k)     # k = dump column
+    n_overflow = jnp.sum((belongs & (rank >= k)).astype(jnp.int32))
+
+    payload = jnp.concatenate(
+        [ext["pos"].reshape(-1, 3), ext["vel"].reshape(-1, 3),
+         ext["spin"].reshape(-1, 3),
+         ext["types"].reshape(-1, 1).astype(dtype),
+         ext["aid"].reshape(-1, 1).astype(dtype)], axis=-1)[cand]
+    nf = payload.shape[-1]
+    rows = jnp.broadcast_to(
+        jnp.arange(n_cells, dtype=jnp.int32)[:, None], (n_cells, 27 * k))
+    out = jnp.zeros((n_cells, k + 1, nf), dtype)
+    out = out.at[rows.reshape(-1), slot.reshape(-1)].set(
+        payload.reshape(n_cells, 27 * k, nf).reshape(-1, nf))
+    got = jnp.zeros((n_cells, k + 1), bool).at[
+        rows.reshape(-1), slot.reshape(-1)].set(belongs.reshape(-1))
+    out, got = out[:, :k], got[:, :k]
+
+    def field(sl, tail):
+        a = out[..., sl].reshape(cx, cy, cz, k, *tail)
+        return jnp.where(got.reshape(cx, cy, cz, k).reshape(
+            cx, cy, cz, k, *([1] * len(tail))), a, 0.0)
+
+    new_types = jnp.where(got, jnp.round(out[..., 9]).astype(jnp.int32),
+                          -1).reshape(cx, cy, cz, k)
+    new_aid = jnp.where(got, jnp.round(out[..., 10]).astype(jnp.int32),
+                        -1).reshape(cx, cy, cz, k)
+    return (field(slice(0, 3), (3,)), field(slice(3, 6), (3,)),
+            field(slice(6, 9), (3,)), new_types, new_aid,
+            n_moved, n_overflow + n_out_of_reach)
+
+
+class DomainNbh(NamedTuple):
+    """Per-device pruned-table blocks of the sharded fused loop.
+
+    ``idx``/``mask``/``tj`` are table-static (valid until the next rebuild)
+    and index the halo-extended flat arrays; ``dr`` (and, on the fused-
+    gather path, the neighbor-spin block ``sj``) is refreshed by ONE fused
+    halo exchange per drift.  The cell-major twin of
+    :class:`repro.md.neighbor.Neighborhood`.
+    """
+
+    idx: jax.Array   # (cx, cy, cz, K, M) int32 into ext-flat slots
+    mask: jax.Array  # (cx, cy, cz, K, M) bool
+    tj: jax.Array    # (cx, cy, cz, K, M) int32 neighbor types
+    dr: jax.Array    # (cx, cy, cz, K, M, 3) min-imaged pair vectors
+    sj: jax.Array    # (cx, cy, cz, K, M, 3) neighbor spins; (0,) when the
+                     # evaluator re-exchanges spins per evaluation
+
+
+def make_domain_evaluator(potential, dspec: DomainSpec,
+                          local_shape: tuple[int, int, int],
+                          barrier: bool = True,
+                          spin_in_gather: bool = True,
+                          allgather: bool = False):
+    """Per-device gather/compute closures for the sharded fused loop.
+
+    Returns ``(refresh, compute)``:
+
+    * ``refresh(pos, nbh[, spin], tag) -> nbh`` - THE one halo exchange
+      per drift: positions (and, with ``spin_in_gather``, spins) packed
+      into a single fused round, then the pruned-table gather of
+      min-imaged pair vectors (and neighbor spins).  Interior cells read a
+      :func:`~repro.parallel.halo.local_wrap` image instead of the
+      exchanged one, so their gather carries no ppermute dependence and
+      XLA may overlap it with the exchange (repro.parallel.overlap).
+    * ``compute(nbh, spin, types, field) -> (E, F, H_eff)`` - the gather-
+      once evaluation on cell-major blocks, reusing the potential's
+      ``pair_energies``/``site_moments`` surfaces.  All ghost
+      contributions - reaction forces AND neighbor-spin gradients - fold
+      back to their owners in ONE fused adjoint round
+      (:func:`repro.parallel.halo.fold_halo_multi`), the explicit
+      transpose of the forward exchange.
+
+    ``spin_in_gather=True`` is the classical two-message distributed MD
+    step (one forward exchange per drift, one adjoint fold per
+    evaluation); it is exact when each step evaluates the potential once
+    at fixed spins.  Self-consistent midpoint iterations re-evaluate at
+    *updated* spins, so drivers must pass ``spin_in_gather=False`` there -
+    the evaluator then re-exchanges spin ghosts inside every evaluation.
+
+    Both potentials' flat ``compute`` methods and this evaluator route the
+    same per-atom energy math, so sharded and single-device trajectories
+    agree to roundoff (tests/test_domain_loop.py).
+    """
+    from repro.parallel.halo import (exchange_halo, exchange_halo_multi,
+                                     fold_halo, fold_halo_multi, local_wrap)
+    from repro.parallel.overlap import issue_early, shell_slabs
+
+    # the issue-early optimization barrier has no vmap rule on jax 0.4.x,
+    # so the replica-batched loop runs without the scheduling hint
+    early = issue_early if barrier else (lambda x: x)
+    axis_map = dspec.axis_map
+    slabs = shell_slabs(local_shape)
+    cx, cy, cz = local_shape
+    boxt = tuple(dspec.box)
+
+    def refresh_pos_only(pos, nbh: DomainNbh, tag) -> DomainNbh:
+        dtype = pos.dtype
+        box = jnp.asarray(boxt, dtype)
+        extc = early(exchange_halo(pos, axis_map, tag=tag,
+                                   allgather=allgather))
+        extl = local_wrap(pos)
+        extc_f, extl_f = extc.reshape(-1, 3), extl.reshape(-1, 3)
+        dr = jnp.zeros(nbh.idx.shape + (3,), dtype)
+        for sl, interior in slabs:
+            src = extl_f if interior else extc_f
+            drs = src[nbh.idx[sl]] - pos[sl][..., None, :]
+            drs = drs - box * jnp.round(drs / box)
+            dr = dr.at[sl].set(drs)
+        return nbh._replace(dr=dr)
+
+    def refresh_fused(pos, nbh: DomainNbh, spin, tag) -> DomainNbh:
+        """Positions AND spins in one fused halo round per drift."""
+        dtype = pos.dtype
+        box = jnp.asarray(boxt, dtype)
+        ext = exchange_halo_multi({"pos": pos, "spin": spin}, axis_map,
+                                  tag=tag, allgather=allgather)
+        extc_p = early(ext["pos"]).reshape(-1, 3)
+        extc_s = early(ext["spin"]).reshape(-1, 3)
+        extl_p = local_wrap(pos).reshape(-1, 3)
+        extl_s = local_wrap(spin).reshape(-1, 3)
+        dr = jnp.zeros(nbh.idx.shape + (3,), dtype)
+        sj = jnp.zeros(nbh.idx.shape + (3,), dtype)
+        for sl, interior in slabs:
+            src_p, src_s = ((extl_p, extl_s) if interior
+                            else (extc_p, extc_s))
+            drs = src_p[nbh.idx[sl]] - pos[sl][..., None, :]
+            drs = drs - box * jnp.round(drs / box)
+            dr = dr.at[sl].set(drs)
+            sj = sj.at[sl].set(src_s[nbh.idx[sl]])
+        return nbh._replace(dr=dr, sj=sj)
+
+    def refresh(pos, nbh: DomainNbh, spin=None, tag: str = "drift-pos"
+                ) -> DomainNbh:
+        if spin_in_gather and spin is not None:
+            return refresh_fused(pos, nbh, spin, tag)
+        return refresh_pos_only(pos, nbh, tag)
+
+    def fold_pair_grads(nbh, g_dr, g_sj, k, dtype):
+        """ONE fused adjoint round: reaction forces + neighbor-spin
+        gradients scattered onto ext slots travel back to their owners
+        together (the paper's reverse-communication step)."""
+        g_f = jnp.where(nbh.mask[..., None], g_dr, 0.0)
+        direct = jnp.sum(g_f, axis=-2)
+        g_s = jnp.where(nbh.mask[..., None], g_sj, 0.0)
+        n_ext = (cx + 2) * (cy + 2) * (cz + 2) * k
+        payload = jnp.concatenate([g_f, g_s], axis=-1)     # (..., M, 6)
+        scat = jnp.zeros((n_ext, 6), dtype).at[nbh.idx.reshape(-1)].add(
+            payload.reshape(-1, 6)).reshape(cx + 2, cy + 2, cz + 2, k, 6)
+        folded = fold_halo(scat, axis_map, tag="adjoint",
+                           allgather=allgather)
+        return direct - folded[..., :3], folded[..., 3:]
+
+    def compute_fused(nbh: DomainNbh, spin, types, field=None):
+        """Evaluation from pre-gathered (dr, sj) blocks: zero forward
+        communication; one fused adjoint fold."""
+        k, m_cap = types.shape[3], nbh.idx.shape[-1]
+        dtype = spin.dtype
+        occ = types >= 0
+        ti = jnp.where(occ, types, 0)
+        eps = jnp.asarray(1e-30, dtype)
+
+        def etot(dr, s, sj):
+            drf = dr.reshape(-1, m_cap, 3)
+            dist = jnp.sqrt(jnp.sum(drf * drf, axis=-1) + eps)
+            er = potential.pair_energies(
+                drf, dist, nbh.mask.reshape(-1, m_cap), ti.reshape(-1),
+                nbh.tj.reshape(-1, m_cap), s.reshape(-1, 3),
+                sj.reshape(-1, m_cap, 3))
+            e = jnp.sum(jnp.where(occ.reshape(-1), er, 0.0))
+            if field is not None:
+                mom = jnp.where(occ, potential.site_moments(ti), 0.0)
+                e = e - units.MU_B * jnp.sum(
+                    mom[..., None] * s * jnp.asarray(field, dtype))
+            return e
+
+        e_loc, (g_dr, g_si, g_sj) = jax.value_and_grad(
+            etot, argnums=(0, 1, 2))(nbh.dr, spin, nbh.sj)
+        force, g_nbr = fold_pair_grads(nbh, g_dr, g_sj, k, dtype)
+        # energy stays DEVICE-LOCAL here: the driver folds its global psum
+        # into the once-per-step scalar reduction (with the skin test)
+        return e_loc, force, -(g_si + g_nbr)
+
+    def compute_exchanging(nbh: DomainNbh, spin, types, field=None):
+        """Evaluation that re-exchanges spin ghosts (midpoint iterations
+        evaluate at updated spins): one spin halo per evaluation, ghosts
+        gathered per slab (interior from the comm-free local wrap)."""
+        k, m_cap = types.shape[3], nbh.idx.shape[-1]
+        dtype = spin.dtype
+        occ = types >= 0
+        ti_full = jnp.where(occ, types, 0)
+        eps = jnp.asarray(1e-30, dtype)
+
+        s_extc = early(exchange_halo(spin, axis_map, tag="spin",
+                                     allgather=allgather))
+        s_extl = local_wrap(spin)
+
+        def etot(dr, s, extc, extl):
+            extc_f, extl_f = extc.reshape(-1, 3), extl.reshape(-1, 3)
+            e = jnp.zeros((), dtype)
+            for sl, interior in slabs:
+                src = extl_f if interior else extc_f
+                idx_s = nbh.idx[sl].reshape(-1, m_cap)
+                mask_s = nbh.mask[sl].reshape(-1, m_cap)
+                tj_s = nbh.tj[sl].reshape(-1, m_cap)
+                ti_s = ti_full[sl].reshape(-1)
+                occ_s = occ[sl].reshape(-1)
+                dr_s = dr[sl].reshape(-1, m_cap, 3)
+                si_s = s[sl].reshape(-1, 3)
+                sj_s = src[idx_s]
+                dist = jnp.sqrt(jnp.sum(dr_s * dr_s, axis=-1) + eps)
+                er = potential.pair_energies(dr_s, dist, mask_s, ti_s,
+                                             tj_s, si_s, sj_s)
+                e = e + jnp.sum(jnp.where(occ_s, er, 0.0))
+            if field is not None:
+                mom = jnp.where(occ, potential.site_moments(ti_full), 0.0)
+                e = e - units.MU_B * jnp.sum(
+                    mom[..., None] * s * jnp.asarray(field, dtype))
+            return e
+
+        e_loc, (g_dr, g_s, g_extc, g_extl) = jax.value_and_grad(
+            etot, argnums=(0, 1, 2, 3))(nbh.dr, spin, s_extc, s_extl)
+
+        # fused adjoint round: force reaction + comm-ghost spin gradients;
+        # local-wrap gradients fold back without wire traffic
+        g = jnp.where(nbh.mask[..., None], g_dr, 0.0)
+        direct = jnp.sum(g, axis=-2)
+        n_ext = (cx + 2) * (cy + 2) * (cz + 2) * k
+        scat = jnp.zeros((n_ext, 3), dtype).at[nbh.idx.reshape(-1)].add(
+            g.reshape(-1, 3)).reshape(cx + 2, cy + 2, cz + 2, k, 3)
+        folded = fold_halo_multi({"react": scat, "gspin": g_extc},
+                                 axis_map, tag="adjoint",
+                                 allgather=allgather)
+        g_local = fold_halo(g_extl, (None, None, None))
+        force = direct - folded["react"]
+        heff = -(g_s + folded["gspin"] + g_local)
+        # energy stays device-local (see compute_fused)
+        return e_loc, force, heff
+
+    return refresh, (compute_fused if spin_in_gather
+                     else compute_exchanging)

@@ -10,14 +10,40 @@ Communication volume per device is one cell layer per face =
 O(N_local^{2/3}) - the same surface-to-volume scaling the paper credits for
 its 89.7 % weak-scaling efficiency.
 
-Differentiable: the transpose of ppermute is the reverse ppermute, so
-``jax.grad`` through a halo exchange automatically produces the force
-fold-back ("reverse communication") pass of classical MD codes.
+Three layers of API, used by the sharded fused MD loop
+(:class:`repro.md.simulate.SimulationSharded`):
+
+* :func:`exchange_halo` - single-field exchange (one concatenated array per
+  spatial dim).
+* :func:`exchange_halo_multi` - **fused multi-field exchange**: every field
+  (positions, velocities, spins, types, ids, ...) is flattened and packed
+  into ONE buffer so each sharded axis costs exactly one ppermute pair per
+  direction regardless of how many fields ride along (the paper's
+  aggregated-message halo).  Non-float fields are carried bit-exactly in the
+  float payload (exact for |int| < 2^24 in f32 / 2^53 in f64 - device-local
+  slot ids and atom ids are far below either bound).
+* :func:`fold_halo` - the **adjoint** exchange: ghost-layer contributions
+  (reaction forces scattered onto ghost atoms, neighbor-spin gradients) are
+  sent back to the owning device and accumulated onto the core cells.  This
+  is classical MD "reverse communication" made explicit; it is also exactly
+  the transpose of :func:`exchange_halo`, so ``jax.grad`` through an
+  exchange produces the same collective automatically.
+
+Instrumentation: every exchange/fold records (at **trace time**) its tag,
+call count, and per-device message bytes into the module-level
+:data:`TRACE`.  Because the fused MD chunk traces its step body exactly
+once, the recorded counts ARE the per-step exchange counts - the weak-
+scaling benchmark asserts "one position halo per drift" from this trace
+(see ``benchmarks/scaling.py``).
 """
 from __future__ import annotations
 
+import dataclasses
+from typing import Mapping
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 
@@ -25,12 +51,79 @@ def _perm(n: int, shift: int):
     return [(i, (i + shift) % n) for i in range(n)]
 
 
+# ---------------------------------------------------------------------------
+# trace-time instrumentation
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class HaloTrace:
+    """Trace-time exchange ledger: tag -> (#exchange calls, message bytes).
+
+    Counts are recorded while JAX traces the enclosing jit/scan body, so for
+    a fused chunk (step body traced once) ``counts[tag]`` is the number of
+    logical exchanges *per step* and ``bytes[tag]`` the per-device bytes
+    each such exchange moves per step.
+    """
+
+    counts: dict = dataclasses.field(default_factory=dict)
+    bytes: dict = dataclasses.field(default_factory=dict)
+    # concrete mesh axis sizes, registered by the driver (host side): the
+    # all_gather volume per device is 2w(n-1) face layers, and n is not
+    # observable at trace time inside shard_map
+    axis_sizes: dict = dataclasses.field(default_factory=dict)
+
+    def reset(self):
+        self.counts.clear()
+        self.bytes.clear()
+
+    def record(self, tag: str, n_bytes: int):
+        self.counts[tag] = self.counts.get(tag, 0) + 1
+        self.bytes[tag] = self.bytes.get(tag, 0) + n_bytes
+
+
+TRACE = HaloTrace()
+
+
+def _message_bytes(x: jax.Array, dims, axis_names, width: int,
+                   allgather: bool = False) -> int:
+    """Per-device bytes one exchange of ``x`` moves over sharded axes.
+
+    Axes are exchanged sequentially on the already-extended array, so each
+    axis' face area includes the ghosts of the previous axes.  In
+    allgather mode each device receives 2w(n-1) face layers (every other
+    device's boundary pair) instead of the ppermute pair's 2w.
+    """
+    total = 0
+    shape = list(x.shape)
+    for d, name in zip(dims, axis_names):
+        if name is not None:
+            face = int(np.prod([s for i, s in enumerate(shape) if i != d]))
+            layers = 2 * width
+            if allgather:
+                n = TRACE.axis_sizes.get(name, 2)
+                layers = 2 * width * max(n - 1, 1)
+            total += layers * face * x.dtype.itemsize
+        shape[d] += 2 * width
+    return total
+
+
+# ---------------------------------------------------------------------------
+# forward exchange
+# ---------------------------------------------------------------------------
+
 def exchange_axis(x: jax.Array, dim: int, axis_name: str | None,
-                  width: int = 1) -> jax.Array:
+                  width: int = 1, allgather: bool = False) -> jax.Array:
     """Extend ``x`` with ``width`` ghost layers on both sides of ``dim``.
 
     axis_name None means the spatial dimension is not sharded across
     devices: ghosts come from the periodic wrap of the local array itself.
+
+    ``allgather=True`` moves both boundary layers in ONE ``all_gather``
+    collective instead of two ``ppermute``s: wire volume grows from 2 to
+    2(n-1) face layers, but the exchange costs a single rendezvous - the
+    right trade for small per-axis device counts (and for simulated
+    devices, where rendezvous latency dominates).  Large meshes should
+    keep the ppermute pair (surface-to-volume wire cost).
     """
     lo_slice = [slice(None)] * x.ndim
     hi_slice = [slice(None)] * x.ndim
@@ -42,6 +135,21 @@ def exchange_axis(x: jax.Array, dim: int, axis_name: str | None,
 
     if axis_name is None:
         lo_ghost, hi_ghost = last, first     # periodic wrap locally
+    elif allgather:
+        n = lax.psum(1, axis_name)
+        i = lax.axis_index(axis_name)
+        layers = jnp.concatenate([first, last], axis=dim)  # (2w on dim)
+        gathered = lax.all_gather(layers, axis_name)       # (n, ..., 2w)
+        prev = jax.lax.dynamic_index_in_dim(
+            gathered, (i - 1) % n, axis=0, keepdims=False)
+        nxt = jax.lax.dynamic_index_in_dim(
+            gathered, (i + 1) % n, axis=0, keepdims=False)
+        first_of = [slice(None)] * layers.ndim
+        last_of = [slice(None)] * layers.ndim
+        first_of[dim] = slice(0, width)          # buffer layout: [first|last]
+        last_of[dim] = slice(width, 2 * width)
+        lo_ghost = prev[tuple(last_of)]      # (i-1)'s last layer
+        hi_ghost = nxt[tuple(first_of)]      # (i+1)'s first layer
     else:
         n = lax.psum(1, axis_name)
         # neighbor (i-1) receives my first layer as its hi ghost, etc.
@@ -53,8 +161,174 @@ def exchange_axis(x: jax.Array, dim: int, axis_name: str | None,
 def exchange_halo(x: jax.Array, axis_names: tuple[str | None, str | None,
                                                   str | None],
                   dims: tuple[int, int, int] = (0, 1, 2),
-                  width: int = 1) -> jax.Array:
+                  width: int = 1, tag: str | None = None,
+                  allgather: bool = False) -> jax.Array:
     """Extend a (cx, cy, cz, ...) local block with ghosts on all 3 dims."""
+    if tag is not None:
+        TRACE.record(tag, _message_bytes(x, dims, axis_names, width,
+                                         allgather))
     for d, name in zip(dims, axis_names):
-        x = exchange_axis(x, d, name, width)
+        x = exchange_axis(x, d, name, width, allgather)
     return x
+
+
+def local_wrap(x: jax.Array, dims: tuple[int, int, int] = (0, 1, 2),
+               width: int = 1) -> jax.Array:
+    """Halo-extend using only the local block (periodic self-wrap).
+
+    Ghost slots hold WRONG values wherever an axis is device-sharded - but
+    interior cells never read ghost slots, so interior-cell evaluation from
+    a ``local_wrap`` array is exact AND carries no data dependence on the
+    ppermutes, which is what lets XLA overlap the real exchange with
+    interior compute (see repro.parallel.overlap).
+    """
+    for d in dims:
+        x = exchange_axis(x, d, None, width)
+    return x
+
+
+def exchange_halo_multi(fields: Mapping[str, jax.Array],
+                        axis_names: tuple[str | None, str | None, str | None],
+                        width: int = 1, tag: str = "halo",
+                        allgather: bool = False) -> dict[str, jax.Array]:
+    """Fused multi-field halo exchange: ONE buffer, one ppermute pair per
+    sharded axis per direction, however many fields ride along.
+
+    Every field must share the leading (cx, cy, cz, K) block shape; trailing
+    dims are flattened into the packed feature axis.  Integer/bool fields
+    are carried in the float payload (exact below the mantissa bound) and
+    cast back on unpack.
+    """
+    names = list(fields)
+    arrs = [fields[k] for k in names]
+    base = arrs[0].shape[:4]
+    fdtype = jnp.result_type(*[a.dtype for a in arrs if
+                               jnp.issubdtype(a.dtype, jnp.floating)] or
+                             [jnp.float32])
+    packed, splits, tails, dtypes = [], [], [], []
+    for a in arrs:
+        assert a.shape[:4] == base, (a.shape, base)
+        tails.append(a.shape[4:])
+        dtypes.append(a.dtype)
+        flat = a.reshape(*base, -1).astype(fdtype)
+        splits.append(flat.shape[-1])
+        packed.append(flat)
+    buf = packed[0] if len(packed) == 1 else jnp.concatenate(packed, axis=-1)
+    ext = exchange_halo(buf, axis_names, dims=(0, 1, 2), width=width,
+                        tag=tag, allgather=allgather)
+    out, off = {}, 0
+    for name, w, tail, dt in zip(names, splits, tails, dtypes):
+        part = ext[..., off:off + w]
+        off += w
+        if jnp.issubdtype(dt, jnp.integer):
+            part = jnp.round(part)
+        out[name] = part.reshape(*ext.shape[:4], *tail).astype(dt)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# adjoint exchange (reverse communication / ghost fold-back)
+# ---------------------------------------------------------------------------
+
+def fold_axis(x: jax.Array, dim: int, axis_name: str | None,
+              width: int = 1, allgather: bool = False) -> jax.Array:
+    """Transpose of :func:`exchange_axis`: fold the ghost layers of ``dim``
+    back onto the layers they were copied from and drop them."""
+    w = width
+    lo = [slice(None)] * x.ndim
+    hi = [slice(None)] * x.ndim
+    core = [slice(None)] * x.ndim
+    lo[dim] = slice(0, w)
+    hi[dim] = slice(x.shape[dim] - w, x.shape[dim])
+    core[dim] = slice(w, x.shape[dim] - w)
+    g_lo, g_hi, x_core = x[tuple(lo)], x[tuple(hi)], x[tuple(core)]
+
+    if axis_name is None:
+        add_last, add_first = g_lo, g_hi      # local wrap adjoint
+    elif allgather:
+        n = lax.psum(1, axis_name)
+        i = lax.axis_index(axis_name)
+        buf = jnp.concatenate([g_lo, g_hi], axis=dim)
+        gathered = lax.all_gather(buf, axis_name)
+        # (i+1)'s lo-ghost cotangent lands on my last layer; (i-1)'s
+        # hi-ghost cotangent on my first layer
+        nxt = jax.lax.dynamic_index_in_dim(
+            gathered, (i + 1) % n, axis=0, keepdims=False)
+        prev = jax.lax.dynamic_index_in_dim(
+            gathered, (i - 1) % n, axis=0, keepdims=False)
+        lo_of = [slice(None)] * buf.ndim
+        hi_of = [slice(None)] * buf.ndim
+        lo_of[dim] = slice(0, w)
+        hi_of[dim] = slice(w, 2 * w)
+        add_last = nxt[tuple(lo_of)]
+        add_first = prev[tuple(hi_of)]
+    else:
+        n = lax.psum(1, axis_name)
+        # forward: my lo ghost came from (i-1)'s last layer -> its cotangent
+        # is sent to (i-1) and lands on that device's last layer; symmetric
+        # for the hi ghost.
+        add_last = lax.ppermute(g_lo, axis_name, _perm(n, -1))
+        add_first = lax.ppermute(g_hi, axis_name, _perm(n, +1))
+    first = [slice(None)] * x_core.ndim
+    last = [slice(None)] * x_core.ndim
+    first[dim] = slice(0, w)
+    last[dim] = slice(x_core.shape[dim] - w, x_core.shape[dim])
+    x_core = x_core.at[tuple(first)].add(add_first)
+    x_core = x_core.at[tuple(last)].add(add_last)
+    return x_core
+
+
+def fold_halo(x: jax.Array, axis_names: tuple[str | None, str | None,
+                                              str | None],
+              dims: tuple[int, int, int] = (0, 1, 2),
+              width: int = 1, tag: str | None = None,
+              allgather: bool = False) -> jax.Array:
+    """Fold a halo-extended array's ghost contributions back to their
+    owners, returning the core (cx, cy, cz, ...) block.
+
+    This is the distributed force/field fold-back ("reverse communication"):
+    reaction terms scattered onto ghost copies travel to the owning device
+    and accumulate there.  Axes are folded in reverse exchange order so
+    edge/corner contributions propagate exactly as their forward ghosts did.
+    """
+    if tag is not None:
+        TRACE.record(tag, _message_bytes(x, dims, axis_names, width,
+                                         allgather))
+    for d, name in reversed(list(zip(dims, axis_names))):
+        x = fold_axis(x, d, name, width, allgather)
+    return x
+
+
+def fold_halo_multi(fields: Mapping[str, jax.Array],
+                    axis_names: tuple[str | None, str | None, str | None],
+                    width: int = 1, tag: str = "adjoint",
+                    allgather: bool = False) -> dict[str, jax.Array]:
+    """Fused multi-field adjoint exchange: one buffer, one ppermute pair
+    per sharded axis per direction.
+
+    The sharded MD step uses this to fold the reaction forces scattered
+    onto ghost atoms AND the neighbor-spin gradients (the H_eff ghost
+    contributions) back to their owners in a single collective round - the
+    adjoint mirror of :func:`exchange_halo_multi`.  All fields must share
+    the halo-extended leading (cx+2w, cy+2w, cz+2w, K) block shape.
+    """
+    names = list(fields)
+    arrs = [fields[k] for k in names]
+    base = arrs[0].shape[:4]
+    fdtype = jnp.result_type(*[a.dtype for a in arrs])
+    packed, splits, tails = [], [], []
+    for a in arrs:
+        assert a.shape[:4] == base, (a.shape, base)
+        tails.append(a.shape[4:])
+        flat = a.reshape(*base, -1).astype(fdtype)
+        splits.append(flat.shape[-1])
+        packed.append(flat)
+    buf = packed[0] if len(packed) == 1 else jnp.concatenate(packed, axis=-1)
+    core = fold_halo(buf, axis_names, width=width, tag=tag,
+                     allgather=allgather)
+    out, off = {}, 0
+    for name, w, tail, a in zip(names, splits, tails, arrs):
+        part = core[..., off:off + w]
+        off += w
+        out[name] = part.reshape(*core.shape[:4], *tail).astype(a.dtype)
+    return out

@@ -4,13 +4,18 @@ On TPU+XLA the latency-hiding scheduler overlaps collectives with
 independent compute automatically *when the dependence structure allows
 it*.  These helpers restructure programs so it can:
 
-* ``interleaved_halo_stencil`` - MD: start the halo ppermutes, process the
-  interior cells (no ghost dependency) while ghosts are in flight, then
-  process the boundary shell.  This is the classical MD overlap trick
-  (compute interior during halo exchange) expressed so XLA's scheduler can
-  see the independence - the interior term depends only on local data.
+* :func:`shell_slabs` - the static interior/boundary decomposition of a
+  local cell grid used by the sharded fused MD loop: the **interior** block
+  (cells whose whole 27-stencil is local) is one contiguous slice, and the
+  **boundary shell** is six face slabs.  The domain evaluator feeds the
+  interior slab from a :func:`repro.parallel.halo.local_wrap` array (no
+  ppermute dependence) and only the shell slabs from the real exchanged
+  array - so XLA's scheduler is free to run the interior pair computation
+  while face ghosts are still in flight.  This is the classical MD overlap
+  trick (compute interior during halo exchange) expressed through the
+  dependence structure instead of explicit async sends.
 
-* ``async_all_reduce_hint`` - tags a collective as schedulable-early by
+* :func:`issue_early` - tags a collective as schedulable-early by
   separating its issue point from its use point (optimization barrier on
   the consumer side only).
 """
@@ -18,6 +23,32 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+
+def shell_slabs(shape: tuple[int, int, int]
+                ) -> list[tuple[tuple[slice, slice, slice], bool]]:
+    """Static interior/boundary slab decomposition of a (cx, cy, cz) grid.
+
+    Returns ``[(slices, is_interior), ...]`` where the slices partition the
+    grid exactly (no cell appears twice): the interior block first, then up
+    to six boundary slabs (x faces full, y faces minus x faces, z faces
+    minus both).  When any dim is < 3 there is no interior and the whole
+    grid is a single boundary slab.
+    """
+    cx, cy, cz = shape
+    if min(cx, cy, cz) < 3:
+        return [((slice(0, cx), slice(0, cy), slice(0, cz)), False)]
+    inner_x, inner_y = slice(1, cx - 1), slice(1, cy - 1)
+    slabs: list[tuple[tuple[slice, slice, slice], bool]] = [
+        ((inner_x, inner_y, slice(1, cz - 1)), True),          # interior
+        ((slice(0, 1), slice(0, cy), slice(0, cz)), False),    # x faces
+        ((slice(cx - 1, cx), slice(0, cy), slice(0, cz)), False),
+        ((inner_x, slice(0, 1), slice(0, cz)), False),         # y faces
+        ((inner_x, slice(cy - 1, cy), slice(0, cz)), False),
+        ((inner_x, inner_y, slice(0, 1)), False),              # z faces
+        ((inner_x, inner_y, slice(cz - 1, cz)), False),
+    ]
+    return slabs
 
 
 def split_interior_boundary(x: jax.Array, dims=(0, 1, 2)):
@@ -33,8 +64,17 @@ def split_interior_boundary(x: jax.Array, dims=(0, 1, 2)):
     return interior, ~interior
 
 
+@jax.custom_jvp
 def issue_early(x: jax.Array) -> jax.Array:
     """Mark ``x`` (typically a fresh collective result) so XLA may schedule
     its producer as early as possible without fusing it into the consumer
-    (optimization_barrier between producer and consumer)."""
+    (optimization_barrier between producer and consumer).  Differentiates
+    as the identity - the barrier is a scheduling hint on the forward value
+    only - so it can sit inside the distributed energy scalar whose grad is
+    the force/field fold-back."""
     return jax.lax.optimization_barrier(x)
+
+
+@issue_early.defjvp
+def _issue_early_jvp(primals, tangents):
+    return issue_early(primals[0]), tangents[0]

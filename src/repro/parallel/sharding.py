@@ -95,6 +95,28 @@ def resolve_spec(mesh, logical: tuple, shape: tuple[int, ...],
     return P(*parts)
 
 
+def shard_map_compat(f, mesh, in_specs, out_specs):
+    """``shard_map`` portable across jax versions.
+
+    jax >= 0.5 exposes ``jax.shard_map`` (replication checking via
+    ``check_vma``); 0.4.x only has ``jax.experimental.shard_map.shard_map``
+    (``check_rep``).  Replication checking is disabled either way: the
+    domain-decomposed MD code mixes per-device values (halo ghosts, local
+    tables) with replicated scalars, which the checker cannot express.
+    """
+    smfn = getattr(jax, "shard_map", None)
+    if smfn is not None:
+        try:
+            return smfn(f, mesh=mesh, in_specs=in_specs,
+                        out_specs=out_specs, check_vma=False)
+        except TypeError:
+            return smfn(f, mesh=mesh, in_specs=in_specs,
+                        out_specs=out_specs, check_rep=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
+
+
 _ACTIVE_MODE = ["tp"]
 
 
