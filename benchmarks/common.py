@@ -1,6 +1,7 @@
 """Shared benchmark utilities."""
 from __future__ import annotations
 
+import json
 import os
 import time
 
@@ -32,3 +33,26 @@ def row(name: str, us_per_call: float, derived: str = "") -> str:
     line = f"{name},{us_per_call:.1f},{derived}"
     print(line, flush=True)
     return line
+
+
+def provenance() -> dict:
+    """Environment stamp for emitted BENCH_*.json: perf numbers are only
+    comparable across PRs when the jax version / backend / device count
+    match."""
+    return {
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "host_cores": os.cpu_count() or 1,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+    }
+
+
+def write_json(path: str, payload: dict) -> str:
+    """Write a BENCH_*.json with the provenance stamp attached."""
+    payload = dict(payload)
+    payload["provenance"] = provenance()
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {os.path.basename(path)}", flush=True)
+    return path

@@ -46,10 +46,14 @@ def main() -> list[str]:
     base_t = None
     for n_rep in (1, 4, 16):
         ens, temp, fld, n_atoms = _ensemble(n_rep)
+        # one compiled engine chunk: R replicas, schedules evaluated
+        # in-scan, per-chunk observables reduced in-graph
+        eng = ens._engine
+        targ = eng._norm_arg(temp, vec=False)
+        farg = eng._norm_arg(fld, vec=True)
 
         def do_chunk(key):
-            return ens._chunk(ens.states, ens._ffs, ens.table, ens._nbh,
-                              key, temp, fld, CHUNK)
+            return eng._chunk_fn(eng._carry, key, targ, farg, CHUNK, None)
 
         t = timeit(lambda: do_chunk(jax.random.PRNGKey(1)),
                    warmup=1, iters=3)

@@ -22,7 +22,6 @@ trajectory is tracked from this PR onward.  CSV rows: name, us_per_call
 """
 from __future__ import annotations
 
-import json
 import os
 import time
 
@@ -150,10 +149,9 @@ def main() -> list[str]:
         out["potentials"]["nep_kernel"]["fused"]["steps_per_s"]
         / out["potentials"]["nep"]["fused"]["steps_per_s"])
     if not SMOKE:  # the tracked perf trajectory holds full-size runs only
-        path = os.path.join(os.path.dirname(os.path.dirname(
-            os.path.abspath(__file__))), "BENCH_md_loop.json")
-        with open(path, "w") as f:
-            json.dump(out, f, indent=2)
+        from benchmarks.common import write_json
+        write_json(os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "BENCH_md_loop.json"), out)
     return rows
 
 

@@ -1,12 +1,20 @@
-"""Benchmark harness: one module per paper table/figure.
+"""Benchmark harness: one registered module per paper table/figure.
 
-  ablation.py    - Fig. 5  single-node optimization ablation
-  throughput.py  - Fig. 6 / Table I  atom-step/s vs system size, TtS
-  scaling.py     - Fig. 7/8 / Table V  weak & strong scaling projections
-  accuracy.py    - Table IV  NEP-SPIN vs baseline accuracy
-  kernels.py     - kernel-level microbenchmarks (fused vs reference)
-  ensemble.py    - Fig. 9 scenario engine: vmapped replicas vs sequential
-  md_loop.py     - fused in-scan hot loop vs pre-fusion driver (PR 2)
+  ablation    - Fig. 5  single-node optimization ablation
+  throughput  - Fig. 6 / Table I  atom-step/s vs system size, TtS
+  scaling     - Fig. 7/8 / Table V  weak scaling of the SHARDED fused loop
+                (writes BENCH_scaling.json, incl. the nep_kernel entry)
+  accuracy    - Table IV  NEP-SPIN vs baseline accuracy
+  kernels     - kernel-level microbenchmarks (fused vs reference)
+  ensemble    - Fig. 9 scenario engine: vmapped replicas vs sequential
+  md_loop     - fused in-scan hot loop vs pre-fusion driver
+                (writes BENCH_md_loop.json)
+
+One command refreshes every emitted ``BENCH_*.json`` (each stamped with
+jax-version/backend/device-count provenance via ``benchmarks.common``):
+
+  PYTHONPATH=src python -m benchmarks.run                 # all modules
+  PYTHONPATH=src python -m benchmarks.run --only md_loop,scaling
 
 Prints ``name,us_per_call,derived`` CSV rows.  ``--smoke`` (or
 BENCH_SMOKE=1) runs every benchmark for 1 iteration on downscaled problems
@@ -18,16 +26,31 @@ import os
 import sys
 import traceback
 
+# registration order = execution order (cheap first)
+REGISTRY = ("kernels", "ablation", "throughput", "scaling", "accuracy",
+            "ensemble", "md_loop")
+
 
 def main() -> None:
-    if "--smoke" in sys.argv[1:]:
+    argv = sys.argv[1:]
+    if "--smoke" in argv:
         os.environ["BENCH_SMOKE"] = "1"
-    from benchmarks import (ablation, accuracy, ensemble, kernels, md_loop,
-                            scaling, throughput)
+    selected = list(REGISTRY)
+    if "--only" in argv:
+        if argv.index("--only") + 1 >= len(argv):
+            sys.exit(f"--only needs a comma-separated subset of: "
+                     f"{', '.join(REGISTRY)}")
+        names = argv[argv.index("--only") + 1].split(",")
+        unknown = [n for n in names if n not in REGISTRY]
+        if unknown:
+            sys.exit(f"unknown benchmark(s) {unknown}; registry: "
+                     f"{', '.join(REGISTRY)}")
+        selected = names
+    import importlib
+    modules = [importlib.import_module(f"benchmarks.{n}") for n in selected]
     print("name,us_per_call,derived")
     failures = []
-    for mod in (kernels, ablation, throughput, scaling, accuracy, ensemble,
-                md_loop):
+    for mod in modules:
         try:
             mod.main()
         except Exception as e:

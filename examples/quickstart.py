@@ -23,8 +23,9 @@ from repro.core.descriptor import NEPSpinSpec
 from repro.core.hamiltonian import HeisenbergDMIModel
 from repro.core.training import (fit_adam, fit_snes, generate_dataset,
                                  rmse_metrics)
+from repro.md.engine import Engine
+from repro.md.integrator import IntegratorConfig
 from repro.md.lattice import simple_cubic
-from repro.md.neighbor import dense_neighbor_table
 from repro.md.state import init_state
 
 
@@ -65,16 +66,30 @@ def main():
           f"H {float(m['h_rmse'])*1e3:.2f} meV/muB")
 
     print("\n[3/3] helix-pitch selection with the FITTED potential ...")
-    from repro.core.potential import energy as nep_energy
+    # the fitted surrogate drives the SAME unified engine as the reference
+    # Hamiltonian (the evaluator is one of the engine's four axes); the
+    # initial gather-once evaluation gives E(R, S) for each candidate helix
+    from repro.core.potential import NEPSpinPotential
+    potential = NEPSpinPotential(spec, params)
     n = 16
-    st0 = init_state(lat, (n, 2, 2), spin_init="ferro_z")
-    tab = dense_neighbor_table(st0.pos, st0.box, spec.cutoff, 16)
+    masses = jnp.asarray(lat.masses)
+    magnetic = jnp.asarray(lat.moments) > 0
     energies = {}
+    eng = None
     for k_mode in (1, 2, 3, 4):
         st = init_state(lat, (n, 2, 2), spin_init="helix_x",
                         helix_pitch=n * lat.a / k_mode)
-        e = float(nep_energy(spec, params, st.pos, st.spin, st.types, tab,
-                             st.box))
+        if eng is None:
+            eng = Engine(potential=potential, cfg=IntegratorConfig(),
+                         state=st, masses=masses, magnetic=magnetic,
+                         cutoff=spec.cutoff, capacity=16,
+                         observables=("energy",))
+        else:
+            # same crystal, new spin texture: swap the state in and let a
+            # zero-step run re-evaluate (one engine, one table geometry)
+            eng.state = st
+            eng.run(0, jax.random.PRNGKey(0))
+        e = float(eng.energy)
         energies[k_mode] = e
         pitch = n * lat.a / k_mode
         print(f"  helix pitch {pitch:6.1f} A (k={k_mode}): "

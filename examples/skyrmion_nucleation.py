@@ -1,20 +1,24 @@
 """End-to-end driver: real-temperature helix -> skyrmion transformation
-(paper Fig. 9 field-cooling protocol at reduced scale), run as an ENSEMBLE.
+(paper Fig. 9 field-cooling protocol at reduced scale), run as an ENSEMBLE
+through the unified simulation engine.
 
   PYTHONPATH=src python examples/skyrmion_nucleation.py [--steps 2000]
       [--replicas 4] [--cold]
 
 A thin FeGe-like film (large D/J so textures fit the box) is initialized
 as a helix and driven through the paper's field-cooling protocol: hold hot
-under a perpendicular field, ramp the temperature down, hold cold.  All
-replicas advance together through the vmapped ensemble engine - one
-compiled scan per chunk serves every replica, with the (T, B) schedule
-evaluated inside the scan - and differ only in their thermostat RNG
-streams, so the run resolves nucleation *statistics*, not one trajectory:
-WITH thermal activation the helix breaks up and nonzero topological charge
-(skyrmion seeds) appears in most replicas; withOUT it (--cold) the helix
-stays intact in every replica under the same field.  Per-chunk topological
-charge Q is streamed for each replica throughout.
+under a perpendicular field, ramp the temperature down, hold cold.  The
+(T, B) schedules are evaluated INSIDE the compiled scan; all replicas
+advance together through one engine chunk and differ only in their
+thermostat RNG streams, so the run resolves nucleation *statistics*, not
+one trajectory: WITH thermal activation the helix breaks up and nonzero
+topological charge (skyrmion seeds) appears in most replicas; withOUT it
+(--cold) the helix stays intact in every replica under the same field.
+Per-chunk topological charge Q is streamed for each replica from the
+engine's in-chunk observable pipeline.  (The same schedules drive the
+shard_map domain plan unchanged - see scripts/engine_smoke.py and
+tests/test_engine.py - but this film is too thin to domain-decompose at
+the model's cutoff, so the example stays on the replica plan.)
 """
 import argparse
 import sys
@@ -29,10 +33,11 @@ sys.path.insert(0, "src")
 from repro.configs.fege_spinlattice import nucleation_ensemble
 from repro.core.hamiltonian import HeisenbergDMIModel
 from repro.ensemble import protocol
-from repro.ensemble.replica import ReplicaEnsemble, replicate
+from repro.md.engine import Engine
 from repro.md.integrator import IntegratorConfig
 from repro.md.lattice import simple_cubic
 from repro.md.state import init_state
+from repro.parallel.plan import Replicated
 
 
 def run(thermal: bool, steps: int, n_replicas: int, field: float,
@@ -57,24 +62,29 @@ def run(thermal: bool, steps: int, n_replicas: int, field: float,
     if not thermal:
         temp = protocol.constant(0.0)
 
-    ens = ReplicaEnsemble(
-        potential=ham, cfg=cfg, states=replicate(st, n_replicas),
+    plan = Replicated(n_replicas)
+    eng = Engine(
+        potential=ham, cfg=cfg, state=st,
         masses=jnp.asarray(lat.masses),
-        magnetic=jnp.asarray(lat.moments) > 0,
-        cutoff=5.0, capacity=8, diag_grid=(32, 32))
+        magnetic=jnp.asarray(lat.moments) > 0, cutoff=5.0, capacity=8,
+        plan=plan, temperature=temp, field=bfield, diag_grid=(32, 32),
+        observables=("energy", "magnetization", "charge"))
 
     label = "thermal" if thermal else "cold"
     print(f"\n=== {label}: T {ecfg.t_hot if thermal else 0:.0f}"
           f" -> {ecfg.t_cold if thermal else 0:.0f} K, B = {field} T, "
-          f"{n_replicas} replicas x {st.n_atoms} atoms ===")
+          f"{n_replicas} replicas x {st.n_atoms} atoms "
+          f"[{type(plan).__name__} plan] ===")
     t0 = time.time()
-    trace = ens.run(steps, jax.random.PRNGKey(seed), temperature=temp,
-                    field=bfield, chunk=ecfg.chunk)
-    for c in range(trace.charge.shape[0]):
-        qs = " ".join(f"{q:+6.2f}" for q in trace.charge[c])
-        print(f"  t={trace.time[c]:6.2f} ps  T={trace.temperature[c, 0]:5.1f} K"
+    eng.run(steps, jax.random.PRNGKey(seed), chunk=ecfg.chunk)
+    trace = eng.trace
+    charge = np.asarray(trace.values["charge"])    # (chunks, replicas)
+    for c in range(charge.shape[0]):
+        t_c = trace.time[c]
+        qs = " ".join(f"{q:+6.2f}" for q in charge[c])
+        print(f"  t={t_c:6.2f} ps  T={float(temp.at(t_c)):5.1f} K"
               f"  Q per replica: [{qs}]  ({time.time()-t0:.0f}s)")
-    return trace
+    return charge
 
 
 def main():
@@ -88,18 +98,18 @@ def main():
     args = ap.parse_args()
 
     if not args.cold:
-        tr_thermal = run(True, args.steps, args.replicas, args.field)
+        q_thermal = run(True, args.steps, args.replicas, args.field)
     # the cold control is deterministic (no thermostat noise), so replicas
     # would be bit-identical - one is enough
-    tr_cold = run(False, args.steps, 1, args.field)
+    q_cold = run(False, args.steps, 1, args.field)
 
     print("\n=== conclusion (ensemble statistics, settled half of run) ===")
-    half = tr_cold.charge.shape[0] // 2
-    q_cold = np.abs(tr_cold.charge[half:]).max(axis=0)  # per replica |Q|_max
-    print(f"cold    |Q|_max per replica = {np.round(q_cold, 2)} "
+    half = q_cold.shape[0] // 2
+    qc = np.abs(q_cold[half:]).max(axis=0)   # per replica |Q|_max
+    print(f"cold    |Q|_max per replica = {np.round(qc, 2)} "
           "(helix intact: field alone cannot break it)")
     if not args.cold:
-        q_th = np.abs(tr_thermal.charge[half:]).max(axis=0)
+        q_th = np.abs(q_thermal[half:]).max(axis=0)
         frac = float((q_th > 0.5).mean())
         print(f"thermal |Q|_max per replica = {np.round(q_th, 2)}")
         print(f"nucleation fraction = {frac:.2f} of {args.replicas} replicas "

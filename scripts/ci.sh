@@ -9,11 +9,18 @@
 #                                        includes benchmarks/scaling.py,
 #                                        which spawns a 2-simulated-device
 #                                        subprocess so the shard_map domain
-#                                        loop compiles in CI.
+#                                        loop compiles in CI, and the
+#                                        2-device ENGINE smoke: one
+#                                        schedule-driven sharded chunk plus
+#                                        a checkpoint/resume cycle asserted
+#                                        bitwise (scripts/engine_smoke.py).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 if [[ "${1:-}" == "--smoke" ]]; then
+  env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+      XLA_FLAGS="--xla_force_host_platform_device_count=2" \
+      python scripts/engine_smoke.py
   exec env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" BENCH_SMOKE=1 \
       python -m benchmarks.run --smoke
 fi

@@ -1,1 +1,2 @@
-from repro.ckpt.checkpoint import save_checkpoint, load_checkpoint, latest_step
+from repro.ckpt.checkpoint import (latest_step, load_checkpoint, load_md,
+                                   save_checkpoint, save_md)

@@ -90,6 +90,42 @@ def latest_step(directory: str) -> int | None:
     return best
 
 
+# ---------------------------------------------------------------------------
+# MD surface: chunk-boundary carry + RNG-key snapshots for the engine
+# ---------------------------------------------------------------------------
+
+def save_md(directory: str, step: int, carry, key, *, keep: int = 3,
+            async_: bool = False) -> str:
+    """Checkpoint an MD engine's hot carry + run RNG key.
+
+    The carry is the COMPLETE device-resident loop state of one compiled
+    chunk (state, forces, neighbor blocks, permutations / atom ids, rebuild
+    counters - see repro.md.engine), so restoring it at a chunk boundary
+    and resuming with the saved key reproduces the uninterrupted trajectory
+    bitwise on every parallel plan.  Sharded carries are gathered to host
+    (leaves are saved unsharded); pass ``shardings`` to :func:`load_md` for
+    direct sharded re-placement.
+    """
+    return save_checkpoint(directory, step, {"carry": carry, "key": key},
+                           keep=keep, async_=async_)
+
+
+def load_md(directory: str, carry_like, *, step: int | None = None,
+            shardings=None):
+    """Restore (carry, key, step) saved by :func:`save_md`.
+
+    ``carry_like`` supplies the pytree structure (the engine's current
+    carry); ``shardings``: optional ``{"carry": tree-of-NamedSharding,
+    "key": NamedSharding}`` for sharded placement onto a device mesh.
+    """
+    import jax.numpy as jnp
+    key_like = jnp.zeros((2,), jnp.uint32)
+    tree, step = load_checkpoint(directory, {"carry": carry_like,
+                                             "key": key_like},
+                                 step=step, shardings=shardings)
+    return tree["carry"], tree["key"], step
+
+
 def load_checkpoint(directory: str, tree_like, step: int | None = None,
                     shardings=None):
     """Restore into the structure of ``tree_like``. ``shardings``: optional

@@ -9,12 +9,17 @@ three pieces on top of the runtime-(T, B) integrator (repro.md.integrator):
   protocol.py  composable piecewise-linear schedules for temperature and
                external field (ramps, quenches, holds, Fig.-9 field
                cooling), evaluated inside the jitted scan - one compiled
-               program per protocol chunk.
-  replica.py   the vmapped multi-replica engine: SpinLatticeState batched
-               over a leading replica axis, one shared neighbor table, one
-               compiled step for every replica, per-replica counter-derived
-               RNG streams, streaming per-chunk diagnostics
-               (EnsembleTrace), optional replica-axis device sharding.
+               program per protocol chunk.  Schedules drive EVERY plan of
+               the unified engine (repro.md.engine), including the
+               shard_map domain decomposition.
+  replica.py   ReplicaEnsemble, a facade over the engine's Replicated
+               plan: SpinLatticeState batched over a leading replica
+               axis, one shared neighbor table, one compiled step for
+               every replica, per-replica counter-derived RNG streams,
+               streaming per-chunk diagnostics (EnsembleTrace), optional
+               replica-axis device sharding, between-chunk parallel
+               tempering; run_sharded_sweep drives (T,B) points or full
+               Schedules through the sharded plan.
   exchange.py  parallel-tempering replica exchange over a temperature
                ladder (Metropolis swap criterion, even/odd neighbor
                sweeps, velocity rescaling on accepted swaps).

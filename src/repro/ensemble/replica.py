@@ -1,11 +1,11 @@
-"""Vmapped multi-replica spin-lattice engine (fused hot loop).
+"""Vmapped multi-replica spin-lattice ensemble: a facade over the engine.
 
-Batches :class:`SpinLatticeState` over a leading replica axis and drives all
-replicas through ONE compiled chunk: a ``lax.scan`` over steps whose body
-``vmap``s the gather-once coupled step
-(:func:`repro.md.integrator.make_fused_step`), with per-step per-replica
-temperature and field evaluated from :mod:`repro.ensemble.protocol`
-schedules inside the jit.
+The replica chunk driver lives in :class:`repro.md.engine.Engine` (plan
+:class:`repro.parallel.plan.Replicated`): :class:`SpinLatticeState` batched
+over a leading replica axis, ONE compiled chunk driving every replica - a
+``lax.scan`` over steps whose body ``vmap``s the gather-once coupled step,
+with per-step per-replica temperature and field evaluated from
+:mod:`repro.ensemble.protocol` schedules *inside* the jit.
 
 All replicas share one neighbor table (crystalline FeGe barely diffuses):
 the table-static blocks of the :class:`~repro.md.neighbor.Neighborhood`
@@ -15,7 +15,7 @@ refreshed by a single batched gather inside the vmapped step.  The
 half-skin rebuild test runs per step *in-graph*: when any replica trips it,
 a ``lax.cond`` branch rebuilds the shared table from the replica-mean
 positions, re-gathers, and re-evaluates forces - no recompiles and no host
-round-trips, closing the ROADMAP item on fusing the chunk loop.
+round-trips.
 
 Replicas consume independent counter-derived RNG streams
 (``fold_in(step_key, replica_id)``), so a vmapped chunk is bitwise-
@@ -23,18 +23,19 @@ reproducible against a loop of single-replica steps driven with the same
 keys (tested in tests/test_fused_loop.py).
 
 Streaming diagnostics (topological charge, magnetization, helix pitch,
-potential energy - the paper's Fig. 4/9 observables) are reduced per chunk
-inside the same jit and accumulated into an :class:`EnsembleTrace`.
+potential energy - the paper's Fig. 4/9 observables) come from the
+engine's in-chunk observable pipeline and are accumulated into an
+:class:`EnsembleTrace`.
 
-Optional parallel-tempering: pass a per-replica temperature ladder and
-``exchange_every`` to attempt Metropolis swaps between chunks
-(repro.ensemble.exchange).  Optional multi-device scaling: call
-:meth:`ReplicaEnsemble.shard` to shard the replica axis across devices.
+This facade adds the *between-chunk* ensemble features on top of the
+engine: parallel-tempering replica exchange over a temperature ladder
+(``exchange_every``; repro.ensemble.exchange) and per-chunk callbacks.
+Optional multi-device scaling: :meth:`ReplicaEnsemble.shard` shards the
+replica axis across devices.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Callable, NamedTuple
 
 import jax
@@ -43,15 +44,10 @@ import numpy as np
 
 from repro.ensemble import protocol
 from repro.ensemble.exchange import apply_exchange
-from repro.md.analysis import helix_pitch, magnetization, topological_charge
-from repro.md.integrator import ForceField, IntegratorConfig, make_fused_step
-from repro.md.neighbor import (NeighborTable, Neighborhood,
-                               make_table_builder, needs_rebuild, refresh_dr)
+from repro.md.engine import Engine
+from repro.md.integrator import ForceField, IntegratorConfig
+from repro.md.neighbor import NeighborTable
 from repro.md.state import SpinLatticeState
-
-# vmap axis spec for a replica-shared Neighborhood: table-static blocks are
-# unbatched (one copy for all replicas), dr is replica-batched
-_NBH_AXES = Neighborhood(idx=None, mask=None, tj=None, dr=0)
 
 
 class EnsembleTrace(NamedTuple):
@@ -105,19 +101,31 @@ class ReplicaEnsemble:
     diag_grid: tuple[int, int] = (32, 32)
     pitch_bins: int = 64
     table: NeighborTable | None = None
-    _chunk: Callable | None = None
     _ffs: ForceField | None = None
 
     def __post_init__(self):
+        from repro.parallel.plan import Replicated
         if self.states.pos.ndim != 3:
             raise ValueError("states must be replica-batched (R, N, 3); "
                              "use ensemble.replica.replicate()")
         if not hasattr(self.potential, "compute"):
             raise ValueError("ReplicaEnsemble drives the fused loop and "
                              "needs a potential with .compute()")
-        self._types0 = self.states.types[0]
-        self._box0 = self.states.box[0]
-        self._setup()
+        self._engine = Engine(
+            potential=self.potential, cfg=self.cfg, state=self.states,
+            masses=self.masses, magnetic=self.magnetic, cutoff=self.cutoff,
+            plan=Replicated(self.states.pos.shape[0]),
+            observables=("energy", "magnetization", "charge", "pitch"),
+            capacity=self.capacity, skin=self.skin,
+            use_cell_list=self.use_cell_list,
+            cell_capacity=self.cell_capacity, diag_grid=self.diag_grid,
+            pitch_bins=self.pitch_bins, table=self.table)
+        self._pull()
+
+    def _pull(self):
+        self.states = self._engine.state
+        self._ffs = self._engine._ff
+        self.table = self._engine.table
 
     # ------------------------------------------------------------------
     @property
@@ -135,130 +143,10 @@ class ReplicaEnsemble:
         return float(self.states.step[0]) * self.cfg.dt
 
     # ------------------------------------------------------------------
-    def _setup(self):
-        """Compile-once setup: geometry statics, fused chunk, initial carry."""
-        types0, box0 = self._types0, self._box0
-        potential, diag_grid = self.potential, self.diag_grid
-        pitch_bins, mag_types = self.pitch_bins, self.magnetic
-        skin, dt, r = self.skin, self.cfg.dt, self.n_replicas
-
-        build, _, _ = make_table_builder(box0, self.cutoff, self.capacity,
-                                         self.cell_capacity, skin,
-                                         self.use_cell_list)
-
-        def compute_ff(nbh, spin, types, field=None):
-            return ForceField(*potential.compute(nbh, spin, types, field))
-
-        def reference_pos(states):
-            """Replica-mean positions (min-imaged around replica 0) - the
-            crystalline reference the shared table is built from."""
-            p0 = states.pos[0]
-            d = states.pos - p0[None]
-            d = d - box0 * jnp.round(d / box0)
-            return p0 + jnp.mean(d, axis=0)
-
-        def shared_blocks(table, pos_r):
-            """Table-static blocks (one copy) + per-replica dr gather."""
-            base = Neighborhood(idx=table.idx, mask=table.mask,
-                                tj=types0[table.idx],
-                                dr=jnp.zeros(table.idx.shape + (3,),
-                                             pos_r.dtype))
-            drs = jax.vmap(lambda p: refresh_dr(base, p, box0).dr)(pos_r)
-            return base._replace(dr=drs)
-
-        def build_shared(states, field_r):
-            """Rebuild the shared table + per-replica dr / forces."""
-            table = build(reference_pos(states), box0)
-            nbh = shared_blocks(table, states.pos)
-            ffs = jax.vmap(
-                lambda d, s, f: compute_ff(nbh._replace(dr=d), s, types0, f)
-            )(nbh.dr, states.spin, field_r)
-            return table, nbh, ffs
-
-        step = make_fused_step(
-            gather=lambda pos, nbh: refresh_dr(nbh, pos, box0),
-            compute=compute_ff, cfg=self.cfg, masses=self.masses,
-            magnetic=self.magnetic)
-        vstep = jax.vmap(step, in_axes=(0, 0, _NBH_AXES, 0, 0, 0),
-                         out_axes=(0, 0, _NBH_AXES))
-        self._vcompute = jax.jit(jax.vmap(
-            lambda d, s, f, nbh: compute_ff(nbh._replace(dr=d), s, types0, f),
-            in_axes=(0, 0, 0, _NBH_AXES)))
-
-        def diag_one(st: SpinLatticeState, f: ForceField):
-            mag = mag_types[jnp.maximum(st.types, 0)]
-            q = topological_charge(st.pos, st.spin, st.box, grid=diag_grid)
-            mz = magnetization(st.spin, mask=mag)[2]
-            lam = helix_pitch(st.pos, st.spin, st.box, axis=0,
-                              n_bins=pitch_bins)
-            return q, mz, lam, f.energy
-
-        @partial(jax.jit, static_argnames=("n",))
-        def chunk(states, ffs, table, nbh, key, tsched, fsched, n):
-            # schedules evaluated INSIDE the jit: the whole protocol chunk
-            # (ramp, quench, hold) is one compiled scan
-            t0 = states.step[0].astype(jnp.float32) * dt
-            ts = t0 + jnp.arange(n, dtype=jnp.float32) * dt
-            temps = tsched.at(ts)                       # (n,) or (n,R)
-            if temps.ndim == 1:
-                temps = jnp.broadcast_to(temps[:, None], (n, r))
-            fields = fsched.at(ts)                      # (n,3) or (n,R,3)
-            if fields.ndim == 2:
-                fields = jnp.broadcast_to(fields[:, None, :], (n, r, 3))
-
-            def body(carry, xs):
-                states, ffs, table, nbh = carry
-                k, temp, bfield = xs
-
-                def do_rebuild(c):
-                    states, _ffs, _table, _nbh = c
-                    table2, nbh2, ffs2 = build_shared(states, bfield)
-                    return states, ffs2, table2, nbh2
-
-                trip = jnp.any(jax.vmap(
-                    lambda p: needs_rebuild(table, p, box0, skin))(states.pos))
-                states, ffs, table, nbh = jax.lax.cond(
-                    trip, do_rebuild, lambda c: c, (states, ffs, table, nbh))
-                keys = jax.vmap(lambda i: jax.random.fold_in(k, i))(
-                    jnp.arange(r))
-                states, ffs, nbh = vstep(states, ffs, nbh, keys, temp, bfield)
-                return (states, ffs, table, nbh), None
-
-            keys = jax.random.split(key, n)
-            (states, ffs, table, nbh), _ = jax.lax.scan(
-                body, (states, ffs, table, nbh), (keys, temps, fields))
-            q, mz, lam, e = jax.vmap(diag_one)(states, ffs)
-            return states, ffs, table, nbh, (q, mz, lam, e)
-
-        self._chunk = chunk
-
-        # initial shared table + blocks + forces (zero field; run() re-
-        # evaluates at the protocol's starting field)
-        f0 = jnp.zeros((r, 3), self.states.pos.dtype)
-        if self.table is not None:
-            self._nbh = shared_blocks(self.table, self.states.pos)
-            self._ffs = self._vcompute(self._nbh.dr, self.states.spin, f0,
-                                       self._nbh)
-        else:
-            self.table, self._nbh, self._ffs = build_shared(self.states, f0)
-
-    # ------------------------------------------------------------------
     def shard(self, devices=None) -> "ReplicaEnsemble":
         """Shard the replica axis across devices (no-op on one device)."""
-        devices = list(devices if devices is not None else jax.devices())
-        if len(devices) <= 1:
-            return self
-        if self.n_replicas % len(devices) != 0:
-            raise ValueError(f"{self.n_replicas} replicas not divisible by "
-                             f"{len(devices)} devices")
-        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-        mesh = Mesh(np.asarray(devices), ("replica",))
-        put = lambda tree: jax.tree_util.tree_map(
-            lambda x: jax.device_put(x, NamedSharding(mesh, P("replica"))),
-            tree)
-        self.states = put(self.states)
-        self._ffs = put(self._ffs)
-        self._nbh = self._nbh._replace(dr=put(self._nbh.dr))
+        self._engine.shard_replicas(devices)
+        self._pull()
         return self
 
     # ------------------------------------------------------------------
@@ -278,6 +166,7 @@ class ReplicaEnsemble:
         Returns the per-chunk :class:`EnsembleTrace`.
         """
         r = self.n_replicas
+        eng = self._engine
         tsched = _as_schedule(temperature, self.cfg.temperature)
         fsched = _as_schedule(field, jnp.zeros((3,)))
         if exchange_every:
@@ -291,14 +180,11 @@ class ReplicaEnsemble:
         # refresh dr at the CURRENT positions (the caller may have nudged
         # ``states`` between runs; sub-half-skin moves never trip the
         # in-scan rebuild) and re-evaluate forces at the protocol's
-        # starting field (construction-time ffs were computed at zero
-        # field, and a previous run() may have used a different schedule)
-        self._nbh = self._nbh._replace(dr=jax.vmap(
-            lambda p: refresh_dr(self._nbh, p, self._box0).dr)(
-                self.states.pos))
-        self._ffs = self._vcompute(
-            self._nbh.dr, self.states.spin,
-            jnp.broadcast_to(fsched.at(self.time), (r, 3)), self._nbh)
+        # starting field
+        eng.state = self.states
+        eng._replica_resync(fsched)
+        targ = eng._replica_put(eng._norm_arg(tsched, vec=False))
+        farg = eng._replica_put(eng._norm_arg(fsched, vec=True))
 
         rows, times, temps_log = [], [], []
         n_acc = n_att = 0
@@ -307,37 +193,46 @@ class ReplicaEnsemble:
         while done < n_steps:
             n = min(chunk, n_steps - done)
             key, kc = jax.random.split(key)
-            self.states, self._ffs, self.table, self._nbh, diag = \
-                self._chunk(self.states, self._ffs, self.table, self._nbh,
-                            kc, tsched, fsched, n)
+            carry, obs = eng._chunk_fn(eng._carry, eng._replica_put(kc),
+                                       targ, farg, n, None)
+            eng._carry = carry
             done += n
             n_chunks += 1
-            rows.append(tuple(np.asarray(d) for d in diag))
-            times.append(self.time)
-            t_now = np.asarray(tsched.at(self.time))
-            temps_log.append(np.broadcast_to(t_now, (r,)).copy())
+            rows.append(jax.tree_util.tree_map(np.asarray, obs))
+            t_now = float(carry.states.step[0]) * self.cfg.dt
+            times.append(t_now)
+            temps_log.append(np.broadcast_to(
+                np.asarray(tsched.at(t_now)), (r,)).copy())
             if exchange_every and n_chunks % exchange_every == 0:
                 key, kx = jax.random.split(key)
-                self.states, self._ffs, acc, att = apply_exchange(
-                    kx, self.states, self._ffs, ladder_j, parity)
-                # dr rows travel with their replica's configuration
-                # (apply_exchange permutes states/ffs with the same perm it
-                # derived; recompute dr from the permuted positions instead
-                # of threading the permutation out)
-                self._nbh = self._nbh._replace(dr=jax.vmap(
-                    lambda p: refresh_dr(self._nbh, p, self._box0).dr
-                )(self.states.pos))
+                states, ffs, acc, att = apply_exchange(
+                    kx, carry.states, carry.ffs, ladder_j, parity)
+                # dr rows travel with their replica's configuration;
+                # the resync re-derives dr (and forces) from the permuted
+                # positions instead of threading the permutation out
+                eng._carry = carry._replace(states=states, ffs=ffs)
+                eng.state = states
+                eng._replica_resync(fsched)
                 n_acc += int(acc)
                 n_att += int(att)
                 parity ^= 1
             if callback is not None:
+                eng._sync_observation()
+                self._pull()
                 callback(self)
+                if self.states is not eng.state:  # callback swapped states
+                    eng.state = self.states
+                    eng._replica_resync(fsched)
 
-        q, mz, lam, e = (np.stack([row[i] for row in rows])
-                         for i in range(4))
+        eng._sync_observation()
+        self._pull()
         return EnsembleTrace(
             time=np.asarray(times), temperature=np.stack(temps_log),
-            charge=q, magnetization=mz, pitch=lam, energy=e,
+            charge=np.stack([row["charge"] for row in rows]),
+            magnetization=np.stack([row["magnetization"][:, 2]
+                                    for row in rows]),
+            pitch=np.stack([row["pitch"] for row in rows]),
+            energy=np.stack([row["energy"] for row in rows]),
             exchange_accepts=n_acc, exchange_attempts=n_att)
 
 
@@ -352,9 +247,8 @@ def sharded_replica_mesh(replica_shards: int, spatial: int,
 
     ``replica_shards * spatial`` devices are arranged so each replica shard
     owns a full spatial decomposition: halos/psums run over
-    ``spatial_axis`` only, replicas never communicate (except nothing - the
-    sharded loop has no replica collectives), and per-replica (T, B) points
-    ride the same compiled chunk.
+    ``spatial_axis`` only, replicas never communicate, and per-replica
+    (T, B) points ride the same compiled chunk.
     """
     from jax.sharding import Mesh
     devs = jax.devices()
@@ -367,28 +261,49 @@ def sharded_replica_mesh(replica_shards: int, spatial: int,
 
 def run_sharded_sweep(potential, cfg, state, masses, magnetic, cutoff,
                       temperatures, fields=None, *, n_steps: int = 1000,
-                      key=None, chunk: int = 100, mesh=None, **sim_kw):
+                      key=None, chunk: int = 100, mesh=None,
+                      observables=("energy", "kinetic", "magnetization",
+                                   "charge"),
+                      **engine_kw):
     """(T, B) sweep on the domain-decomposed fused loop.
 
     The replica-batched analogue of :class:`PhaseDiagram` for systems too
     large for one device: every replica is a full spatial decomposition of
     the same crystal, stepped at its own runtime ``(temperature, field)``
-    point inside ONE compiled sharded chunk
-    (:class:`repro.md.simulate.SimulationSharded` with ``replicas=R``).
-    ``temperatures`` is (R,) [K]; ``fields`` is (R, 3) Tesla or None.
-    Returns ``(sim, trace)`` with the per-chunk per-replica
-    :class:`~repro.md.simulate.DomainChunkTrace` (psum-reduced in-graph).
+    point inside ONE compiled sharded chunk (the engine's ``Sharded`` plan
+    with ``replicas=R``).  ``temperatures`` is (R,) [K] *or* a full
+    :class:`~repro.ensemble.protocol.Schedule` (values (K,) shared or
+    (K, R) per-replica - field-cooling protocols run in-scan on the
+    sharded path); ``fields`` likewise ((R, 3) Tesla or a Schedule).
+    Returns ``(engine, trace)`` with the per-chunk per-replica
+    :class:`~repro.md.engine.EngineTrace` (psum-reduced in-graph).
     """
-    from repro.md.simulate import SimulationSharded
+    from repro.parallel.plan import Sharded
 
-    temps = jnp.asarray(temperatures)
-    r = temps.shape[0]
-    if fields is not None:
+    if isinstance(temperatures, protocol.Schedule):
+        temps = temperatures
+        r = temps.values.shape[1] if temps.values.ndim == 2 else None
+    else:
+        temps = jnp.asarray(temperatures)
+        r = temps.shape[0]
+    if r is None:  # shared temperature schedule: take R from the fields
+        if isinstance(fields, protocol.Schedule):
+            r = (fields.values.shape[1] if fields.values.ndim == 3
+                 else None)
+        elif fields is not None and jnp.asarray(fields).ndim == 2:
+            r = jnp.asarray(fields).shape[0]
+    if r is None:
+        raise ValueError("shared schedules do not define the replica "
+                         "count; pass per-replica temperature values "
+                         "(K, R) or per-replica fields (R, 3)")
+    if fields is not None and not isinstance(fields, protocol.Schedule):
         fields = jnp.broadcast_to(jnp.asarray(fields), (r, 3))
-    sim = SimulationSharded(
+    engine = Engine(
         potential=potential, cfg=cfg, state=state, masses=masses,
-        magnetic=magnetic, cutoff=cutoff, replicas=r, mesh=mesh,
-        field=fields, **sim_kw)
+        magnetic=magnetic, cutoff=cutoff,
+        plan=Sharded(mesh=mesh, replicas=r),
+        temperature=temps, field=fields, observables=observables,
+        **engine_kw)
     key = key if key is not None else jax.random.PRNGKey(0)
-    sim.run(n_steps, key, chunk=chunk, temperature=temps)
-    return sim, sim.trace
+    engine.run(n_steps, key, chunk=chunk)
+    return engine, engine.trace

@@ -1,3 +1,7 @@
 from repro.md.lattice import b20_fege, simple_cubic, Lattice
 from repro.md.state import SpinLatticeState, init_state
 from repro.md.neighbor import dense_neighbor_table, NeighborTable
+# NOTE: the Engine lives in repro.md.engine (import it from there).  It is
+# deliberately not re-exported here: engine -> parallel.plan ->
+# parallel.domain -> core.potential -> md.neighbor would close an import
+# cycle through this package's __init__.

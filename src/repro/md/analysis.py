@@ -41,6 +41,39 @@ def spins_on_grid(pos: jax.Array, spin: jax.Array, box: jax.Array,
     return acc.reshape(*shape, 3)
 
 
+def accumulate_spin_profile(pos: jax.Array, spin: jax.Array, box: jax.Array,
+                            axis: int = 0, n_bins: int = 64,
+                            weight: jax.Array | None = None) -> jax.Array:
+    """Raw per-slab spin sums (n_bins, 3) along ``axis``.
+
+    The *accumulation* half of :func:`helix_pitch`: per-bin sums are linear
+    in the atoms, so domain-decomposed callers accumulate locally, ``psum``
+    the result over the device mesh, and hand the global sums to
+    :func:`pitch_from_profile`.  ``weight`` (e.g. an occupancy mask for
+    fixed-capacity layouts with empty slots) scales each spin's
+    contribution; weight-0 rows land nowhere.
+    """
+    p = pos[:, axis]
+    i = jnp.clip((p / box[axis] * n_bins).astype(jnp.int32), 0, n_bins - 1)
+    s = spin if weight is None else spin * weight[:, None].astype(spin.dtype)
+    return jnp.zeros((n_bins, 3), spin.dtype).at[i].add(s)
+
+
+def pitch_from_profile(acc: jax.Array, box: jax.Array,
+                       axis: int = 0) -> jax.Array:
+    """Pitch [A] from raw per-slab spin sums (the finalize half).
+
+    Normalizes each bin to a unit (or zero) spin, FFTs each Cartesian
+    component, and returns box/k* for the strongest nonzero mode.
+    """
+    nrm = jnp.linalg.norm(acc, axis=-1, keepdims=True)
+    prof = jnp.where(nrm > 1e-12, acc / jnp.where(nrm > 1e-12, nrm, 1.0), 0.0)
+    spec = jnp.abs(jnp.fft.rfft(prof, axis=0)) ** 2   # (n_bins//2+1, 3)
+    power = jnp.sum(spec, axis=-1)
+    k = jnp.argmax(power[1:]) + 1                      # skip k=0 (uniform)
+    return box[axis] / k
+
+
 def helix_pitch(pos: jax.Array, spin: jax.Array, box: jax.Array,
                 axis: int = 0, n_bins: int = 0) -> jax.Array:
     """Dominant modulation period [A] of the spin texture along ``axis``.
@@ -49,16 +82,15 @@ def helix_pitch(pos: jax.Array, spin: jax.Array, box: jax.Array,
     box/k* for the strongest nonzero mode - the helix pitch of Fig. 4.
     """
     n_bins = n_bins or 64
-    shape = [1, 1, 1]
-    shape[axis] = n_bins
-    prof = spins_on_grid(pos, spin, box, (n_bins,)) if axis == 0 else None
-    if prof is None:
-        # generic axis: project position onto axis then bin
-        p = pos[:, axis]
-        i = jnp.clip((p / box[axis] * n_bins).astype(jnp.int32), 0, n_bins - 1)
-        acc = jnp.zeros((n_bins, 3), spin.dtype).at[i].add(spin)
-        cnt = jnp.zeros((n_bins, 1), spin.dtype).at[i].add(1.0)
-        prof = acc / jnp.maximum(cnt, 1.0)
+    if axis == 0:
+        return pitch_from_profile(
+            accumulate_spin_profile(pos, spin, box, axis, n_bins), box, axis)
+    # generic axis: project position onto axis then bin (mean profile)
+    p = pos[:, axis]
+    i = jnp.clip((p / box[axis] * n_bins).astype(jnp.int32), 0, n_bins - 1)
+    acc = jnp.zeros((n_bins, 3), spin.dtype).at[i].add(spin)
+    cnt = jnp.zeros((n_bins, 1), spin.dtype).at[i].add(1.0)
+    prof = acc / jnp.maximum(cnt, 1.0)
     spec = jnp.abs(jnp.fft.rfft(prof, axis=0)) ** 2   # (n_bins//2+1, 3)
     power = jnp.sum(spec, axis=-1)
     k = jnp.argmax(power[1:]) + 1                      # skip k=0 (uniform)
@@ -86,22 +118,53 @@ def topological_charge_grid(s: jax.Array) -> jax.Array:
     return jnp.sum(omega) / (4.0 * jnp.pi)
 
 
-def topological_charge(pos: jax.Array, spin: jax.Array, box: jax.Array,
-                       grid: tuple[int, int] = (32, 32),
-                       plane: tuple[int, int] = (0, 1)) -> jax.Array:
-    """Topological charge of the texture projected on a plane (default x-y)."""
+def accumulate_spin_grid(pos: jax.Array, spin: jax.Array, box: jax.Array,
+                         grid: tuple[int, int] = (32, 32),
+                         plane: tuple[int, int] = (0, 1),
+                         weight: jax.Array | None = None) -> jax.Array:
+    """Raw per-cell spin sums (G0*G1, 3) on the projection plane.
+
+    The *accumulation* half of :func:`topological_charge`: linear in the
+    atoms, so domain-decomposed callers accumulate their local atoms,
+    ``psum`` the grid across the mesh, and finalize with
+    :func:`charge_from_grid`.  ``weight`` masks contributions (empty slots
+    of fixed-capacity layouts contribute zero vectors, i.e. nothing).
+    """
     ax, ay = plane
     ix = jnp.clip((pos[:, ax] / box[ax] * grid[0]).astype(jnp.int32),
                   0, grid[0] - 1)
     iy = jnp.clip((pos[:, ay] / box[ay] * grid[1]).astype(jnp.int32),
                   0, grid[1] - 1)
     flat = ix * grid[1] + iy
-    acc = jnp.zeros((grid[0] * grid[1], 3), spin.dtype).at[flat].add(spin)
+    s = spin if weight is None else spin * weight[:, None].astype(spin.dtype)
+    return jnp.zeros((grid[0] * grid[1], 3), spin.dtype).at[flat].add(s)
+
+
+def charge_from_grid(acc: jax.Array,
+                     grid: tuple[int, int] = (32, 32)) -> jax.Array:
+    """Berg-Luscher charge from raw per-cell spin sums (the finalize half)."""
     nrm = jnp.linalg.norm(acc, axis=-1, keepdims=True)
-    s = jnp.where(nrm > 1e-12, acc / nrm, 0.0)
+    s = jnp.where(nrm > 1e-12, acc / jnp.where(nrm > 1e-12, nrm, 1.0), 0.0)
     # fill empty cells with +z to avoid spurious charge
-    s = jnp.where(nrm > 1e-12, s, jnp.array([0.0, 0.0, 1.0], spin.dtype))
+    s = jnp.where(nrm > 1e-12, s, jnp.array([0.0, 0.0, 1.0], acc.dtype))
     return topological_charge_grid(s.reshape(grid[0], grid[1], 3))
+
+
+def topological_charge(pos: jax.Array, spin: jax.Array, box: jax.Array,
+                       grid: tuple[int, int] = (32, 32),
+                       plane: tuple[int, int] = (0, 1)) -> jax.Array:
+    """Topological charge of the texture projected on a plane (default x-y)."""
+    return charge_from_grid(
+        accumulate_spin_grid(pos, spin, box, grid, plane), grid)
+
+
+def skyrmion_count(charge: jax.Array) -> jax.Array:
+    """Integer skyrmion-count estimate from the topological charge.
+
+    Each (Bloch) skyrmion carries Q ~ -1 (see
+    :func:`topological_charge_grid`), so the count is |Q| rounded.
+    """
+    return jnp.round(jnp.abs(charge))
 
 
 def spin_structure_factor(pos: jax.Array, spin: jax.Array, box: jax.Array,

@@ -1,32 +1,31 @@
-"""High-level simulation driver: fused in-scan neighbor lifecycle + stepping.
+"""Simulation drivers: thin facades over the unified engine.
 
-The fused hot loop (default whenever the potential exposes the gather-once
-``compute`` surface) keeps an entire chunk of steps inside ONE compiled
-``lax.scan``:
+The chunk machinery - fused in-scan neighbor lifecycle, shard_map domain
+decomposition, schedules, observables, checkpointing - lives in ONE place,
+:class:`repro.md.engine.Engine`.  This module keeps the two established
+driver surfaces as facades over it:
 
-* the half-skin rebuild test runs at every step *in-graph*, behind a
-  ``lax.cond`` whose taken branch rebuilds the fixed-shape
-  :class:`~repro.md.neighbor.NeighborTable`, re-gathers the
-  :class:`~repro.md.neighbor.Neighborhood` blocks, and re-evaluates forces -
-  so the step function compiles once per geometry instead of once per
-  rebuild, and chunks dispatch with **no host round-trip**;
-* each step gathers neighbor blocks once (after the drift) and reuses them
-  across both spin half-steps and every midpoint iteration
-  (:func:`repro.md.integrator.make_fused_step`);
-* on rebuild, atoms are optionally re-sorted by linked-cell bin
-  (``cell_order``, the TPU/JAX analogue of the paper's NUMA-aware layout) so
-  table gathers hit near-contiguous rows; the inverse permutation is applied
-  at observation boundaries, so ``sim.state`` is always in the original atom
-  order;
-* per-chunk diagnostics (potential/kinetic energy, magnetization,
-  topological charge) are reduced inside the compiled chunk and surfaced as
-  ``sim.trace`` - no host callbacks needed on the hot path.
+* :class:`Simulation` - the single-trajectory driver.  ``fused=True``
+  (default whenever the potential exposes the gather-once ``compute``
+  surface) delegates to the engine's flat plan: the whole chunk (half-skin
+  test, ``lax.cond`` in-graph table rebuild, gather-once evaluation,
+  per-chunk diagnostics) inside one compiled ``lax.scan``, one compile per
+  geometry, optionally cell-ordered rows.  ``fused=False`` is the retained
+  pre-fusion reference path (host-side skin test between chunks, recompile
+  per rebuild) - the parity baseline for tests and ``benchmarks/md_loop``,
+  and the only path for potentials that implement ``energy_forces_field``
+  but not ``compute``.
+* :class:`SimulationSharded` - the domain-decomposed driver, a facade over
+  the engine's sharded plan (in-scan rebuild WITH cross-device cell
+  migration, one fused halo per drift, one fused adjoint fold, psum
+  diagnostics; ``replicas > 0`` composes a replica axis with the spatial
+  mesh).  ``run(temperature=...)`` accepts constants *or*
+  ``repro.ensemble.protocol`` Schedules - protocols now run inside the
+  compiled sharded chunk.
 
-The pre-fusion driver (host-side skin test between chunks, recompile per
-rebuild) is retained as ``fused=False`` - it is the reference path for
-parity tests and the baseline for ``benchmarks/md_loop.py``, and the only
-path for potentials that implement ``energy_forces_field`` but not
-``compute``.
+Use the :class:`~repro.md.engine.Engine` directly for the full axis matrix
+(schedules on any plan, declarative observables, streaming ``obs_every``,
+checkpoint-restart).
 """
 from __future__ import annotations
 
@@ -35,28 +34,14 @@ from functools import partial
 from typing import Any, Callable, NamedTuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.md.analysis import magnetization, topological_charge
-from repro.md.integrator import (ForceField, IntegratorConfig,
-                                 make_fused_step, make_step)
-from repro.md.neighbor import (NeighborTable, Neighborhood,
-                               cell_neighbor_table, cell_order,
-                               dense_neighbor_table, gather_blocks,
-                               make_table_builder, needs_rebuild, refresh_dr)
-from repro.md.state import SpinLatticeState, kinetic_energy
-
-
-class FusedCarry(NamedTuple):
-    """Device-resident loop state of the fused driver (the scan carry)."""
-
-    state: SpinLatticeState   # hot (possibly cell-ordered) row order
-    ff: ForceField
-    table: NeighborTable
-    nbh: Neighborhood
-    perm: jax.Array           # (N,) int32: hot row -> original atom id
-    n_rebuilds: jax.Array     # () int32 in-scan rebuild count
+# re-exported for backward compatibility (carries now live in the engine)
+from repro.md.engine import DomainCarry, Engine, FusedCarry  # noqa: F401
+from repro.md.integrator import ForceField, IntegratorConfig, make_step
+from repro.md.neighbor import (NeighborTable, cell_neighbor_table,
+                               dense_neighbor_table, needs_rebuild)
+from repro.md.state import SpinLatticeState
 
 
 class ChunkTrace(NamedTuple):
@@ -69,9 +54,16 @@ class ChunkTrace(NamedTuple):
     charge: np.ndarray         # (C,) Berg-Luscher topological charge
 
 
-def _permute_atoms(state: SpinLatticeState, order) -> SpinLatticeState:
-    return state._replace(pos=state.pos[order], vel=state.vel[order],
-                          spin=state.spin[order], types=state.types[order])
+class DomainChunkTrace(NamedTuple):
+    """Per-chunk diagnostics of the sharded loop, psum-reduced in-graph.
+
+    With replicas, per-replica columns (C, R); otherwise (C,).
+    """
+
+    time: np.ndarray           # (C,) ps at chunk ends
+    energy: np.ndarray         # potential energy [eV]
+    kinetic: np.ndarray        # lattice kinetic energy [eV]
+    magnetization: np.ndarray  # (..., 3) mean spin over magnetic sites
 
 
 @dataclasses.dataclass
@@ -104,140 +96,49 @@ class Simulation:
             if not hasattr(self.potential, "compute"):
                 raise ValueError("fused=True requires a potential with the "
                                  "gather-once .compute() surface")
-            self._setup_fused()
+            from repro.parallel.plan import SingleDevice
+            self._engine = Engine(
+                potential=self.potential, cfg=self.cfg, state=self.state,
+                masses=self.masses, magnetic=self.magnetic,
+                cutoff=self.cutoff,
+                plan=SingleDevice(cell_order=self.cell_order),
+                field=self.field,
+                observables=("energy", "kinetic", "magnetization",
+                             "charge"),
+                capacity=self.capacity, skin=self.skin,
+                use_cell_list=self.use_cell_list,
+                cell_capacity=self.cell_capacity,
+                diag_grid=self.diag_grid, table=self.table)
+            self._pull()
         else:
-            self._reorder = False
             self._refresh(build_table=self.table is None)
 
-    # ==================================================================
-    # fused path
-    # ==================================================================
-    def _setup_fused(self):
-        """Compile-once setup: everything geometry-static is resolved here."""
-        build, n_cells, use_cell = make_table_builder(
-            self.state.box, self.cutoff, self.capacity, self.cell_capacity,
-            self.skin, self.use_cell_list)
-        self._reorder = (self.cell_order if self.cell_order is not None
-                         else use_cell)
+    # ------------------------------------------------------------------
+    # fused path: delegation to the engine's flat plan
+    # ------------------------------------------------------------------
+    def _pull(self):
+        """Mirror the engine's observation state onto the facade."""
+        self.state = self._engine.state
+        self.table = self._engine.table
+        self._ff = self._engine._ff
 
-        potential = self.potential
-        masses, magnetic, skin = self.masses, self.magnetic, self.skin
-        box0, reorder, diag_grid = self.state.box, self._reorder, self.diag_grid
+    @property
+    def _carry(self):
+        return self._engine._carry
 
-        def compute_ff(nbh, spin, types, field):
-            return ForceField(*potential.compute(nbh, spin, types, field))
+    @property
+    def _chunk_fn(self):
+        return self._engine._chunk_fn
 
-        def rebuild(state, perm, field):
-            """In-graph: (re)order atoms, rebuild table, gather, evaluate."""
-            if reorder:
-                order = cell_order(state.pos, state.box, n_cells)
-                state = _permute_atoms(state, order)
-                perm = perm[order]
-            table = build(state.pos, state.box)
-            nbh = gather_blocks(state.pos, state.types, table, state.box)
-            ff = compute_ff(nbh, state.spin, state.types, field)
-            return state, ff, table, nbh, perm
-
-        step = make_fused_step(
-            gather=lambda pos, nbh: refresh_dr(nbh, pos, box0),
-            compute=compute_ff, cfg=self.cfg, masses=masses,
-            magnetic=magnetic)
-
-        def diag(state, ff):
-            mag = magnetic[jnp.maximum(state.types, 0)]
-            return (ff.energy, kinetic_energy(state, masses),
-                    magnetization(state.spin, mask=mag),
-                    topological_charge(state.pos, state.spin, state.box,
-                                       grid=diag_grid))
-
-        # ``field`` is a chunk argument (not baked into the closure) so
-        # reassigning ``sim.field`` between runs is honored, as on the
-        # legacy path (None <-> array flips retrace once; values don't)
-        @partial(jax.jit, static_argnames=("n",))
-        def chunk(carry: FusedCarry, key, field, n: int):
-            def body(c, k):
-                def do_rebuild(c):
-                    st, ff, tab, nbh, perm = rebuild(c.state, c.perm, field)
-                    return FusedCarry(st, ff, tab, nbh, perm,
-                                      c.n_rebuilds + 1)
-                trip = needs_rebuild(c.table, c.state.pos, box0, skin)
-                c = jax.lax.cond(trip, do_rebuild, lambda c: c, c)
-                st, ff, nbh = step(c.state, c.ff, c.nbh, k, None, field)
-                return FusedCarry(st, ff, c.table, nbh, c.perm,
-                                  c.n_rebuilds), None
-            keys = jax.random.split(key, n)
-            carry, _ = jax.lax.scan(body, carry, keys)
-            return carry, diag(carry.state, carry.ff)
-
-        self._chunk_fn = chunk
-        self._compute_ff = compute_ff
-        self._rebuild = rebuild
-        self._init_carry(table=self.table)
-
-    def _restart_if_swapped(self):
-        """Honor a caller-swapped ``sim.state`` (legacy-path parity).
-
-        A swap with the same box restarts the carry; a changed box is a new
-        geometry, so the compile-once statics (grid dims, builder, closures)
-        are re-derived (one retrace, exactly as at construction).
-        """
-        if self.state is self._obs_state:
-            return
-        if np.array_equal(np.asarray(self.state.box),
-                          np.asarray(self._carry.state.box)):
-            self._init_carry()
-        else:
-            self.table = None
-            self._setup_fused()
-
-    def _init_carry(self, table: NeighborTable | None = None):
-        """(Re)build the hot carry from ``self.state``/``self.field``."""
-        n = self.state.pos.shape[0]
-        perm0 = jnp.arange(n, dtype=jnp.int32)
-        # in-scan rebuild count is cumulative across carry restarts
-        count0 = (self._carry.n_rebuilds if getattr(self, "_carry", None)
-                  is not None else jnp.asarray(0, jnp.int32))
-        if table is not None:
-            # honor a caller-provided table (assumed to match the row order)
-            nbh = gather_blocks(self.state.pos, self.state.types, table,
-                                self.state.box)
-            ff = self._compute_ff(nbh, self.state.spin, self.state.types,
-                                  self.field)
-            self._carry = FusedCarry(self.state, ff, table, nbh,
-                                     perm0, count0)
-        else:
-            st, ff, tab, nbh, perm = self._rebuild(self.state, perm0,
-                                                   self.field)
-            self._carry = FusedCarry(st, ff, tab, nbh, perm, count0)
-        self._sync_observation()
-
-    def _sync_observation(self):
-        """Map the hot (cell-ordered) carry back to original atom order.
-
-        Everything observable - ``state``, forces, and the ``table`` - comes
-        back in the ORIGINAL atom order, so the legacy evaluation surface
-        (``potential.energy_forces_field(..., sim.table, ...)``) stays
-        consistent with ``sim.state``.
-        """
-        c = self._carry
-        inv = jnp.argsort(c.perm)
-        self.state = _permute_atoms(c.state, inv)
-        self._ff = ForceField(energy=c.ff.energy, force=c.ff.force[inv],
-                              field=c.ff.field[inv])
-        if self._reorder:
-            self.table = NeighborTable(idx=c.perm[c.table.idx[inv]],
-                                       mask=c.table.mask[inv],
-                                       r0=c.table.r0[inv],
-                                       cutoff=c.table.cutoff)
-        else:
-            self.table = c.table
-        self._obs_state = self.state
+    @property
+    def _reorder(self) -> bool:
+        return self._engine._reorder if self._fused else False
 
     @property
     def n_rebuilds(self) -> int:
         """In-scan neighbor-table rebuilds so far (fused path)."""
         if self._fused:
-            return int(self._carry.n_rebuilds)
+            return self._engine.n_rebuilds
         return self._legacy_rebuilds
 
     # ==================================================================
@@ -296,33 +197,23 @@ class Simulation:
         if not self._fused:
             return self._run_legacy(n_steps, key, chunk, callback)
 
-        self._restart_if_swapped()
-        carry = self._carry
-        t0 = float(self.state.step) * self.cfg.dt
-        rows, times = [], []
-        done = 0
-        while done < n_steps:
-            n = min(chunk, n_steps - done)
-            key, sub = jax.random.split(key)
-            carry, d = self._chunk_fn(carry, sub, self.field, n)
-            done += n
-            rows.append(d)
-            times.append(t0 + done * self.cfg.dt)
-            if callback is not None:
-                self._carry = carry
-                self._sync_observation()
+        self._engine.state = self.state   # honor a caller-swapped state
+        cb = None
+        if callback is not None:
+            def cb(engine):
+                self._pull()
                 callback(self.state, self._ff)
-                self._restart_if_swapped()  # callback may perturb the state
-                carry = self._carry
-        self._carry = carry
-        self._sync_observation()
-        if rows:
+                engine.state = self.state  # callback may perturb the state
+        self._engine.run(n_steps, key, chunk=chunk, field=self.field,
+                         callback=cb)
+        self._pull()
+        tr = self._engine.trace
+        if tr is not None:
             self.trace = ChunkTrace(
-                time=np.asarray(times),
-                energy=np.asarray([r[0] for r in rows]),
-                kinetic=np.asarray([r[1] for r in rows]),
-                magnetization=np.stack([np.asarray(r[2]) for r in rows]),
-                charge=np.asarray([r[3] for r in rows]))
+                time=tr.time, energy=tr.values["energy"],
+                kinetic=tr.values["kinetic"],
+                magnetization=tr.values["magnetization"],
+                charge=tr.values["charge"])
         return self.state
 
     def _run_legacy(self, n_steps, key, chunk, callback):
@@ -347,76 +238,37 @@ class Simulation:
 
 
 # ===========================================================================
-# Sharded fused loop: shard_map domain decomposition of the hot path
+# Sharded fused loop: facade over the engine's domain-decomposed plan
 # ===========================================================================
-
-class DomainCarry(NamedTuple):
-    """Device-resident loop state of the sharded fused driver.
-
-    The cell-major twin of :class:`FusedCarry`: every per-atom field lives
-    in the fixed-capacity ``(CX, CY, CZ, K, ...)`` link-cell layout whose
-    leading spatial dims are sharded over the device mesh (with an optional
-    leading replica axis).  ``types == -1`` marks empty slots; ``aid``
-    carries the original atom id through migrations so observation can
-    restore input order, exactly as ``FusedCarry.perm`` does on one device.
-    """
-
-    state: SpinLatticeState   # cell-blocked fields; box/step replicated
-    ff: ForceField
-    nbh: Any                  # DomainNbh: per-device pruned table blocks
-    aid: jax.Array            # (..., CX, CY, CZ, K) int32, -1 = empty
-    r0: jax.Array             # (..., CX, CY, CZ, K, 3) build positions
-    trip: jax.Array           # () bool: skin test, precomputed at the END
-                              # of the previous step (positions are final
-                              # after the drift) so its global reduction
-                              # fuses with the energy psum - one scalar
-                              # collective per step instead of two
-    n_rebuilds: jax.Array     # () int32, shared trip -> identical everywhere
-    n_migrated: jax.Array     # () int32, psummed at rebuild
-    n_dropped: jax.Array      # () int32, overflow + skin-violation losses
-
-
-class DomainChunkTrace(NamedTuple):
-    """Per-chunk diagnostics of the sharded loop, psum-reduced in-graph.
-
-    With replicas, per-replica columns (C, R); otherwise (C,).
-    """
-
-    time: np.ndarray           # (C,) ps at chunk ends
-    energy: np.ndarray         # potential energy [eV]
-    kinetic: np.ndarray        # lattice kinetic energy [eV]
-    magnetization: np.ndarray  # (..., 3) mean spin over magnetic sites
-
 
 @dataclasses.dataclass
 class SimulationSharded:
     """Domain-decomposed twin of :class:`Simulation` (the sharded hot loop).
 
-    The whole chunk - spin-lattice step, half-skin drift test, ``lax.cond``
-    in-scan rebuild *with cell migration across devices*, per-chunk
-    diagnostics via ``psum`` - runs inside ONE compiled
-    ``shard_map``-wrapped ``lax.scan`` over the ``(CX, CY, CZ, K, ...)``
-    layout of :mod:`repro.parallel.domain`.  Per step:
+    A facade over :class:`repro.md.engine.Engine` with a
+    :class:`repro.parallel.plan.Sharded` plan: the whole chunk - spin-
+    lattice step, half-skin drift test, ``lax.cond`` in-scan rebuild *with
+    cell migration across devices*, per-chunk diagnostics via ``psum`` -
+    runs inside ONE compiled ``shard_map``-wrapped ``lax.scan`` over the
+    ``(CX, CY, CZ, K, ...)`` layout of :mod:`repro.parallel.domain`:
 
     * exactly one fused halo per drift refreshes the pruned-table
-      ``dr``/``sj`` blocks (positions AND spins in one round, reused by
-      both spin half-steps - PR 2's gather->compute contract,
-      distributed; self-consistent midpoint configs instead re-exchange
-      spins per evaluation, since they evaluate at updated spins);
+      ``dr``/``sj`` blocks (positions AND spins in one round; self-
+      consistent midpoint configs instead re-exchange spins per
+      evaluation);
     * reaction forces on ghosts AND neighbor-spin gradients fold back in
-      one fused adjoint halo (:func:`repro.parallel.halo.fold_halo_multi`),
-      and the global energy + next step's skin test share one fused
-      scalar reduction - two collective rounds plus one small psum per
-      step;
+      one fused adjoint halo, and the global energy + next step's skin
+      test share one fused scalar reduction (potentials with
+      ``use_kernel=True`` instead route the Pallas NEP kernels through
+      the q_Fp adjoint-accumulator exchange - no reverse scatter at all);
     * at rebuild, atoms migrate to their (possibly remote) new cells in one
       fused multi-field exchange; capacity overflow or out-of-reach jumps
       are counted in the carry and raised at the next chunk boundary.
 
     ``replicas > 0`` adds a leading replica axis composed with the spatial
-    mesh (sharded over ``replica_axis`` when the mesh has it, vmapped
-    within a device otherwise): every replica runs the full domain-
-    decomposed step at its own runtime ``(temperature, field)``, so (T, B)
-    sweeps ride the sharded loop (see repro.ensemble.replica).
+    mesh; every replica runs at its own runtime ``(temperature, field)``.
+    ``run(temperature=...)`` and ``field`` accept constants or
+    ``repro.ensemble.protocol`` Schedules (evaluated in-scan).
     """
 
     potential: Any                     # .pair_energies / .site_moments
@@ -431,548 +283,89 @@ class SimulationSharded:
     cell_capacity: int | None = None   # per-cell capacity K (None -> auto)
     mesh: Any = None                   # jax Mesh (None -> 1D over devices)
     axis_map: tuple = None             # spatial dim -> mesh axis name
-    halo_mode: str = "auto"            # "ppermute" | "allgather" | "auto":
-                                       # one all_gather per axis beats two
-                                       # ppermutes when rendezvous latency
-                                       # dominates (small axes, simulated
-                                       # devices); auto -> allgather iff
-                                       # every sharded axis is <= 8 wide
+    halo_mode: str = "auto"            # "ppermute" | "allgather" | "auto"
     field: jax.Array | None = None     # (3,) Tesla (or (R, 3) w/ replicas)
     replicas: int = 0                  # 0 = no replica axis
     replica_axis: str = "replica"
     trace: DomainChunkTrace | None = None
 
     def __post_init__(self):
-        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-        from repro.parallel.domain import DomainSpec, pack_domain
-        from repro.md.neighbor import grid_shape
+        from repro.parallel.plan import Sharded
+        self._engine = Engine(
+            potential=self.potential, cfg=self.cfg, state=self.state,
+            masses=self.masses, magnetic=self.magnetic, cutoff=self.cutoff,
+            plan=Sharded(mesh=self.mesh, axis_map=self.axis_map,
+                         halo_mode=self.halo_mode, cells=self.cells,
+                         cell_capacity=self.cell_capacity,
+                         replicas=self.replicas,
+                         replica_axis=self.replica_axis),
+            field=self.field,
+            observables=("energy", "kinetic", "magnetization"),
+            capacity=self.capacity, skin=self.skin)
+        rp = self._engine._rplan
+        self.mesh, self.axis_map = rp.mesh, rp.axis_map
+        self._pull()
 
-        if not hasattr(self.potential, "pair_energies"):
-            raise ValueError("SimulationSharded needs a potential exposing "
-                             "the pair_energies/site_moments surface")
-        if self.mesh is None:
-            devs = np.asarray(jax.devices())
-            self.mesh = Mesh(devs.reshape(len(devs)), ("sx",))
-            if self.axis_map is None:
-                self.axis_map = ("sx", None, None)
-        if self.axis_map is None:
-            names = tuple(n for n in self.mesh.axis_names
-                          if n != self.replica_axis)
-            self.axis_map = tuple(list(names[:3]) + [None] * (3 - len(names)))
-        if (self.replicas and self.replica_axis in self.mesh.axis_names
-                and self.replicas % self.mesh.shape[self.replica_axis]):
-            raise ValueError(
-                f"{self.replicas} replicas not divisible by mesh axis "
-                f"{self.replica_axis}={self.mesh.shape[self.replica_axis]}")
-
-        box = np.asarray(self.state.box)
-        n = self.state.pos.shape[0]
-        pos_np = np.asarray(self.state.pos)
-
-        def occ_bound_of(cells):
-            """Skin-robust per-cell occupancy bound: every atom within
-            ``skin`` of a cell counts toward it.  Atoms move less than
-            skin/2 between rebuilds, so a capacity at this bound cannot
-            overflow from boundary churn - and grids whose edges align
-            with crystal planes (where whole planes straddle the edge)
-            price that risk in, steering the grid search away from them.
-            """
-            cl = np.asarray(cells)
-            ids = []
-            for dx in (-self.skin, self.skin):
-                for dy in (-self.skin, self.skin):
-                    for dz in (-self.skin, self.skin):
-                        p = pos_np + np.asarray([dx, dy, dz])
-                        ci = np.floor(p / box * cl).astype(np.int64) % cl
-                        ids.append((ci[:, 0] * cl[1] + ci[:, 1]) * cl[2]
-                                   + ci[:, 2])
-            ids = np.stack(ids, axis=1)               # (N, 8 corner bins)
-            ids.sort(axis=1)
-            first = np.ones_like(ids, bool)
-            first[:, 1:] = ids[:, 1:] != ids[:, :-1]  # dedup per atom
-            return int(np.bincount(ids[first],
-                                   minlength=int(np.prod(cl))).max())
-
-        if self.cells is not None:
-            cells = tuple(self.cells)
-        else:
-            # global cell grid: cells >= cutoff+skin wide, sharded dims
-            # divisible by their mesh axis, every dim >= 3.  Among the
-            # legal grids prefer the one minimizing TOTAL padded slots
-            # (n_cells * capacity): the finest grid often bins the crystal
-            # badly (peak occupancy >> mean), and the fixed-capacity
-            # layout pays for the peak in every hot-loop op.
-            base = grid_shape(box, self.cutoff, self.skin)
-            rc = self.cutoff + self.skin
-            axes_n = [self.mesh.shape[name] if name is not None else 1
-                      for name in self.axis_map]
-            cand_per_dim = []
-            for d, nd in enumerate(axes_n):
-                # >= 3 global cells and >= 2 per device (a 1-cell slab
-                # ghosts its entire subdomain); cells no wider than ~2.5x
-                # the reach (wider cells bloat the stencil candidate
-                # buffers and the halo payload faster than they save slots)
-                lo = max(3, 2 * nd, int(np.ceil(box[d] / (2.5 * rc))))
-                vals = [c for c in range(base[d], lo - 1, -1)
-                        if c % nd == 0][:5]
-                if not vals and nd > 1:    # fall back to 1 cell per device
-                    vals = [c for c in range(base[d], nd - 1, -1)
-                            if c % nd == 0][:5]
-                if not vals:
-                    raise ValueError(
-                        f"box dim {d} ({box[d]:.1f} A) too small for "
-                        f"{nd}-way sharding at cutoff+skin "
-                        f"{self.cutoff + self.skin:.2f} A")
-                cand_per_dim.append(vals)
-            best, best_slots = None, None
-            for cx in cand_per_dim[0]:
-                for cy in cand_per_dim[1]:
-                    for cz in cand_per_dim[2]:
-                        occ = occ_bound_of((cx, cy, cz))
-                        slots = cx * cy * cz * (occ + 2)
-                        if best_slots is None or slots < best_slots:
-                            best, best_slots = (cx, cy, cz), slots
-            cells = best
-        k = (self.cell_capacity if self.cell_capacity is not None
-             else occ_bound_of(cells) + 2)
-        self._dspec = DomainSpec(cells=tuple(cells), capacity=k,
-                                 cutoff=self.cutoff, box=tuple(box),
-                                 axis_map=self.axis_map, skin=self.skin)
-        self._dspec.check_loop(self.mesh)
-        self._local = self._dspec.local_shape(self.mesh)
-        if (self.state.pos.dtype == jnp.float32
-                and max(n, int(np.prod(cells)) * k) >= 1 << 24):
-            raise ValueError("f32 cannot carry atom ids this large exactly "
-                             "through the fused migration exchange; run in "
-                             "f64 or shrink the system")
-
-        self._n_atoms = n
-        dstate, extras = pack_domain(
-            self._dspec, self.state.pos, self.state.vel, self.state.spin,
-            self.state.types, extras={"aid": np.arange(n, dtype=np.int32)})
-        self._build_chunk()
-        self._init_carry(dstate, extras["aid"])
+    def _pull(self):
+        self.state = self._engine.state
+        self._ff = self._engine._ff
 
     # ------------------------------------------------------------------
     @property
-    def n_replicas(self) -> int:
-        return max(self.replicas, 1)
+    def _dspec(self):
+        return self._engine._rplan.dspec
 
-    def _rep_in_mesh(self) -> bool:
-        return self.replicas > 0 and self.replica_axis in self.mesh.axis_names
+    @property
+    def _chunk_cache(self) -> dict:
+        return self._engine._chunk_cache
 
-    def _vm(self, f, **kw):
-        """vmap ``f`` over the local replica axis when replicas are on."""
-        return jax.vmap(f, **kw) if self.replicas else f
+    @property
+    def _carry(self):
+        return self._engine._carry
 
-    def _specs(self):
-        """(carry_spec, cell_spec, scalar_spec) PartitionSpec trees."""
-        from jax.sharding import PartitionSpec as P
-        lead = ((self.replica_axis if self._rep_in_mesh() else None,) if
-                self.replicas else ())
-        cell = P(*lead, *self.axis_map)
-        rsc = P(*lead)          # per-replica scalar; () otherwise
-        from repro.parallel.domain import DomainNbh
-        state = SpinLatticeState(pos=cell, vel=cell, spin=cell, types=cell,
-                                 box=P(), step=P())
-        ff = ForceField(energy=rsc, force=cell, field=cell)
-        nbh = DomainNbh(idx=cell, mask=cell, tj=cell, dr=cell,
-                        sj=cell if self._spin_in_gather else P())
-        carry = DomainCarry(state=state, ff=ff, nbh=nbh, aid=cell, r0=cell,
-                            trip=P(), n_rebuilds=P(), n_migrated=P(),
-                            n_dropped=P())
-        return carry, cell, rsc
+    @_carry.setter
+    def _carry(self, carry):
+        self._engine._carry = carry
 
-    # ------------------------------------------------------------------
-    def _build_chunk(self):
-        from repro.md.integrator import make_fused_step
-        from repro.parallel.domain import (build_local_table,
-                                           make_domain_evaluator,
-                                           migrate_cells)
-        from repro.parallel.sharding import shard_map_compat
-        from jax.sharding import PartitionSpec as P
-
-        from repro.parallel.domain import DomainNbh
-
-        dspec, local, mesh = self._dspec, self._local, self.mesh
-        m_cap, skin = self.capacity, self.skin
-        masses, magnetic, cfg = self.masses, self.magnetic, self.cfg
-        axes = tuple(a for a in self.axis_map if a is not None)
-        # midpoint iterations re-evaluate at updated spins, so they need a
-        # fresh spin halo per evaluation; otherwise the step is the
-        # classical two-message form: one fused (pos, spin) exchange per
-        # drift, one fused (force, torque) adjoint fold per evaluation
-        self._spin_in_gather = not cfg.midpoint
-        if self.halo_mode == "auto":
-            self._allgather = all(
-                self.mesh.shape[a] <= 8 for a in self.axis_map
-                if a is not None)
-        else:
-            self._allgather = self.halo_mode == "allgather"
-        from repro.parallel.halo import TRACE as _halo_trace
-        _halo_trace.axis_sizes.update(
-            {a: int(self.mesh.shape[a]) for a in self.axis_map
-             if a is not None})
-        refresh, compute = make_domain_evaluator(
-            self.potential, dspec, local, barrier=not self.replicas,
-            spin_in_gather=self._spin_in_gather,
-            allgather=self._allgather)
-        rep = self.replicas
-        vm = self._vm
-        ag = self._allgather
-
-        def compute_ff(nbh, spin, types, field):
-            return ForceField(*compute(nbh, spin, types, field))
-
-        def psum_axes(x):
-            for name in axes:
-                x = jax.lax.psum(x, name)
-            return x
-
-        def trip_local(state, r0):
-            box = state.box.astype(state.pos.dtype)
-            d = state.pos - r0
-            d = d - box * jnp.round(d / box)
-            occ = state.types >= 0
-            d2 = jnp.where(occ, jnp.sum(d * d, axis=-1), 0.0)
-            return jnp.max(d2) > (skin * 0.5) ** 2
-
-        sig = self._spin_in_gather
-
-        def rebuild_one(state, aid, field):
-            pos, vel, spin, types, aid, moved, dropped = migrate_cells(
-                dspec, local, state.pos, state.vel, state.spin,
-                state.types, aid, allgather=ag)
-            idx, pmask, tj = build_local_table(dspec, local, m_cap, pos,
-                                               types, allgather=ag)
-            blk = jnp.zeros(idx.shape + (3,), pos.dtype)
-            nbh = DomainNbh(idx=idx, mask=pmask, tj=tj, dr=blk,
-                            sj=blk if sig else
-                            jnp.zeros((0,), pos.dtype))
-            nbh = refresh(pos, nbh, spin if sig else None,
-                          tag="rebuild-pos")
-            state = state._replace(pos=pos, vel=vel, spin=spin, types=types)
-            ff = compute_ff(nbh, spin, types, field)
-            return state, ff, nbh, aid, pos, moved, dropped
-
-        step = make_fused_step(
-            gather=(lambda pos, nbh, spin: refresh(pos, nbh, spin,
-                                                   tag="drift-pos"))
-            if sig else
-            (lambda pos, nbh: refresh(pos, nbh, tag="drift-pos")),
-            compute=compute_ff, cfg=cfg, masses=masses, magnetic=magnetic,
-            atom_mask="from_types", spin_aware_gather=sig)
-
-        # vmap axis spec for a replica-batched state: box and step are
-        # shared across replicas (same crystal, lockstep time); the sj
-        # placeholder of the per-evaluation-exchange mode is unbatched
-        state_ax = SpinLatticeState(pos=0, vel=0, spin=0, types=0,
-                                    box=None, step=None)
-        nbh_ax = DomainNbh(idx=0, mask=0, tj=0, dr=0,
-                           sj=0 if sig else None)
-        r_loc = (rep // self.mesh.shape[self.replica_axis]
-                 if self._rep_in_mesh() else rep)
-
-        def dev_key(key):
-            """Per-device (and per-replica) independent RNG streams.
-
-            The linear device index already folds in the replica mesh axis,
-            so (device, local-replica) pairs are globally unique.
-            """
-            dev = jnp.asarray(0, jnp.int32)
-            for name in self.mesh.axis_names:
-                dev = dev * jax.lax.psum(1, name) + jax.lax.axis_index(name)
-            k = jax.random.fold_in(key, dev)
-            if rep:
-                return jax.vmap(lambda r: jax.random.fold_in(k, r))(
-                    jnp.arange(r_loc))
-            return k
-
-        def diag_one(state, ff):
-            occ = state.types >= 0
-            tc = jnp.maximum(state.types, 0)
-            mag = magnetic[tc] & occ
-            from repro.utils import units as _u
-            ke = psum_axes(0.5 * _u.MVV2E * jnp.sum(
-                jnp.where(occ[..., None], masses[tc][..., None]
-                          * state.vel ** 2, 0.0)))
-            msum = psum_axes(jnp.sum(
-                jnp.where(mag[..., None], state.spin, 0.0),
-                axis=tuple(range(state.spin.ndim - 1))))
-            mcnt = psum_axes(jnp.sum(mag))
-            return ff.energy, ke, msum / jnp.maximum(mcnt, 1)
-
-        def local_chunk(carry: DomainCarry, key, temp, field, n: int):
-            t_ax = 0 if temp is not None else None
-            f_ax = 0 if field is not None else None
-            vstep = vm(step, in_axes=(state_ax, 0, nbh_ax, 0, t_ax, f_ax),
-                       out_axes=(state_ax, 0, nbh_ax))
-            vrebuild = vm(rebuild_one, in_axes=(state_ax, 0, f_ax),
-                          out_axes=(state_ax, 0, nbh_ax, 0, 0, 0, 0))
-            vtrip = vm(trip_local, in_axes=(state_ax, 0))
-
-            def body(c, k):
-                def do_rebuild(c):
-                    st, ff, nbh, aid, r0, moved, dropped = vrebuild(
-                        c.state, c.aid, field)
-                    moved = jax.lax.psum(jnp.sum(moved),
-                                         self.mesh.axis_names
-                                         ).astype(jnp.int32)
-                    dropped = jax.lax.psum(jnp.sum(dropped),
-                                           self.mesh.axis_names
-                                           ).astype(jnp.int32)
-                    return DomainCarry(st, ff, nbh, aid, r0, c.trip,
-                                       c.n_rebuilds + 1,
-                                       c.n_migrated + moved,
-                                       c.n_dropped + dropped)
-
-                # ``trip`` was reduced at the end of the previous step
-                # (positions final after its drift): no extra collective
-                c = jax.lax.cond(c.trip, do_rebuild, lambda c: c, c)
-                st, ff, nbh = vstep(c.state, c.ff, c.nbh, dev_key(k),
-                                    temp, field)
-                # ONE fused scalar reduction per step: the global energy
-                # (device-local out of compute) + the next step's skin test
-                trip_loc = vtrip(st, c.r0)
-                trip_loc = jnp.any(trip_loc) if rep else trip_loc
-                e_loc = jnp.atleast_1d(ff.energy)
-                vec = jnp.concatenate(
-                    [e_loc, trip_loc[None].astype(e_loc.dtype)])
-                vec = psum_axes(vec)
-                if rep and self._rep_in_mesh():
-                    trip = jax.lax.psum(vec[-1], self.replica_axis) > 0
-                else:
-                    trip = vec[-1] > 0
-                energy = vec[:-1] if rep else vec[0]
-                ff = ff._replace(energy=energy)
-                return DomainCarry(st, ff, nbh, c.aid, c.r0, trip,
-                                   c.n_rebuilds, c.n_migrated,
-                                   c.n_dropped), None
-
-            keys = jax.random.split(key, n)
-            carry, _ = jax.lax.scan(body, carry, keys)
-            diag = vm(diag_one, in_axes=(state_ax, 0))(carry.state,
-                                                       carry.ff)
-            return carry, diag
-
-        carry_spec, cell_spec, rsc = self._specs()
-        key_spec = P()
-        temp_spec = rsc if rep else P()
-        field_spec = rsc if rep else P()
-
-        def make(n, with_temp, with_field):
-            # temp/field optionality is a static property of the traced fn
-            fn = lambda carry, key, temp, field: local_chunk(
-                carry, key, temp, field, n)
-            if with_temp and with_field:
-                body = lambda c, k, t, f: fn(c, k, t, f)
-                ins = (carry_spec, key_spec, temp_spec, field_spec)
-            elif with_temp:
-                body = lambda c, k, t: fn(c, k, t, None)
-                ins = (carry_spec, key_spec, temp_spec)
-            elif with_field:
-                body = lambda c, k, f: fn(c, k, None, f)
-                ins = (carry_spec, key_spec, field_spec)
-            else:
-                body = lambda c, k: fn(c, k, None, None)
-                ins = (carry_spec, key_spec)
-            # diag out: (energy, kinetic) per-replica scalars, mag (.., 3)
-            mag_spec = P(*(tuple(rsc) + (None,))) if rep else P()
-            out_specs = (carry_spec, (rsc, rsc, mag_spec))
-            return jax.jit(shard_map_compat(body, mesh, in_specs=ins,
-                                            out_specs=out_specs))
-
-        self._chunk_cache: dict = {}
-        self._make_chunk = make
-        self._compute_ff = compute_ff
-        self._rebuild_one = rebuild_one
-        self._refresh = refresh
-
-    def _chunk_for(self, n, with_temp, with_field):
-        key = (n, with_temp, with_field)
-        if key not in self._chunk_cache:
-            self._chunk_cache[key] = self._make_chunk(n, with_temp,
-                                                      with_field)
-        return self._chunk_cache[key]
-
-    # ------------------------------------------------------------------
-    def _init_carry(self, dstate, aid):
-        """Initial device-resident carry: table + forces, one shard_map."""
-        from jax.sharding import NamedSharding, PartitionSpec as P
-        from repro.parallel.sharding import shard_map_compat
-
-        carry_spec, cell_spec, rsc = self._specs()
-        rep = self.replicas
-        field = self.field
-        if field is not None:
-            field = jnp.asarray(field)
-            if rep:
-                field = jnp.broadcast_to(field, (rep, 3))
-
-        def local_init(pos, vel, spin, types, aid, field=None):
-            state = SpinLatticeState(
-                pos=pos, vel=vel, spin=spin, types=types,
-                box=jnp.asarray(self._dspec.box, pos.dtype),
-                step=jnp.asarray(self.state.step, jnp.int32))
-
-            state_ax = SpinLatticeState(pos=0, vel=0, spin=0, types=0,
-                                        box=None, step=None)
-
-            def one(state, aid, field):
-                # migration is a no-op right after packing, but running it
-                # keeps init on the exact rebuild code path
-                return self._rebuild_one(state, aid, field)
-
-            if rep:
-                from repro.parallel.domain import DomainNbh
-                nbh_ax = DomainNbh(
-                    idx=0, mask=0, tj=0, dr=0,
-                    sj=0 if self._spin_in_gather else None)
-                st, ff, nbh, aid, r0, moved, dropped = jax.vmap(
-                    one,
-                    in_axes=(state_ax, 0,
-                             0 if field is not None else None),
-                    out_axes=(state_ax, 0, nbh_ax, 0, 0, 0, 0))(
-                        state, aid, field)
-            else:
-                st, ff, nbh, aid, r0, moved, dropped = one(state, aid,
-                                                           field)
-            z = jnp.asarray(0, jnp.int32)
-            dropped = jax.lax.psum(jnp.sum(dropped), self.mesh.axis_names
-                                   ).astype(jnp.int32)
-            # compute() returns device-local energy; globalize it here
-            # (in-chunk this rides the per-step fused scalar reduction)
-            energy = ff.energy
-            for name in self.axis_map:
-                if name is not None:
-                    energy = jax.lax.psum(energy, name)
-            ff = ff._replace(energy=energy)
-            return DomainCarry(st, ff, nbh, aid, r0,
-                               jnp.asarray(False), z, z, dropped)
-
-        sspec = carry_spec.state
-        in_specs = [sspec.pos, sspec.vel, sspec.spin, sspec.types,
-                    carry_spec.aid]
-        tile = (lambda x: jnp.broadcast_to(x[None], (rep,) + x.shape)
-                ) if rep else (lambda x: x)
-        args = [tile(dstate.pos), tile(dstate.vel), tile(dstate.spin),
-                tile(dstate.types), tile(aid)]
-        if field is not None:
-            in_specs.append(rsc if rep else P())
-            args.append(field)
-        init = jax.jit(shard_map_compat(local_init, self.mesh,
-                                        in_specs=tuple(in_specs),
-                                        out_specs=carry_spec))
-
-        def put(x, spec):
-            return jax.device_put(x, NamedSharding(self.mesh, spec))
-
-        args = [put(a, s) for a, s in zip(args, in_specs)]
-        self._carry = init(*args)
-        self._check_dropped()
-        self._sync_observation()
-
-    # ------------------------------------------------------------------
     def _check_dropped(self):
-        dropped = int(self._carry.n_dropped)
-        if dropped:
-            raise RuntimeError(
-                f"domain cell overflow: {dropped} atom(s) dropped at "
-                f"migration (cell capacity {self._dspec.capacity} exceeded "
-                "or an atom jumped more than one cell between rebuilds); "
-                "increase cell_capacity or shrink the skin/timestep")
+        self._engine._check_dropped()
+
+    @property
+    def n_replicas(self) -> int:
+        return self._engine.n_replicas
 
     @property
     def n_rebuilds(self) -> int:
-        return int(self._carry.n_rebuilds)
+        return self._engine.n_rebuilds
 
     @property
     def n_migrated(self) -> int:
         """Atoms that changed link cell across all in-scan rebuilds."""
-        return int(self._carry.n_migrated)
+        return self._engine.n_migrated
 
     @property
     def energy(self):
-        e = self._carry.ff.energy
-        return np.asarray(e) if self.replicas else float(e)
-
-    def _sync_observation(self):
-        """Host-side unpack of the hot carry into original atom order."""
-        c = self._carry
-        aid = np.asarray(c.aid).reshape(self.n_replicas, -1)
-        flat = lambda a, tail: np.asarray(a).reshape(
-            self.n_replicas, -1, *tail)
-        pos, vel, spin = (flat(x, (3,)) for x in
-                          (c.state.pos, c.state.vel, c.state.spin))
-        force, hfield = flat(c.ff.force, (3,)), flat(c.ff.field, (3,))
-        types = flat(c.state.types, ())
-        n = self._n_atoms
-        outs = []
-        for r in range(self.n_replicas):
-            sel = np.nonzero(aid[r] >= 0)[0]
-            order = np.empty(n, np.int64)
-            order[aid[r][sel]] = sel
-            outs.append(tuple(a[r][order] for a in
-                              (pos, vel, spin, types, force, hfield)))
-        stack = (lambda i: np.stack([o[i] for o in outs])
-                 ) if self.replicas else (lambda i: outs[0][i])
-        self.state = SpinLatticeState(
-            pos=jnp.asarray(stack(0)), vel=jnp.asarray(stack(1)),
-            spin=jnp.asarray(stack(2)),
-            types=jnp.asarray(stack(3).astype(np.int32)),
-            box=jnp.asarray(np.asarray(self._dspec.box),
-                            self._carry.state.pos.dtype),
-            step=self._carry.state.step)
-        # observed forces/effective fields, original atom order (API parity
-        # with the flat driver's _ff; used by the halo-adjoint tests)
-        self._ff = ForceField(energy=c.ff.energy,
-                              force=jnp.asarray(stack(4)),
-                              field=jnp.asarray(stack(5)))
+        return self._engine.energy
 
     # ------------------------------------------------------------------
     def run(self, n_steps: int, key: jax.Array, chunk: int = 20,
             temperature=None):
         """Advance ``n_steps`` through the sharded fused loop.
 
-        ``temperature`` (scalar K, or (R,) with replicas) and ``self.field``
-        ((3,) Tesla, or (R, 3)) are runtime arguments of the compiled
-        chunk.  Per-chunk diagnostics land in ``self.trace``; a cell-
-        capacity overflow raises at the chunk boundary where it is
+        ``temperature`` (scalar K, (R,) with replicas, or a Schedule) and
+        ``self.field`` ((3,) Tesla, (R, 3), or a Schedule) are runtime
+        arguments of the compiled chunk - schedules are evaluated per step
+        INSIDE the scan.  Per-chunk diagnostics land in ``self.trace``; a
+        cell-capacity overflow raises at the chunk boundary where it is
         detected.  Returns the final (original-atom-order) state.
         """
-        carry = self._carry
-        t0 = float(carry.state.step) * self.cfg.dt
-        temp = (None if temperature is None
-                else jnp.asarray(temperature, jnp.float32))
-        field = (None if self.field is None
-                 else jnp.asarray(self.field))
-        if self.replicas:
-            if temp is not None:
-                temp = jnp.broadcast_to(temp, (self.replicas,))
-            if field is not None:
-                field = jnp.broadcast_to(field, (self.replicas, 3))
-        rows, times = [], []
-        done = 0
-        while done < n_steps:
-            n = min(chunk, n_steps - done)
-            key, sub = jax.random.split(key)
-            fn = self._chunk_for(n, temp is not None, field is not None)
-            args = [carry, sub]
-            if temp is not None:
-                args.append(temp)
-            if field is not None:
-                args.append(field)
-            carry, d = fn(*args)
-            done += n
-            rows.append(tuple(np.asarray(x) for x in d))
-            times.append(t0 + done * self.cfg.dt)
-            self._carry = carry
-            self._check_dropped()
-        self._sync_observation()
-        if rows:
+        self._engine.run(n_steps, key, chunk=chunk,
+                         temperature=temperature, field=self.field)
+        self._pull()
+        tr = self._engine.trace
+        if tr is not None:
             self.trace = DomainChunkTrace(
-                time=np.asarray(times),
-                energy=np.stack([r[0] for r in rows]),
-                kinetic=np.stack([r[1] for r in rows]),
-                magnetization=np.stack([r[2] for r in rows]))
+                time=tr.time, energy=tr.values["energy"],
+                kinetic=tr.values["kinetic"],
+                magnetization=tr.values["magnetization"])
         return self.state

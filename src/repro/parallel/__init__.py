@@ -1,2 +1,3 @@
 from repro.parallel.halo import exchange_halo
 from repro.parallel.domain import DomainSpec, DomainState, distributed_energy_fn
+from repro.parallel.plan import Replicated, Sharded, SingleDevice

@@ -767,43 +767,25 @@ class DomainNbh(NamedTuple):
                      # evaluator re-exchanges spins per evaluation
 
 
-def make_domain_evaluator(potential, dspec: DomainSpec,
-                          local_shape: tuple[int, int, int],
-                          barrier: bool = True,
-                          spin_in_gather: bool = True,
-                          allgather: bool = False):
-    """Per-device gather/compute closures for the sharded fused loop.
+def make_domain_refresh(dspec: DomainSpec,
+                        local_shape: tuple[int, int, int],
+                        barrier: bool = True,
+                        spin_in_gather: bool = True,
+                        allgather: bool = False):
+    """THE one halo exchange per drift, as a standalone closure.
 
-    Returns ``(refresh, compute)``:
-
-    * ``refresh(pos, nbh[, spin], tag) -> nbh`` - THE one halo exchange
-      per drift: positions (and, with ``spin_in_gather``, spins) packed
-      into a single fused round, then the pruned-table gather of
-      min-imaged pair vectors (and neighbor spins).  Interior cells read a
-      :func:`~repro.parallel.halo.local_wrap` image instead of the
-      exchanged one, so their gather carries no ppermute dependence and
-      XLA may overlap it with the exchange (repro.parallel.overlap).
-    * ``compute(nbh, spin, types, field) -> (E, F, H_eff)`` - the gather-
-      once evaluation on cell-major blocks, reusing the potential's
-      ``pair_energies``/``site_moments`` surfaces.  All ghost
-      contributions - reaction forces AND neighbor-spin gradients - fold
-      back to their owners in ONE fused adjoint round
-      (:func:`repro.parallel.halo.fold_halo_multi`), the explicit
-      transpose of the forward exchange.
-
-    ``spin_in_gather=True`` is the classical two-message distributed MD
-    step (one forward exchange per drift, one adjoint fold per
-    evaluation); it is exact when each step evaluates the potential once
-    at fixed spins.  Self-consistent midpoint iterations re-evaluate at
-    *updated* spins, so drivers must pass ``spin_in_gather=False`` there -
-    the evaluator then re-exchanges spin ghosts inside every evaluation.
-
-    Both potentials' flat ``compute`` methods and this evaluator route the
-    same per-atom energy math, so sharded and single-device trajectories
-    agree to roundoff (tests/test_domain_loop.py).
+    ``refresh(pos, nbh[, spin], tag) -> nbh`` packs boundary positions
+    (and, with ``spin_in_gather``, spins) into a single fused round, then
+    runs the pruned-table gather of min-imaged pair vectors (and neighbor
+    spins).  Interior cells read a :func:`~repro.parallel.halo.local_wrap`
+    image instead of the exchanged one, so their gather carries no
+    ppermute dependence and XLA may overlap it with the exchange
+    (repro.parallel.overlap).  Shared by the autodiff
+    (:func:`make_domain_evaluator`) and Pallas-kernel
+    (:func:`make_domain_kernel_evaluator`) sharded evaluators.
     """
     from repro.parallel.halo import (exchange_halo, exchange_halo_multi,
-                                     fold_halo, fold_halo_multi, local_wrap)
+                                     local_wrap)
     from repro.parallel.overlap import issue_early, shell_slabs
 
     # the issue-early optimization barrier has no vmap rule on jax 0.4.x,
@@ -811,7 +793,6 @@ def make_domain_evaluator(potential, dspec: DomainSpec,
     early = issue_early if barrier else (lambda x: x)
     axis_map = dspec.axis_map
     slabs = shell_slabs(local_shape)
-    cx, cy, cz = local_shape
     boxt = tuple(dspec.box)
 
     def refresh_pos_only(pos, nbh: DomainNbh, tag) -> DomainNbh:
@@ -855,6 +836,59 @@ def make_domain_evaluator(potential, dspec: DomainSpec,
         if spin_in_gather and spin is not None:
             return refresh_fused(pos, nbh, spin, tag)
         return refresh_pos_only(pos, nbh, tag)
+
+    return refresh
+
+
+def make_domain_evaluator(potential, dspec: DomainSpec,
+                          local_shape: tuple[int, int, int],
+                          barrier: bool = True,
+                          spin_in_gather: bool = True,
+                          allgather: bool = False):
+    """Per-device gather/compute closures for the sharded fused loop.
+
+    Returns ``(refresh, compute)``:
+
+    * ``refresh(pos, nbh[, spin], tag) -> nbh`` - THE one halo exchange
+      per drift: positions (and, with ``spin_in_gather``, spins) packed
+      into a single fused round, then the pruned-table gather of
+      min-imaged pair vectors (and neighbor spins).  Interior cells read a
+      :func:`~repro.parallel.halo.local_wrap` image instead of the
+      exchanged one, so their gather carries no ppermute dependence and
+      XLA may overlap it with the exchange (repro.parallel.overlap).
+    * ``compute(nbh, spin, types, field) -> (E, F, H_eff)`` - the gather-
+      once evaluation on cell-major blocks, reusing the potential's
+      ``pair_energies``/``site_moments`` surfaces.  All ghost
+      contributions - reaction forces AND neighbor-spin gradients - fold
+      back to their owners in ONE fused adjoint round
+      (:func:`repro.parallel.halo.fold_halo_multi`), the explicit
+      transpose of the forward exchange.
+
+    ``spin_in_gather=True`` is the classical two-message distributed MD
+    step (one forward exchange per drift, one adjoint fold per
+    evaluation); it is exact when each step evaluates the potential once
+    at fixed spins.  Self-consistent midpoint iterations re-evaluate at
+    *updated* spins, so drivers must pass ``spin_in_gather=False`` there -
+    the evaluator then re-exchanges spin ghosts inside every evaluation.
+
+    Both potentials' flat ``compute`` methods and this evaluator route the
+    same per-atom energy math, so sharded and single-device trajectories
+    agree to roundoff (tests/test_domain_loop.py).
+    """
+    from repro.parallel.halo import (exchange_halo, fold_halo,
+                                     fold_halo_multi, local_wrap)
+    from repro.parallel.overlap import issue_early, shell_slabs
+
+    # the issue-early optimization barrier has no vmap rule on jax 0.4.x,
+    # so the replica-batched loop runs without the scheduling hint
+    early = issue_early if barrier else (lambda x: x)
+    axis_map = dspec.axis_map
+    slabs = shell_slabs(local_shape)
+    cx, cy, cz = local_shape
+
+    refresh = make_domain_refresh(dspec, local_shape, barrier=barrier,
+                                  spin_in_gather=spin_in_gather,
+                                  allgather=allgather)
 
     def fold_pair_grads(nbh, g_dr, g_sj, k, dtype):
         """ONE fused adjoint round: reaction forces + neighbor-spin
@@ -959,3 +993,104 @@ def make_domain_evaluator(potential, dspec: DomainSpec,
 
     return refresh, (compute_fused if spin_in_gather
                      else compute_exchanging)
+
+
+def make_domain_kernel_evaluator(potential, dspec: DomainSpec,
+                                 local_shape: tuple[int, int, int],
+                                 barrier: bool = True,
+                                 allgather: bool = False):
+    """Pallas-kernel (refresh, compute) for the sharded fused loop.
+
+    Routes the fused NEP-SPIN kernels (repro.kernels.nep) through the
+    domain decomposition using the paper's actual distributed algorithm:
+
+    * K1 (``nep_atom_pass``) runs on the device-local cell-major slots
+      (empty slots masked via ``amask`` - their energy, field, and adjoint
+      accumulators come out exactly zero);
+    * the per-atom adjoint accumulators Abar travel to neighboring devices
+      in ONE fused halo round (tag ``"qfp"`` - the paper's q_Fp
+      communication step), replacing the autodiff path's reaction-force
+      fold: the pair-symmetric partial-force formula of K2
+      (``nep_force_pass``) needs only a *gather* of neighbor adjoints,
+      never a reverse scatter;
+    * K2 then produces complete forces and torque fields for the owned
+      atoms in a single neighbor traversal.
+
+    Requires the one-halo-per-drift gather (``spin_in_gather``; i.e. not
+    self-consistent midpoint configs): ``compute`` consumes the ``dr`` AND
+    ``sj`` blocks refreshed by the drift exchange.  On CPU the kernels run
+    in interpret mode (``potential.interpret``); on TPU the identical
+    ``pallas_call`` compiles to MXU kernels.
+    """
+    from repro.kernels.nep.kernel import (TILE_ATOMS, nep_atom_pass,
+                                          nep_force_pass)
+    from repro.parallel.halo import exchange_halo_multi
+
+    spec, params = potential.spec, potential.params
+    interpret = potential.interpret
+    refresh = make_domain_refresh(dspec, local_shape, barrier=barrier,
+                                  spin_in_gather=True, allgather=allgather)
+    cx, cy, cz = local_shape
+    axis_map = dspec.axis_map
+
+    def compute(nbh: DomainNbh, spin, types, field=None):
+        k = types.shape[3]
+        m_cap = nbh.idx.shape[-1]
+        dtype = spin.dtype
+        occ = types >= 0
+        ti = jnp.where(occ, types, 0)
+        n_slots = cx * cy * cz * k
+        n_pad = -(-n_slots // TILE_ATOMS) * TILE_ATOMS
+
+        def pad0(a):
+            extra = n_pad - n_slots
+            if not extra:
+                return a
+            return jnp.pad(a, [(0, extra)] + [(0, 0)] * (a.ndim - 1))
+
+        flat = lambda a, tail: pad0(a.reshape((n_slots,) + tail))
+        dr_f = flat(nbh.dr, (m_cap, 3))
+        mask_f = flat(nbh.mask, (m_cap,))
+        occ_f = flat(occ, ())
+        ti_f = flat(ti, ())
+        tj_f = flat(nbh.tj, (m_cap,))
+        si_f = flat(spin, (3,))
+        sj_f = flat(nbh.sj, (m_cap, 3))
+
+        # K1: energy + direct field + adjoint accumulators (empty slots
+        # and pad rows are amask-zeroed, so they contribute nothing here
+        # or through the exchange below)
+        e, hdir, abar = nep_atom_pass(spec, params, dr_f, mask_f, occ_f,
+                                      ti_f, tj_f, si_f, sj_f,
+                                      interpret=interpret)
+
+        # the q_Fp exchange: ONE fused halo of every Abar channel
+        abar_blk = {kk: v[:n_slots].reshape((cx, cy, cz, k) + v.shape[1:])
+                    for kk, v in abar.items()}
+        ext = exchange_halo_multi(abar_blk, axis_map, tag="qfp",
+                                  allgather=allgather)
+        idx_f = nbh.idx.reshape(-1)          # (n_slots*M,) ext-flat slots
+        abar_j = {}
+        for kk, v in ext.items():
+            tail = v.shape[4:]
+            g = v.reshape((-1,) + tail)[idx_f]
+            abar_j[kk] = pad0(g.reshape((n_slots, m_cap) + tail))
+
+        # K2: fused force + torque, no reverse scatter
+        f, h2 = nep_force_pass(spec, params, dr_f, mask_f, ti_f, tj_f,
+                               si_f, sj_f, abar, abar_j,
+                               interpret=interpret)
+        e_loc = jnp.sum(e)                   # masked rows are exact zeros
+        force = f[:n_slots].reshape(types.shape + (3,))
+        heff = (hdir + h2)[:n_slots].reshape(types.shape + (3,))
+        if field is not None:
+            mom = jnp.where(occ, potential.site_moments(ti), 0.0)
+            fld = jnp.asarray(field, dtype)
+            e_loc = e_loc - units.MU_B * jnp.sum(
+                mom[..., None] * spin * fld)
+            heff = heff + units.MU_B * mom[..., None] * fld
+        # energy stays DEVICE-LOCAL (the driver's fused scalar reduction
+        # globalizes it, exactly as on the autodiff path)
+        return e_loc, force, heff
+
+    return refresh, compute

@@ -1,0 +1,272 @@
+"""Parallel plans: the execution-layout axis of the unified MD engine.
+
+A *plan* says where the atoms live and how devices cooperate; it owns every
+piece of mesh / axis-map / halo / cell-grid wiring so the engine
+(:mod:`repro.md.engine`) can compose the other three axes - evaluator,
+schedule, observables - without knowing how the arrays are laid out:
+
+  :class:`SingleDevice`   flat (N, ...) arrays, one device, the fused
+                          in-scan loop (optionally cell-ordered rows).
+  :class:`Replicated`     a leading replica axis vmapped over the fused
+                          loop: one shared neighbor table (table-static
+                          blocks carried unbatched), per-replica dr /
+                          forces / RNG streams; optionally sharded over
+                          devices along the replica axis.
+  :class:`Sharded`        shard_map spatial domain decomposition over the
+                          cell-major (CX, CY, CZ, K) layout - halo
+                          exchange, in-scan cell migration, psum
+                          reductions; ``replicas > 0`` composes a leading
+                          replica axis with the spatial mesh (the
+                          replicas x domain plan).
+
+Plans are configuration objects plus wiring helpers; the step/rebuild
+closures themselves are built by the engine from the plan's resolved
+geometry.  :meth:`Sharded.resolve` performs the slot-minimizing global
+cell-grid search with the skin-robust occupancy bound (every atom within
+``skin`` of a cell counts toward it, so boundary churn between rebuilds
+cannot overflow the chosen capacity).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SingleDevice:
+    """Flat single-device plan (the fused in-scan loop)."""
+
+    cell_order: bool | None = None   # linked-cell row sort; None -> iff cell list
+
+    replicas: int = 0                # uniform plan API
+
+    @property
+    def is_sharded(self) -> bool:
+        return False
+
+
+@dataclasses.dataclass(frozen=True)
+class Replicated:
+    """Vmapped replica plan: (R, N, ...) batch through one fused chunk."""
+
+    replicas: int
+    devices: tuple | None = None     # shard the replica axis over these
+
+    def __post_init__(self):
+        if self.replicas < 1:
+            raise ValueError("Replicated plan needs replicas >= 1")
+
+    @property
+    def is_sharded(self) -> bool:
+        return False
+
+
+@dataclasses.dataclass(frozen=True)
+class Sharded:
+    """shard_map domain-decomposition plan (optionally x replicas).
+
+    ``mesh`` / ``axis_map`` / ``cells`` / ``cell_capacity`` left at their
+    defaults are resolved against the state geometry by :meth:`resolve`,
+    which returns a fully-wired :class:`ResolvedSharded`.
+    """
+
+    mesh: Any = None                   # jax Mesh (None -> 1D over devices)
+    axis_map: tuple | None = None      # spatial dim -> mesh axis name
+    halo_mode: str = "auto"            # "ppermute" | "allgather" | "auto"
+    cells: tuple | None = None         # global cell grid (None -> auto)
+    cell_capacity: int | None = None   # per-cell capacity K (None -> auto)
+    replicas: int = 0                  # 0 = no replica axis
+    replica_axis: str = "replica"
+
+    @property
+    def is_sharded(self) -> bool:
+        return True
+
+    # ------------------------------------------------------------------
+    def resolve(self, box, pos, cutoff: float, skin: float,
+                dtype_is_f32: bool) -> "ResolvedSharded":
+        """Fix mesh, axis map, cell grid, and capacity for a geometry."""
+        import jax
+        from jax.sharding import Mesh
+        from repro.parallel.domain import DomainSpec
+        from repro.md.neighbor import grid_shape
+
+        mesh, axis_map = self.mesh, self.axis_map
+        if mesh is None:
+            devs = np.asarray(jax.devices())
+            mesh = Mesh(devs.reshape(len(devs)), ("sx",))
+            if axis_map is None:
+                axis_map = ("sx", None, None)
+        if axis_map is None:
+            names = tuple(n for n in mesh.axis_names
+                          if n != self.replica_axis)
+            axis_map = tuple(list(names[:3]) + [None] * (3 - len(names)))
+        if (self.replicas and self.replica_axis in mesh.axis_names
+                and self.replicas % mesh.shape[self.replica_axis]):
+            raise ValueError(
+                f"{self.replicas} replicas not divisible by mesh axis "
+                f"{self.replica_axis}={mesh.shape[self.replica_axis]}")
+
+        box = np.asarray(box)
+        pos_np = np.asarray(pos)
+        n = pos_np.shape[0]
+
+        def occ_bound_of(cells):
+            """Skin-robust per-cell occupancy bound: every atom within
+            ``skin`` of a cell counts toward it.  Atoms move less than
+            skin/2 between rebuilds, so a capacity at this bound cannot
+            overflow from boundary churn - and grids whose edges align
+            with crystal planes (where whole planes straddle the edge)
+            price that risk in, steering the grid search away from them.
+            """
+            cl = np.asarray(cells)
+            ids = []
+            for dx in (-skin, skin):
+                for dy in (-skin, skin):
+                    for dz in (-skin, skin):
+                        p = pos_np + np.asarray([dx, dy, dz])
+                        ci = np.floor(p / box * cl).astype(np.int64) % cl
+                        ids.append((ci[:, 0] * cl[1] + ci[:, 1]) * cl[2]
+                                   + ci[:, 2])
+            ids = np.stack(ids, axis=1)               # (N, 8 corner bins)
+            ids.sort(axis=1)
+            first = np.ones_like(ids, bool)
+            first[:, 1:] = ids[:, 1:] != ids[:, :-1]  # dedup per atom
+            return int(np.bincount(ids[first],
+                                   minlength=int(np.prod(cl))).max())
+
+        if self.cells is not None:
+            cells = tuple(self.cells)
+        else:
+            # global cell grid: cells >= cutoff+skin wide, sharded dims
+            # divisible by their mesh axis, every dim >= 3.  Among the
+            # legal grids prefer the one minimizing TOTAL padded slots
+            # (n_cells * capacity): the finest grid often bins the crystal
+            # badly (peak occupancy >> mean), and the fixed-capacity
+            # layout pays for the peak in every hot-loop op.
+            base = grid_shape(box, cutoff, skin)
+            rc = cutoff + skin
+            axes_n = [mesh.shape[name] if name is not None else 1
+                      for name in axis_map]
+            cand_per_dim = []
+            for d, nd in enumerate(axes_n):
+                # >= 3 global cells and >= 2 per device (a 1-cell slab
+                # ghosts its entire subdomain); cells no wider than ~2.5x
+                # the reach (wider cells bloat the stencil candidate
+                # buffers and the halo payload faster than they save slots)
+                lo = max(3, 2 * nd, int(np.ceil(box[d] / (2.5 * rc))))
+                vals = [c for c in range(base[d], lo - 1, -1)
+                        if c % nd == 0][:5]
+                if not vals and nd > 1:    # fall back to 1 cell per device
+                    vals = [c for c in range(base[d], nd - 1, -1)
+                            if c % nd == 0][:5]
+                if not vals:
+                    raise ValueError(
+                        f"box dim {d} ({box[d]:.1f} A) too small for "
+                        f"{nd}-way sharding at cutoff+skin {rc:.2f} A")
+                cand_per_dim.append(vals)
+            best, best_slots = None, None
+            for cx in cand_per_dim[0]:
+                for cy in cand_per_dim[1]:
+                    for cz in cand_per_dim[2]:
+                        occ = occ_bound_of((cx, cy, cz))
+                        slots = cx * cy * cz * (occ + 2)
+                        if best_slots is None or slots < best_slots:
+                            best, best_slots = (cx, cy, cz), slots
+            cells = best
+        k = (self.cell_capacity if self.cell_capacity is not None
+             else occ_bound_of(cells) + 2)
+        dspec = DomainSpec(cells=tuple(cells), capacity=k, cutoff=cutoff,
+                           box=tuple(box), axis_map=tuple(axis_map),
+                           skin=skin)
+        dspec.check_loop(mesh)
+        if dtype_is_f32 and max(n, int(np.prod(cells)) * k) >= 1 << 24:
+            raise ValueError("f32 cannot carry atom ids this large exactly "
+                             "through the fused migration exchange; run in "
+                             "f64 or shrink the system")
+        spatial = tuple(a for a in axis_map if a is not None)
+        if self.halo_mode == "auto":
+            allgather = all(mesh.shape[a] <= 8 for a in spatial)
+        else:
+            allgather = self.halo_mode == "allgather"
+        return ResolvedSharded(
+            plan=self, mesh=mesh, axis_map=tuple(axis_map), dspec=dspec,
+            local_shape=dspec.local_shape(mesh), allgather=allgather)
+
+
+@dataclasses.dataclass(frozen=True)
+class ResolvedSharded:
+    """A :class:`Sharded` plan pinned to a concrete geometry + mesh."""
+
+    plan: Sharded
+    mesh: Any
+    axis_map: tuple
+    dspec: Any                 # repro.parallel.domain.DomainSpec
+    local_shape: tuple
+    allgather: bool
+
+    @property
+    def replicas(self) -> int:
+        return self.plan.replicas
+
+    @property
+    def replica_axis(self) -> str:
+        return self.plan.replica_axis
+
+    @property
+    def spatial_axes(self) -> tuple:
+        return tuple(a for a in self.axis_map if a is not None)
+
+    def rep_in_mesh(self) -> bool:
+        return (self.replicas > 0
+                and self.replica_axis in self.mesh.axis_names)
+
+    def local_replicas(self) -> int:
+        return (self.replicas // self.mesh.shape[self.replica_axis]
+                if self.rep_in_mesh() else self.replicas)
+
+    # ------------------------------------------------------------------
+    def specs(self, spin_in_gather: bool):
+        """(carry_spec, cell_spec, per_replica_scalar_spec) trees."""
+        from jax.sharding import PartitionSpec as P
+        from repro.md.engine import DomainCarry
+        from repro.md.integrator import ForceField
+        from repro.md.state import SpinLatticeState
+        from repro.parallel.domain import DomainNbh
+
+        lead = ((self.replica_axis if self.rep_in_mesh() else None,)
+                if self.replicas else ())
+        cell = P(*lead, *self.axis_map)
+        rsc = P(*lead)          # per-replica scalar; () otherwise
+        state = SpinLatticeState(pos=cell, vel=cell, spin=cell, types=cell,
+                                 box=P(), step=P())
+        ff = ForceField(energy=rsc, force=cell, field=cell)
+        nbh = DomainNbh(idx=cell, mask=cell, tj=cell, dr=cell,
+                        sj=cell if spin_in_gather else P())
+        carry = DomainCarry(state=state, ff=ff, nbh=nbh, aid=cell, r0=cell,
+                            trip=P(), n_rebuilds=P(), n_migrated=P(),
+                            n_dropped=P())
+        return carry, cell, rsc
+
+    def register_halo_sizes(self):
+        """Teach the trace-time halo ledger the concrete axis widths."""
+        from repro.parallel.halo import TRACE
+        TRACE.axis_sizes.update(
+            {a: int(self.mesh.shape[a]) for a in self.spatial_axes})
+
+
+def as_plan(plan, replicas: int = 0):
+    """Normalize ``plan`` (None | str | plan object) to a plan object."""
+    if plan is None:
+        plan = "replica" if replicas else "single"
+    if isinstance(plan, str):
+        if plan in ("single", "single_device", "flat"):
+            return SingleDevice()
+        if plan in ("replica", "replicated", "vmap"):
+            return Replicated(replicas=max(replicas, 1))
+        if plan in ("domain", "sharded", "shard_map"):
+            return Sharded(replicas=replicas)
+        raise ValueError(f"unknown plan {plan!r}")
+    return plan

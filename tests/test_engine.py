@@ -1,0 +1,370 @@
+"""Unified engine acceptance: schedules in-scan on every plan, declarative
+observables, checkpoint-restart determinism, kernel-through-sharded.
+
+The PR-5 acceptance tests:
+
+* a time-varying field protocol evaluated INSIDE the compiled scan gives
+  the same f64 trajectory on the flat and sharded plans (NVE: the
+  schedule is the only time dependence), with ZERO recompiles across
+  chunks on the sharded plan (knot values are runtime data);
+* the in-scan observable pipeline reproduces ``md/analysis.py``
+  (topological charge, pitch, magnetization) on both plans, including the
+  psum-reduced grid accumulation of the sharded pipeline;
+* checkpoint-restart at a chunk boundary (``ckpt.save_md``/``load_md``
+  via ``Engine.save``/``restore``) resumes bitwise-identically on the
+  flat, replica, and sharded plans;
+* the Pallas NEP kernel evaluator (``use_kernel=True``, interpret mode)
+  rides the sharded plan through the q_Fp adjoint-accumulator halo and
+  tracks the flat kernel path;
+* ``obs_every`` streams observables from inside the scan at the right
+  times.
+"""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hamiltonian import HeisenbergDMIModel
+from repro.ensemble import protocol
+from repro.md.analysis import helix_pitch, magnetization, topological_charge
+from repro.md.engine import Engine
+from repro.md.integrator import IntegratorConfig
+from repro.md.lattice import simple_cubic
+from repro.md.state import init_state
+from repro.parallel.plan import Replicated
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import jax
+jax.config.update("jax_enable_x64", True)
+import json, tempfile
+import numpy as np
+import jax.numpy as jnp
+from repro.core.hamiltonian import HeisenbergDMIModel
+from repro.ensemble import protocol
+from repro.md.analysis import topological_charge
+from repro.md.engine import Engine
+from repro.md.integrator import IntegratorConfig
+from repro.md.lattice import simple_cubic
+from repro.md.state import init_state
+from repro.parallel.plan import Sharded
+
+compiles = {"n": 0}
+def on_event(name, _d, **k):
+    if name == "/jax/core/compile/backend_compile_duration":
+        compiles["n"] += 1
+jax.monitoring.register_event_duration_secs_listener(on_event)
+
+lat = simple_cubic()
+st = init_state(lat, (8, 8, 8), temperature=300.0, spin_init="helix_x",
+                key=jax.random.PRNGKey(7))
+kw = dict(cfg=IntegratorConfig(dt=2e-3), state=st,
+          masses=jnp.asarray(lat.masses),
+          magnetic=jnp.asarray(lat.moments) > 0, cutoff=5.0, capacity=32,
+          skin=0.2)
+ham = HeisenbergDMIModel(d0=0.008, ka=0.001)
+out = {}
+
+# ---- in-scan field schedule: flat vs sharded f64 parity (NVE) -------------
+fld = protocol.piecewise([0.0, 0.04, 0.04, 0.12],
+                         [[0.0, 0.0, 0.0], [0.0, 0.0, 30.0],
+                          [0.0, 0.0, 30.0], [15.0, 0.0, 5.0]])
+obs = ("energy", "kinetic", "magnetization", "charge")
+flat = Engine(potential=ham, field=fld, observables=obs, **kw)
+sh = Engine(potential=ham, field=fld, observables=obs, plan=Sharded(), **kw)
+flat.run(50, jax.random.PRNGKey(1), chunk=10)
+c0 = compiles["n"]
+sh.run(50, jax.random.PRNGKey(1), chunk=10)   # same compiled chunk, 5 calls
+out["sched"] = {
+    "pos": float(jnp.abs(flat.state.pos - sh.state.pos).max()),
+    "spin": float(jnp.abs(flat.state.spin - sh.state.spin).max()),
+    "recompiles_after_first_chunk": 0,  # filled below
+    "chunk_cache": len(sh._chunk_cache),
+    "rebuilds": sh.n_rebuilds,
+}
+out["sched"]["charge_flat"] = [float(q) for q in
+                               flat.trace.values["charge"]]
+out["sched"]["charge_sharded"] = [float(q) for q in
+                                  sh.trace.values["charge"]]
+out["sched"]["charge_analysis"] = float(topological_charge(
+    sh.state.pos, sh.state.spin, sh.state.box, grid=(32, 32)))
+c1 = compiles["n"]
+sh.run(50, jax.random.PRNGKey(2), chunk=10)   # protocol advances in-scan
+out["sched"]["recompiles_after_first_chunk"] = compiles["n"] - c1
+
+# ---- checkpoint-restart bitwise on the sharded plan -----------------------
+cfgT = IntegratorConfig(dt=2e-3, spin_alpha=0.05, lattice_gamma=1.0)
+kwT = dict(kw); kwT["cfg"] = cfgT
+temp = protocol.linear(0.0, 0.1, 300.0, 50.0)
+a = Engine(potential=ham, plan=Sharded(), temperature=temp, **kwT)
+a.run(60, jax.random.PRNGKey(5), chunk=20)
+with tempfile.TemporaryDirectory() as d:
+    b = Engine(potential=ham, plan=Sharded(), temperature=temp, **kwT)
+    b.run(40, jax.random.PRNGKey(5), chunk=20, checkpoint_dir=d)
+    c = Engine(potential=ham, plan=Sharded(), temperature=temp, **kwT)
+    key = c.restore(d)
+    c.run(20, key, chunk=20)
+out["ckpt"] = {
+    "pos_bitwise": bool(jnp.all(a.state.pos == c.state.pos)),
+    "spin_bitwise": bool(jnp.all(a.state.spin == c.state.spin)),
+    "vel_bitwise": bool(jnp.all(a.state.vel == c.state.vel)),
+    "rebuilds_match": a.n_rebuilds == c.n_rebuilds,
+}
+
+# ---- replica axis sharded over devices: parity + sharded restore ----------
+from repro.parallel.plan import Replicated
+
+str_ = init_state(lat, (4, 4, 4), temperature=400.0, spin_init="helix_x",
+                  key=jax.random.PRNGKey(3))
+kwr = dict(potential=ham, cfg=cfgT, state=str_,
+           masses=jnp.asarray(lat.masses),
+           magnetic=jnp.asarray(lat.moments) > 0, cutoff=5.0, capacity=8,
+           skin=0.2, temperature=100.0)
+u = Engine(plan=Replicated(2), **kwr)
+u.run(40, jax.random.PRNGKey(5), chunk=20)
+s2 = Engine(plan=Replicated(2, devices=tuple(jax.devices())), **kwr)
+s2.run(40, jax.random.PRNGKey(5), chunk=20)
+with tempfile.TemporaryDirectory() as d:
+    b2 = Engine(plan=Replicated(2, devices=tuple(jax.devices())), **kwr)
+    b2.run(20, jax.random.PRNGKey(5), chunk=20, checkpoint_dir=d)
+    c2 = Engine(plan=Replicated(2, devices=tuple(jax.devices())), **kwr)
+    k2 = c2.restore(d)
+    sharded_restore = "replica" in str(c2._carry.states.pos.sharding.spec)
+    c2.run(20, k2, chunk=20)
+out["replica_shard"] = {
+    "matches_unsharded": bool(jnp.all(s2.state.pos == u.state.pos)
+                              & jnp.all(s2.state.spin == u.state.spin)),
+    "restore_sharded": sharded_restore,
+    "resume_bitwise": bool(jnp.all(s2.state.pos == c2.state.pos)
+                           & jnp.all(s2.state.spin == c2.state.spin)),
+}
+
+# ---- Pallas NEP kernel through the sharded plan (q_Fp halo) ---------------
+from repro.core.descriptor import NEPSpinSpec
+from repro.core.potential import NEPSpinPotential, init_params
+from repro.parallel.halo import TRACE
+
+stk = init_state(lat, (8, 6, 6), temperature=300.0, spin_init="helix_x",
+                 key=jax.random.PRNGKey(0), dtype=jnp.float32)
+spec = NEPSpinSpec(l_max=2, n_ang=2, n_rad=4, n_spin=2, basis_size=6)
+params = init_params(spec, jax.random.PRNGKey(0), dtype=jnp.float32)
+pot = NEPSpinPotential(spec, params, use_kernel=True, interpret=True)
+kwk = dict(cfg=IntegratorConfig(dt=2e-3), state=stk,
+           masses=jnp.asarray(lat.masses, jnp.float32),
+           magnetic=jnp.asarray(lat.moments) > 0, cutoff=5.0, capacity=16,
+           skin=0.2, field=jnp.asarray([0.0, 0.0, 2.0]))
+fk = Engine(potential=pot, **kwk)
+TRACE.reset()
+sk = Engine(potential=pot, plan=Sharded(), **kwk)
+out["kernel"] = {
+    "e0": abs(float(fk.energy) - float(sk.energy)),
+    "f0": float(jnp.abs(fk._ff.force - sk._ff.force).max()),
+    "h0": float(jnp.abs(fk._ff.field - sk._ff.field).max()),
+    "qfp_exchanges": TRACE.counts.get("qfp", 0),
+}
+fk.run(6, jax.random.PRNGKey(1), chunk=3)
+sk.run(6, jax.random.PRNGKey(1), chunk=3)
+out["kernel"].update({
+    "pos": float(jnp.abs(fk.state.pos - sk.state.pos).max()),
+    "spin": float(jnp.abs(fk.state.spin - sk.state.spin).max()),
+})
+print("RESULT " + json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def engine_result():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    r = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=1800,
+                       cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))))
+    assert r.returncode == 0, r.stderr[-3000:]
+    line = [ln for ln in r.stdout.splitlines()
+            if ln.startswith("RESULT ")][0]
+    return json.loads(line[len("RESULT "):])
+
+
+def test_schedule_in_scan_sharded_parity(engine_result):
+    """A time-varying field protocol evaluated inside the compiled scan
+    drives flat and sharded plans to the same f64 trajectory."""
+    res = engine_result["sched"]
+    assert res["rebuilds"] >= 1, res
+    assert res["pos"] < 1e-9, res
+    assert res["spin"] < 1e-9, res
+
+
+def test_schedule_in_scan_zero_recompiles(engine_result):
+    """Field cooling on the sharded plan: one compiled chunk, 0 recompiles
+    as the protocol advances across chunks."""
+    res = engine_result["sched"]
+    assert res["recompiles_after_first_chunk"] == 0, res
+    assert res["chunk_cache"] == 1, res
+
+
+def test_observable_pipeline_matches_analysis(engine_result):
+    """The psum-reduced sharded charge pipeline reproduces md/analysis.py
+    (and the flat pipeline, which calls it verbatim)."""
+    res = engine_result["sched"]
+    assert abs(res["charge_sharded"][-1] - res["charge_analysis"]) < 1e-6
+    np.testing.assert_allclose(res["charge_sharded"], res["charge_flat"],
+                               atol=1e-6)
+
+
+def test_checkpoint_restart_bitwise_sharded(engine_result):
+    res = engine_result["ckpt"]
+    assert res == {"pos_bitwise": True, "spin_bitwise": True,
+                   "vel_bitwise": True, "rebuilds_match": True}
+
+
+def test_replica_axis_device_sharding(engine_result):
+    """shard_replicas spreads the replica axis over devices: bitwise
+    parity with the unsharded run, and restore re-places the carry
+    sharded (then resumes bitwise)."""
+    res = engine_result["replica_shard"]
+    assert res == {"matches_unsharded": True, "restore_sharded": True,
+                   "resume_bitwise": True}
+
+
+def test_nep_kernel_rides_sharded_plan(engine_result):
+    """use_kernel=True through the domain decomposition: energies/forces
+    match the flat kernel path at f32 roundoff; adjoint accumulators move
+    in one q_Fp halo per evaluation."""
+    res = engine_result["kernel"]
+    assert res["e0"] < 1e-5, res
+    assert res["f0"] < 1e-6, res
+    assert res["h0"] < 1e-6, res
+    assert res["qfp_exchanges"] >= 1, res
+    assert res["pos"] < 1e-4, res
+    assert res["spin"] < 1e-3, res
+
+
+# ---------------------------------------------------------------- in-process
+
+def _engine(plan=None, seed=3, obs=("energy", "kinetic", "magnetization",
+                                    "charge", "pitch"), **kw):
+    lat = simple_cubic()
+    st = init_state(lat, (4, 4, 4), temperature=500.0, spin_init="helix_x",
+                    key=jax.random.PRNGKey(seed))
+    return st, Engine(potential=HeisenbergDMIModel(d0=0.008),
+                      cfg=IntegratorConfig(dt=2e-3, spin_alpha=0.05,
+                                           lattice_gamma=1.0),
+                      state=st, masses=jnp.asarray(lat.masses),
+                      magnetic=jnp.asarray(lat.moments) > 0, cutoff=5.0,
+                      capacity=8, skin=0.2, plan=plan, observables=obs,
+                      temperature=100.0, **kw)
+
+
+def test_flat_observables_reproduce_analysis():
+    _, eng = _engine()
+    eng.run(30, jax.random.PRNGKey(0), chunk=10)
+    st = eng.state
+    mag = (jnp.asarray(simple_cubic().moments) > 0)[
+        jnp.maximum(st.types, 0)]
+    np.testing.assert_allclose(
+        eng.trace.values["charge"][-1],
+        np.asarray(topological_charge(st.pos, st.spin, st.box,
+                                      grid=(32, 32))), atol=1e-6)
+    np.testing.assert_allclose(
+        eng.trace.values["magnetization"][-1],
+        np.asarray(magnetization(st.spin, mask=mag)), atol=1e-6)
+    np.testing.assert_allclose(
+        eng.trace.values["pitch"][-1],
+        np.asarray(helix_pitch(st.pos, st.spin, st.box, axis=0,
+                               n_bins=64)), atol=1e-6)
+
+
+def test_obs_every_streams_in_scan():
+    _, eng = _engine(obs_every=5, obs=("energy", "magnetization"))
+    eng.run(40, jax.random.PRNGKey(0), chunk=20)
+    assert eng.trace.values["energy"].shape == (8,)
+    assert eng.trace.values["magnetization"].shape == (8, 3)
+    np.testing.assert_allclose(eng.trace.time,
+                               2e-3 * np.arange(5, 45, 5), rtol=1e-6)
+    assert eng._chunk_fn._cache_size() == 1
+    with pytest.raises(ValueError, match="multiple"):
+        eng.run(30, jax.random.PRNGKey(0), chunk=7)
+
+
+def test_checkpoint_restart_bitwise_flat_and_replica():
+    for plan in (None, Replicated(3)):
+        _, a = _engine(plan=plan)
+        a.run(60, jax.random.PRNGKey(5), chunk=20)
+        with tempfile.TemporaryDirectory() as d:
+            _, b = _engine(plan=plan)
+            b.run(40, jax.random.PRNGKey(5), chunk=20, checkpoint_dir=d)
+            _, c = _engine(plan=plan)
+            key = c.restore(d)
+            c.run(20, key, chunk=20)
+        label = type(plan).__name__ if plan else "flat"
+        assert bool(jnp.all(a.state.pos == c.state.pos)), label
+        assert bool(jnp.all(a.state.spin == c.state.spin)), label
+        assert bool(jnp.all(a.state.vel == c.state.vel)), label
+
+
+def test_resume_flag_picks_up_newest_checkpoint():
+    _, a = _engine()
+    a.run(40, jax.random.PRNGKey(9), chunk=20)
+    with tempfile.TemporaryDirectory() as d:
+        _, b = _engine()
+        b.run(20, jax.random.PRNGKey(9), chunk=20, checkpoint_dir=d)
+        _, c = _engine()
+        # the passed key is replaced by the checkpointed one on resume;
+        # the remaining 20 steps land exactly on a's uninterrupted 40
+        c.run(20, jax.random.PRNGKey(123), chunk=20, checkpoint_dir=d,
+              resume=True)
+    assert bool(jnp.all(a.state.pos == c.state.pos))
+    assert bool(jnp.all(a.state.spin == c.state.spin))
+
+
+def test_nep_spin_through_replica_plan():
+    """NEP-SPIN (autodiff) drives the vmapped-replica plan under a
+    field-cooling schedule - the evaluator and plan axes compose (closes
+    the ROADMAP 'NEP through the ensemble' item as configuration)."""
+    from repro.core.descriptor import NEPSpinSpec
+    from repro.core.potential import NEPSpinPotential, init_params
+
+    lat = simple_cubic()
+    st = init_state(lat, (3, 3, 3), temperature=300.0, spin_init="helix_x",
+                    key=jax.random.PRNGKey(1), dtype=jnp.float32)
+    spec = NEPSpinSpec(l_max=2, n_ang=2, n_rad=4, n_spin=2, basis_size=6)
+    params = init_params(spec, jax.random.PRNGKey(0), dtype=jnp.float32)
+    temp, field = protocol.field_cooling(200.0, 20.0, 5.0, t_hold=0.004,
+                                         t_ramp=0.02)
+    eng = Engine(potential=NEPSpinPotential(spec, params),
+                 cfg=IntegratorConfig(dt=2e-3, spin_alpha=0.05,
+                                      lattice_gamma=1.0),
+                 state=st, masses=jnp.asarray(lat.masses, jnp.float32),
+                 magnetic=jnp.asarray(lat.moments) > 0, cutoff=5.0,
+                 capacity=16, skin=0.3, plan=Replicated(2),
+                 temperature=temp, field=field,
+                 observables=("energy", "charge"))
+    eng.run(20, jax.random.PRNGKey(3), chunk=10)
+    assert eng.trace.values["energy"].shape == (2, 2)
+    assert np.isfinite(eng.trace.values["energy"]).all()
+    assert np.isfinite(np.asarray(eng.state.spin)).all()
+    # thermostat streams differ per replica -> trajectories decorrelate
+    assert float(jnp.abs(eng.state.spin[0] - eng.state.spin[1]).max()) > 0
+
+
+def test_schedule_on_flat_plan_tracks_constant_segments():
+    """A constant schedule and the same constant value produce identical
+    trajectories (the schedule axis is orthogonal to the others)."""
+    _, a = _engine()
+    _, b = _engine()
+    a.temperature = 100.0
+    b.temperature = protocol.constant(100.0)
+    a.run(30, jax.random.PRNGKey(2), chunk=10)
+    b.run(30, jax.random.PRNGKey(2), chunk=10)
+    np.testing.assert_array_equal(np.asarray(a.state.spin),
+                                  np.asarray(b.state.spin))
+    np.testing.assert_array_equal(np.asarray(a.state.pos),
+                                  np.asarray(b.state.pos))
