@@ -14,7 +14,8 @@ emits ``BENCH_scaling.json`` with
 * steps/s and weak-scaling efficiency vs the 1-device *flat* fused
   baseline (``Simulation`` at the same per-device atom count),
 * per-step halo traffic by tag (position drift / spin / adjoint fold-back)
-  from the trace-time exchange ledger (``repro.parallel.halo.TRACE``),
+  from the run-scoped trace-time exchange ledger
+  (``SimulationSharded.halo_ledger``),
 * recompile counts during the measured run (must be 0: one compiled chunk
   covers every in-scan rebuild + migration), and
 * the drift-exchange invariant: exactly ONE position halo per drift,
@@ -70,7 +71,6 @@ def _worker(ndev: int, size: str, smoke: bool) -> None:
     from repro.md.lattice import simple_cubic
     from repro.md.simulate import Simulation, SimulationSharded
     from repro.md.state import init_state
-    from repro.parallel.halo import TRACE
 
     assert len(jax.devices()) == ndev, (len(jax.devices()), ndev)
     steps = CHUNK if smoke else 3 * CHUNK
@@ -113,12 +113,12 @@ def _worker(ndev: int, size: str, smoke: bool) -> None:
         out["flat_steps_per_s"] = steps / wall
 
     sh = SimulationSharded(state=st, **kw)
-    TRACE.reset()
     wall, n_comp = timed(sh, jax.random.PRNGKey(1), jax.random.PRNGKey(2))
     # one traced chunk covers warmup AND the measured run: counts are
-    # per-step-body occurrences, bytes are per-device per occurrence
-    per_exchange = {t: (TRACE.bytes[t] // max(TRACE.counts[t], 1))
-                    for t in TRACE.counts}
+    # per-step-body occurrences, bytes are per-device per occurrence;
+    # the run-scoped ledger sees only THIS simulation's exchanges
+    ledger = sh.halo_ledger
+    per_exchange = ledger.per_exchange_bytes()
     out.update({
         "steps_per_s": steps / wall,
         "wall_s": wall,
@@ -128,14 +128,13 @@ def _worker(ndev: int, size: str, smoke: bool) -> None:
         "chunk_cache": len(sh._chunk_cache),
         "cells": sh._dspec.cells,
         "cell_capacity": sh._dspec.capacity,
-        "drift_pos_exchanges_per_step": TRACE.counts.get("drift-pos", 0),
+        "drift_pos_exchanges_per_step": ledger.counts.get("drift-pos", 0),
         "halo_bytes_per_exchange": per_exchange,
         # per executed step: one drift-pos, one spin, one adjoint round
-        "halo_bytes_per_step": sum(per_exchange.get(t, 0) for t in
-                                   ("drift-pos", "spin", "adjoint")),
+        "halo_bytes_per_step": ledger.per_step_bytes(),
     })
     # the drift-exchange invariant of the gather->compute contract
-    assert out["drift_pos_exchanges_per_step"] == 1, TRACE.counts
+    assert out["drift_pos_exchanges_per_step"] == 1, ledger.counts
     print("RESULT " + json.dumps(out), flush=True)
 
 

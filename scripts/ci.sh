@@ -14,6 +14,15 @@
 #                                        schedule-driven sharded chunk plus
 #                                        a checkpoint/resume cycle asserted
 #                                        bitwise (scripts/engine_smoke.py).
+#                                        The engine smoke also asserts the
+#                                        telemetry contract: the runlog
+#                                        JSONL has >=1 chunk record whose
+#                                        halo bytes match the run-scoped
+#                                        ledger, compile count is 0 after
+#                                        warmup, energy drift + health
+#                                        verdict are present, and
+#                                        `python -m repro.launch.report`
+#                                        renders it without error.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 

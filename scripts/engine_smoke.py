@@ -11,8 +11,15 @@ chunk boundary, restores into a fresh engine, and asserts the resumed
 trajectory is bitwise identical to an uninterrupted run - the smallest
 end-to-end proof that the engine's schedule, sharding, and
 checkpoint-restart axes compose.
+
+The first run also exercises the telemetry layer: the runlog JSONL must
+contain per-chunk records whose halo bytes match the engine's run-scoped
+ledger exactly, whose compile count drops to 0 after the warmup chunk,
+and which carry an energy-drift signal and a health verdict; then
+``python -m repro.launch.report`` must render the runlog without error.
 """
 import os
+import subprocess
 import sys
 import tempfile
 
@@ -48,13 +55,51 @@ def make_engine():
         observables=("energy", "magnetization", "charge"))
 
 
+def check_runlog(path, eng):
+    """Assert the telemetry contract on the smoke run's JSONL stream."""
+    from repro.telemetry.runlog import read_runlog
+
+    events = read_runlog(path)
+    kinds = [e["event"] for e in events]
+    assert kinds[0] == "run_start" and kinds[-1] == "run_end", kinds
+    chunks = [e for e in events if e["event"] == "chunk"]
+    assert len(chunks) >= 1, "runlog has no chunk records"
+    ledger = eng.halo_ledger.snapshot()
+    for c in chunks:
+        assert c["halo"] == ledger, (
+            f"runlog halo record diverges from the run-scoped ledger:\n"
+            f"  record: {c['halo']}\n  ledger: {ledger}")
+        assert "e_drift" in c["health"], c["health"]
+        assert c["verdict"] in ("ok", "warn"), c["verdict"]
+    assert chunks[0]["compiles"] >= 1, "warmup chunk recorded no compile"
+    for c in chunks[1:]:
+        assert c["compiles"] == 0, (
+            f"recompile in steady state: chunk {c['chunk']} "
+            f"compiled {c['compiles']}x")
+    end = events[-1]
+    assert end["status"] == "ok", end
+
+    rep = subprocess.run(
+        [sys.executable, "-m", "repro.launch.report", path],
+        capture_output=True, text=True,
+        env={**os.environ,
+             "PYTHONPATH": "src" + os.pathsep + os.environ.get(
+                 "PYTHONPATH", "")})
+    assert rep.returncode == 0, f"report CLI failed:\n{rep.stderr}"
+    assert "Run report" in rep.stdout, rep.stdout
+    return len(chunks)
+
+
 def main():
     assert jax.device_count() >= 2, (
         f"engine smoke needs 2 devices, got {jax.device_count()} - set "
         "XLA_FLAGS=--xla_force_host_platform_device_count=2")
     key = jax.random.PRNGKey(7)
     a = make_engine()
-    a.run(20, key, chunk=10)
+    with tempfile.TemporaryDirectory() as d:
+        runlog = os.path.join(d, "smoke.jsonl")
+        a.run(20, key, chunk=10, telemetry=runlog)
+        n_chunks = check_runlog(runlog, a)
     with tempfile.TemporaryDirectory() as d:
         b = make_engine()
         b.run(10, key, chunk=10, checkpoint_dir=d)
@@ -67,7 +112,8 @@ def main():
     assert a.trace.values["charge"].shape == (2,)
     print("engine smoke OK: schedule-driven sharded chunk on "
           f"{jax.device_count()} devices, checkpoint/resume bitwise, "
-          f"Q trace {a.trace.values['charge'].tolist()}")
+          f"Q trace {a.trace.values['charge'].tolist()}, "
+          f"runlog {n_chunks} chunk records verified + report rendered")
 
 
 if __name__ == "__main__":

@@ -193,8 +193,8 @@ class ReplicaEnsemble:
         while done < n_steps:
             n = min(chunk, n_steps - done)
             key, kc = jax.random.split(key)
-            carry, obs = eng._chunk_fn(eng._carry, eng._replica_put(kc),
-                                       targ, farg, n, None)
+            carry, obs, _ = eng._chunk_fn(eng._carry, eng._replica_put(kc),
+                                          targ, farg, n, None)
             eng._carry = carry
             done += n
             n_chunks += 1

@@ -176,7 +176,6 @@ def run_engine_chunk(cells=(8, 6, 6), steps: int = 40, chunk: int = 20,
     from repro.md.engine import Engine
     from repro.md.lattice import simple_cubic
     from repro.md.state import init_state
-    from repro.parallel.halo import TRACE
     from repro.parallel.plan import Sharded
 
     compiles = _compile_counter()
@@ -205,7 +204,6 @@ def run_engine_chunk(cells=(8, 6, 6), steps: int = 40, chunk: int = 20,
         t_hold=0.2 * t_end, t_ramp=0.6 * t_end)
     icfg = IntegratorConfig(dt=mdcfg.dt, moment=1.16, lattice_gamma=1.0,
                             spin_alpha=0.01)
-    TRACE.reset()
     eng = Engine(
         potential=potential, cfg=icfg, state=st,
         masses=jnp.asarray(lat.masses, jnp.float32),
@@ -230,8 +228,9 @@ def run_engine_chunk(cells=(8, 6, 6), steps: int = 40, chunk: int = 20,
         "compiles_during_run": compiles["n"] - c0,
         "chunk_cache": len(eng._chunk_cache),
         "charge": [float(q) for q in eng.trace.values["charge"]],
-        "halo_counts": dict(TRACE.counts),
-        "halo_bytes": dict(TRACE.bytes),
+        "halo_counts": dict(eng.halo_ledger.counts),
+        "halo_bytes": dict(eng.halo_ledger.bytes),
+        "halo_bytes_per_step": eng.halo_ledger.per_step_bytes(),
     }
 
 

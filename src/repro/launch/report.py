@@ -1,6 +1,13 @@
-"""Compile experiments/dryrun/*.json into the EXPERIMENTS.md tables.
+"""Render run reports.
 
-  PYTHONPATH=src python -m repro.launch.report > experiments/roofline.md
+Two modes:
+
+* ``python -m repro.launch.report run.jsonl [more.jsonl ...]`` - render a
+  report from engine runlogs (the JSONL event streams written by
+  ``Engine.run(telemetry=...)``): throughput, halo bytes/step, compile
+  counts after warmup, energy-drift curve, and the health verdict.
+* ``python -m repro.launch.report`` (no args) - legacy mode: compile
+  ``experiments/dryrun/*.json`` into the EXPERIMENTS.md roofline tables.
 """
 from __future__ import annotations
 
@@ -8,6 +15,150 @@ import glob
 import json
 import os
 import sys
+
+# ---------------------------------------------------------------------------
+# runlog reports
+# ---------------------------------------------------------------------------
+
+_BLOCKS = "▁▂▃▄▅▆▇█"
+
+
+def sparkline(values) -> str:
+    """Unicode sparkline of a numeric series (non-finite entries -> 'x')."""
+    import math
+
+    vals = []
+    for v in values:
+        try:
+            v = float(v)
+        except (TypeError, ValueError):
+            v = float("nan")
+        vals.append(v)
+    finite = [v for v in vals if math.isfinite(v)]
+    if not finite:
+        return "x" * len(vals)
+    lo, hi = min(finite), max(finite)
+    span = (hi - lo) or 1.0
+    out = []
+    for v in vals:
+        if not math.isfinite(v):
+            out.append("x")
+        else:
+            idx = int((v - lo) / span * (len(_BLOCKS) - 1))
+            out.append(_BLOCKS[idx])
+    return "".join(out)
+
+
+def _median(xs):
+    xs = sorted(xs)
+    if not xs:
+        return None
+    n = len(xs)
+    return xs[n // 2] if n % 2 else 0.5 * (xs[n // 2 - 1] + xs[n // 2])
+
+
+def _fmt_bytes(n) -> str:
+    if n is None:
+        return "-"
+    for unit in ("B", "KiB", "MiB", "GiB"):
+        if abs(n) < 1024 or unit == "GiB":
+            return f"{n:.1f} {unit}" if unit != "B" else f"{n:.0f} B"
+        n /= 1024
+    return f"{n:.1f} GiB"
+
+
+def runlog_report(path: str | os.PathLike) -> str:
+    """Render one runlog into a human-readable report string."""
+    from repro.telemetry.runlog import read_runlog
+
+    events = read_runlog(path)
+    start = next((e for e in events if e.get("event") == "run_start"), {})
+    end = next((e for e in events if e.get("event") == "run_end"), None)
+    chunks = [e for e in events if e.get("event") == "chunk"]
+
+    lines = [f"## Run report: {path}", ""]
+    prov = start.get("provenance", {})
+    lines.append(
+        f"- plan `{start.get('plan', '?')}` | potential "
+        f"`{start.get('potential', '?')}` | {start.get('n_atoms', '?')} atoms"
+        f" | {prov.get('device_count', '?')} device(s) on "
+        f"`{prov.get('backend', '?')}` (jax {prov.get('jax_version', '?')})")
+    lines.append(
+        f"- schedule: {start.get('n_steps', '?')} steps in chunks of "
+        f"{start.get('chunk', '?')} (dt {start.get('dt_ps', '?')} ps)")
+
+    if not chunks:
+        lines.append("- no chunk records (run failed before first boundary)")
+    else:
+        rates = [c["steps_per_s"] for c in chunks
+                 if c.get("steps_per_s") is not None]
+        med = _median(rates)
+        # steady-state throughput: skip the warmup (compiling) chunk when
+        # there is more than one record
+        steady = [c["steps_per_s"] for c in chunks[1:]
+                  if c.get("steps_per_s") is not None] or rates
+        lines.append(
+            f"- throughput: median {med:.1f} steps/s "
+            f"(steady-state {_median(steady):.1f} steps/s over "
+            f"{len(chunks)} chunk(s))")
+        compiles = [c.get("compiles", 0) for c in chunks]
+        post_warm = sum(compiles[1:])
+        lines.append(
+            f"- compiles: {compiles[0]} warmup, {post_warm} after warmup"
+            + ("  <-- RECOMPILE" if post_warm else ""))
+        halos = [c.get("halo") for c in chunks if c.get("halo")]
+        if halos:
+            bps = halos[-1].get("bytes_per_step")
+            lines.append(f"- halo exchange: {_fmt_bytes(bps)}/step "
+                         f"({sum(halos[-1].get('counts', {}).values())} "
+                         f"exchanges traced)")
+        drifts = [c.get("health", {}).get("e_drift") for c in chunks]
+        if any(d is not None for d in drifts):
+            worst = max((abs(float(d)) for d in drifts
+                         if d is not None and _is_num(d)), default=None)
+            lines.append(
+                f"- energy drift per chunk: {sparkline(drifts)} "
+                f"(max |drift| {worst:.3e})" if worst is not None
+                else f"- energy drift per chunk: {sparkline(drifts)}")
+        verdicts = {}
+        for c in chunks:
+            v = c.get("verdict", "?")
+            verdicts[v] = verdicts.get(v, 0) + 1
+        lines.append("- health: " + ", ".join(
+            f"{n}x {v}" for v, n in sorted(verdicts.items())))
+
+    if end is None:
+        lines.append("- status: **incomplete** (no run_end record)")
+    else:
+        status = end.get("status", "?")
+        mark = "" if status == "ok" else " **<-- FAILED**"
+        lines.append(
+            f"- status: {status}{mark} | {end.get('total_steps', '?')} steps "
+            f"in {_fmt_s(end.get('total_wall_s'))}")
+        if end.get("error"):
+            lines.append(f"  error: {end['error']}")
+        if end.get("peak_memory_bytes"):
+            lines.append(
+                f"- peak device memory: "
+                f"{_fmt_bytes(end['peak_memory_bytes'])}")
+    return "\n".join(lines)
+
+
+def _is_num(x) -> bool:
+    try:
+        float(x)
+        return True
+    except (TypeError, ValueError):
+        return False
+
+
+def _fmt_s(s) -> str:
+    return f"{s:.2f} s" if isinstance(s, (int, float)) else "?"
+
+
+# ---------------------------------------------------------------------------
+# legacy dryrun/roofline tables
+# ---------------------------------------------------------------------------
 
 
 def load_all(d="experiments/dryrun"):
@@ -74,7 +225,7 @@ def summary(recs) -> str:
     return "\n".join(out)
 
 
-def main():
+def dryrun_main():
     recs = load_all()
     print("## Dry-run + roofline summary\n")
     print(summary(recs))
@@ -82,6 +233,17 @@ def main():
     print(roofline_table(recs, "pod1"))
     print("\n### Multi-pod (2x16x16 = 512 chips)\n")
     print(roofline_table(recs, "pod2"))
+
+
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    if not argv:
+        dryrun_main()
+        return
+    for i, path in enumerate(argv):
+        if i:
+            print()
+        print(runlog_report(path))
 
 
 if __name__ == "__main__":

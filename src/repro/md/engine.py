@@ -48,6 +48,7 @@ class (kept for their established constructor/trace surfaces).
 from __future__ import annotations
 
 import dataclasses
+import time
 from functools import partial
 from typing import Any, Callable, NamedTuple
 
@@ -64,7 +65,12 @@ from repro.md.neighbor import (NeighborTable, Neighborhood, cell_order,
                                gather_blocks, make_table_builder,
                                needs_rebuild, refresh_dr)
 from repro.md.state import SpinLatticeState, kinetic_energy
+from repro.parallel.halo import HaloTrace
 from repro.parallel.plan import Replicated, Sharded, SingleDevice, as_plan
+from repro.telemetry import (TelemetrySession, as_telemetry, check_chunk,
+                             maybe_trace, phase)
+from repro.telemetry.monitor import (HealthError, nonfinite_count,
+                                     occupancy_fraction, spin_norm_dev)
 from repro.utils import units
 
 
@@ -122,17 +128,25 @@ class DomainCarry(NamedTuple):
                               # collective per step instead of two
     n_rebuilds: jax.Array     # () int32, shared trip -> identical everywhere
     n_migrated: jax.Array     # () int32, psummed at rebuild
-    n_dropped: jax.Array      # () int32, overflow + skin-violation losses
+    n_dropped: jax.Array      # (n_devices,) int32 per-device overflow +
+                              # skin-violation losses, replicated via psum
+                              # so the HealthError can name the device
 
 
 class EngineTrace(NamedTuple):
     """Streamed observables: one row per emission (chunk boundary, or every
     ``obs_every`` steps when streaming).  ``values[name]`` has leading dim
     C = number of emissions, then a replica dim on replica plans, then the
-    observable's own tail (e.g. (3,) for magnetization)."""
+    observable's own tail (e.g. (3,) for magnetization).
+
+    ``health`` holds the in-scan health signals at CHUNK cadence (one row
+    per chunk regardless of ``obs_every``): e_drift, spin_dev, nonfinite,
+    nbr_occ (+ cell_occ on the sharded plan) - see
+    :mod:`repro.telemetry.monitor`."""
 
     time: np.ndarray              # (C,) ps at emission points
     values: dict[str, np.ndarray]
+    health: dict[str, np.ndarray] | None = None   # (n_chunks,) per signal
 
 
 # ===========================================================================
@@ -182,7 +196,11 @@ def make_flat_observe(names, masses, magnetic, diag_grid, pitch_axis,
                                         axis=pitch_axis, n_bins=pitch_bins)
         return {k: vals[k] for k in names}
 
-    return observe
+    def scoped(state, ff):
+        with phase("observe"):
+            return observe(state, ff)
+
+    return scoped
 
 
 def make_domain_observe(names, masses, magnetic, diag_grid, pitch_axis,
@@ -238,7 +256,11 @@ def make_domain_observe(names, masses, magnetic, diag_grid, pitch_axis,
             vals["pitch"] = pitch_from_profile(prof, state.box, pitch_axis)
         return {k: vals[k] for k in names}
 
-    return observe
+    def scoped(state, ff):
+        with phase("observe"):
+            return observe(state, ff)
+
+    return scoped
 
 
 _OBS_TAIL_NDIM = {"magnetization": 1}
@@ -341,6 +363,8 @@ class Engine:
 
     # ------------------------------------------------------------------
     def __post_init__(self):
+        self._halo = HaloTrace()    # run-scoped halo ledger (this engine)
+        self._last_ckpt = None      # newest checkpoint written by save()
         self.plan = as_plan(self.plan)
         self.observables = _check_names(self.observables)
         if self.obs_every is not None and self.obs_every < 1:
@@ -391,6 +415,12 @@ class Engine:
             return self._carry.ffs.energy
         e = self._carry.ff.energy
         return np.asarray(e) if self.replicas else float(e)
+
+    @property
+    def halo_ledger(self) -> HaloTrace:
+        """This engine's run-scoped halo exchange ledger (empty on
+        non-sharded plans: they move no halos)."""
+        return self._halo
 
     # ------------------------------------------------------------------
     # schedule arguments
@@ -483,16 +513,19 @@ class Engine:
         dt = self.cfg.dt
 
         def compute_ff(nbh, spin, types, field):
-            return ForceField(*potential.compute(nbh, spin, types, field))
+            with phase("force"):
+                return ForceField(*potential.compute(nbh, spin, types,
+                                                     field))
 
         def rebuild(state, perm, field):
             """In-graph: (re)order atoms, rebuild table, gather, evaluate."""
-            if reorder:
-                order = cell_order(state.pos, state.box, n_cells)
-                state = _permute_atoms(state, order)
-                perm = perm[order]
-            table = build(state.pos, state.box)
-            nbh = gather_blocks(state.pos, state.types, table, state.box)
+            with phase("rebuild"):
+                if reorder:
+                    order = cell_order(state.pos, state.box, n_cells)
+                    state = _permute_atoms(state, order)
+                    perm = perm[order]
+                table = build(state.pos, state.box)
+                nbh = gather_blocks(state.pos, state.types, table, state.box)
             ff = compute_ff(nbh, state.spin, state.types, field)
             return state, ff, table, nbh, perm
 
@@ -506,11 +539,22 @@ class Engine:
                                     self.pitch_bins)
         eval_args = self._make_eval_args(0)
 
+        def health_of(c: FusedCarry, etot0):
+            st, ff = c.state, c.ff
+            mag = magnetic[jnp.maximum(st.types, 0)]
+            return {
+                "e_drift": (ff.energy + kinetic_energy(st, masses)) - etot0,
+                "spin_dev": spin_norm_dev(st.spin, mag),
+                "nonfinite": nonfinite_count(st.pos, ff.force, st.spin),
+                "nbr_occ": occupancy_fraction(c.table.mask),
+            }
+
         # schedule arguments are runtime pytrees (their structure - absent /
         # constant / knots - keys the jit cache; their VALUES never retrace)
         @partial(jax.jit, static_argnames=("n", "emit"))
         def chunk(carry: FusedCarry, key, targ, farg, n: int, emit):
             t0 = carry.state.step.astype(jnp.float32) * dt
+            etot0 = carry.ff.energy + kinetic_energy(carry.state, masses)
             obs_zero = (None if emit is None else jax.tree_util.tree_map(
                 lambda s: jnp.zeros(s.shape, s.dtype),
                 jax.eval_shape(observe, carry.state, carry.ff)))
@@ -525,7 +569,8 @@ class Engine:
                                       c.n_rebuilds + 1)
                 trip = needs_rebuild(c.table, c.state.pos, box0, skin)
                 c = jax.lax.cond(trip, do_rebuild, lambda c: c, c)
-                st, ff, nbh = step(c.state, c.ff, c.nbh, k, temp, field)
+                with phase("integrate"):
+                    st, ff, nbh = step(c.state, c.ff, c.nbh, k, temp, field)
                 c = FusedCarry(st, ff, c.table, nbh, c.perm, c.n_rebuilds)
                 if emit is None:
                     return c, None
@@ -533,8 +578,9 @@ class Engine:
                                   lambda: obs_zero)
                 return c, ys
 
-            return _scan_chunk(body, carry, key, n, emit,
-                               lambda c: observe(c.state, c.ff))
+            carry, obs = _scan_chunk(body, carry, key, n, emit,
+                                     lambda c: observe(c.state, c.ff))
+            return carry, obs, health_of(carry, etot0)
 
         self._chunk_fn = chunk
         self._compute_ff = compute_ff
@@ -621,7 +667,9 @@ class Engine:
                                          self.use_cell_list)
 
         def compute_ff(nbh, spin, types, field=None):
-            return ForceField(*potential.compute(nbh, spin, types, field))
+            with phase("force"):
+                return ForceField(*potential.compute(nbh, spin, types,
+                                                     field))
 
         def reference_pos(states):
             """Replica-mean positions (min-imaged around replica 0) - the
@@ -642,8 +690,9 @@ class Engine:
 
         def build_shared(states, field_r):
             """Rebuild the shared table + per-replica dr / forces."""
-            table = build(reference_pos(states), box0)
-            nbh = shared_blocks(table, states.pos)
+            with phase("rebuild"):
+                table = build(reference_pos(states), box0)
+                nbh = shared_blocks(table, states.pos)
             f_ax = None if field_r is None else 0
             ffs = jax.vmap(
                 lambda d, s, f: compute_ff(nbh._replace(dr=d), s, types0, f),
@@ -665,9 +714,24 @@ class Engine:
         vobserve = jax.vmap(observe)
         eval_args = self._make_eval_args(r)
 
+        vkin = jax.vmap(lambda s: kinetic_energy(s, masses))
+
+        def health_of(c: ReplicaCarry, etot0):
+            st, ffs = c.states, c.ffs
+            drift = (ffs.energy + vkin(st)) - etot0     # (R,)
+            mag = magnetic[jnp.maximum(st.types, 0)]    # (R, N)
+            return {
+                # the max-magnitude replica's signed drift
+                "e_drift": drift[jnp.argmax(jnp.abs(drift))],
+                "spin_dev": spin_norm_dev(st.spin, mag),
+                "nonfinite": nonfinite_count(st.pos, ffs.force, st.spin),
+                "nbr_occ": occupancy_fraction(c.table.mask),
+            }
+
         @partial(jax.jit, static_argnames=("n", "emit"))
         def chunk(carry: ReplicaCarry, key, targ, farg, n: int, emit):
             t0 = carry.states.step[0].astype(jnp.float32) * dt
+            etot0 = carry.ffs.energy + vkin(carry.states)
             obs_zero = (None if emit is None else jax.tree_util.tree_map(
                 lambda s: jnp.zeros(s.shape, s.dtype),
                 jax.eval_shape(vobserve, carry.states, carry.ffs)))
@@ -691,8 +755,9 @@ class Engine:
                 c = jax.lax.cond(trip, do_rebuild, lambda c: c, c)
                 keys = jax.vmap(lambda i: jax.random.fold_in(k, i))(
                     jnp.arange(r))
-                states, ffs, nbh = vstep(c.states, c.ffs, c.nbh, keys,
-                                         temp, field)
+                with phase("integrate"):
+                    states, ffs, nbh = vstep(c.states, c.ffs, c.nbh, keys,
+                                             temp, field)
                 c = ReplicaCarry(states, ffs, c.table, nbh, c.n_rebuilds)
                 if emit is None:
                     return c, None
@@ -700,8 +765,9 @@ class Engine:
                                   lambda: obs_zero)
                 return c, ys
 
-            return _scan_chunk(body, carry, key, n, emit,
-                               lambda c: vobserve(c.states, c.ffs))
+            carry, obs = _scan_chunk(body, carry, key, n, emit,
+                                     lambda c: vobserve(c.states, c.ffs))
+            return carry, obs, health_of(carry, etot0)
 
         self._chunk_fn = chunk
         self._build_shared = build_shared
@@ -819,7 +885,7 @@ class Engine:
                                self.skin,
                                self.state.pos.dtype == jnp.float32)
         self._rplan = rp
-        rp.register_halo_sizes()
+        rp.register_halo_sizes(self._halo)
         self._n_atoms = n = self.state.pos.shape[0]
         dstate, extras = pack_domain(
             rp.dspec, self.state.pos, self.state.vel, self.state.spin,
@@ -865,12 +931,40 @@ class Engine:
         r_loc = rp.local_replicas()
 
         def compute_ff(nbh, spin, types, field):
-            return ForceField(*compute(nbh, spin, types, field))
+            with phase("force"):
+                return ForceField(*compute(nbh, spin, types, field))
 
         def psum_axes(x):
             for name in axes:
                 x = jax.lax.psum(x, name)
             return x
+
+        def psum_all(x):
+            return jax.lax.psum(x, mesh.axis_names)
+
+        def pmax_all(x):
+            for name in mesh.axis_names:
+                x = jax.lax.pmax(x, name)
+            return x
+
+        def dev_index():
+            """Linear device index folding every mesh axis (incl. replica)."""
+            dev = jnp.asarray(0, jnp.int32)
+            for name in mesh.axis_names:
+                dev = dev * jax.lax.psum(1, name) + jax.lax.axis_index(name)
+            return dev
+
+        ndev = mesh.size
+
+        def dev_counts(x):
+            """Scatter a device-local int count into a replicated
+            (n_devices,) vector - the per-device breakdown the overflow
+            HealthError reports."""
+            onehot = (jnp.arange(ndev, dtype=jnp.int32)
+                      == dev_index()).astype(jnp.int32)
+            return psum_all(onehot * x.astype(jnp.int32))
+
+        self._dev_counts = dev_counts
 
         def trip_local(state, r0):
             box = state.box.astype(state.pos.dtype)
@@ -883,18 +977,20 @@ class Engine:
         sig = self._spin_in_gather
 
         def rebuild_one(state, aid, field):
-            pos, vel, spin, types, aid, moved, dropped = migrate_cells(
-                dspec, local, state.pos, state.vel, state.spin,
-                state.types, aid, allgather=ag)
-            idx, pmask, tj = build_local_table(dspec, local, m_cap, pos,
-                                               types, allgather=ag)
-            blk = jnp.zeros(idx.shape + (3,), pos.dtype)
-            nbh = DomainNbh(idx=idx, mask=pmask, tj=tj, dr=blk,
-                            sj=blk if sig else
-                            jnp.zeros((0,), pos.dtype))
-            nbh = refresh(pos, nbh, spin if sig else None,
-                          tag="rebuild-pos")
-            state = state._replace(pos=pos, vel=vel, spin=spin, types=types)
+            with phase("rebuild"):
+                pos, vel, spin, types, aid, moved, dropped = migrate_cells(
+                    dspec, local, state.pos, state.vel, state.spin,
+                    state.types, aid, allgather=ag)
+                idx, pmask, tj = build_local_table(dspec, local, m_cap, pos,
+                                                   types, allgather=ag)
+                blk = jnp.zeros(idx.shape + (3,), pos.dtype)
+                nbh = DomainNbh(idx=idx, mask=pmask, tj=tj, dr=blk,
+                                sj=blk if sig else
+                                jnp.zeros((0,), pos.dtype))
+                nbh = refresh(pos, nbh, spin if sig else None,
+                              tag="rebuild-pos")
+                state = state._replace(pos=pos, vel=vel, spin=spin,
+                                       types=types)
             ff = compute_ff(nbh, spin, types, field)
             return state, ff, nbh, aid, pos, moved, dropped
 
@@ -920,10 +1016,7 @@ class Engine:
             The linear device index already folds in the replica mesh axis,
             so (device, local-replica) pairs are globally unique.
             """
-            dev = jnp.asarray(0, jnp.int32)
-            for name in mesh.axis_names:
-                dev = dev * jax.lax.psum(1, name) + jax.lax.axis_index(name)
-            k = jax.random.fold_in(key, dev)
+            k = jax.random.fold_in(key, dev_index())
             if rep:
                 return jax.vmap(lambda r: jax.random.fold_in(k, r))(
                     jnp.arange(r_loc))
@@ -933,9 +1026,49 @@ class Engine:
                                       self.diag_grid, self.pitch_axis,
                                       self.pitch_bins, axes)
         eval_args = self._make_eval_args(r_loc)
+        rep_in_mesh = rp.rep_in_mesh()
+        replica_axis = rp.replica_axis
+
+        def etot_of(c: DomainCarry):
+            """Global total energy, per local replica ((r_loc,) or ())."""
+            st = c.state
+            occ = st.types >= 0
+            m = masses[jnp.maximum(st.types, 0)]
+            ke = jnp.where(occ[..., None], m[..., None] * st.vel ** 2, 0.0)
+            ke = 0.5 * units.MVV2E * (
+                jnp.sum(ke.reshape(r_loc, -1), axis=1) if rep
+                else jnp.sum(ke))
+            return c.ff.energy + psum_axes(ke)
+
+        def health_of(c: DomainCarry, etot0):
+            st, ff = c.state, c.ff
+            occ = st.types >= 0
+            mag = magnetic[jnp.maximum(st.types, 0)] & occ
+            drift = etot_of(c) - etot0
+            if rep:
+                drift = drift[jnp.argmax(jnp.abs(drift))]
+                if rep_in_mesh:
+                    # signed max-magnitude across the replica mesh axis:
+                    # mask losers to -inf, pmax recovers the winner's sign
+                    a = jax.lax.pmax(jnp.abs(drift), replica_axis)
+                    drift = jax.lax.pmax(
+                        jnp.where(jnp.abs(drift) == a, drift, -jnp.inf),
+                        replica_axis)
+            k_cap = st.types.shape[-1]
+            return {
+                "e_drift": drift,
+                "spin_dev": pmax_all(spin_norm_dev(st.spin, mag)),
+                "nonfinite": psum_all(
+                    nonfinite_count(st.pos, ff.force, st.spin)),
+                "nbr_occ": pmax_all(occupancy_fraction(c.nbh.mask)),
+                "cell_occ": pmax_all(
+                    jnp.max(jnp.sum(occ.astype(jnp.int32), axis=-1))
+                    / float(k_cap)),
+            }
 
         def local_chunk(carry: DomainCarry, key, targ, farg, n: int, emit):
             t0 = carry.state.step.astype(jnp.float32) * dt
+            etot0 = etot_of(carry)
             vobserve = vm(observe, in_axes=(state_ax, 0))
             obs_zero = (None if emit is None else jax.tree_util.tree_map(
                 lambda s: jnp.zeros(s.shape, s.dtype),
@@ -958,9 +1091,7 @@ class Engine:
                         c.state, c.aid, field)
                     moved = jax.lax.psum(jnp.sum(moved),
                                          mesh.axis_names).astype(jnp.int32)
-                    dropped = jax.lax.psum(jnp.sum(dropped),
-                                           mesh.axis_names
-                                           ).astype(jnp.int32)
+                    dropped = dev_counts(jnp.sum(dropped))
                     return DomainCarry(st, ff, nbh, aid, r0, c.trip,
                                        c.n_rebuilds + 1,
                                        c.n_migrated + moved,
@@ -969,8 +1100,9 @@ class Engine:
                 # ``trip`` was reduced at the end of the previous step
                 # (positions final after its drift): no extra collective
                 c = jax.lax.cond(c.trip, do_rebuild, lambda c: c, c)
-                st, ff, nbh = vstep(c.state, c.ff, c.nbh, dev_key(k),
-                                    temp, field)
+                with phase("integrate"):
+                    st, ff, nbh = vstep(c.state, c.ff, c.nbh, dev_key(k),
+                                        temp, field)
                 # ONE fused scalar reduction per step: the global energy
                 # (device-local out of compute) + the next step's skin test
                 trip_loc = vtrip(st, c.r0)
@@ -993,8 +1125,9 @@ class Engine:
                                   lambda: obs_zero)
                 return c, ys
 
-            return _scan_chunk(body, carry, key, n, emit,
-                               lambda c: vobserve(c.state, c.ff))
+            carry, obs = _scan_chunk(body, carry, key, n, emit,
+                                     lambda c: vobserve(c.state, c.ff))
+            return carry, obs, health_of(carry, etot0)
 
         carry_spec, cell_spec, rsc = rp.specs(self._spin_in_gather)
         key_spec = P()
@@ -1038,7 +1171,10 @@ class Engine:
             else:
                 body = lambda c, k: fn(c, k, None, None)
                 ins = (carry_spec, key_spec)
-            out_specs = (carry_spec, obs_specs(emit))
+            health_spec = {name: P() for name in
+                           ("e_drift", "spin_dev", "nonfinite", "nbr_occ",
+                            "cell_occ")}
+            out_specs = (carry_spec, obs_specs(emit), health_spec)
             return jax.jit(shard_map_compat(body, mesh, in_specs=ins,
                                             out_specs=out_specs))
 
@@ -1095,8 +1231,7 @@ class Engine:
                 st, ff, nbh, aid, r0, moved, dropped = one(state, aid,
                                                            field)
             z = jnp.asarray(0, jnp.int32)
-            dropped = jax.lax.psum(jnp.sum(dropped), mesh.axis_names
-                                   ).astype(jnp.int32)
+            dropped = self._dev_counts(jnp.sum(dropped))
             # compute() returns device-local energy; globalize it here
             # (in-chunk this rides the per-step fused scalar reduction)
             energy = ff.energy
@@ -1124,19 +1259,28 @@ class Engine:
             return jax.device_put(x, NamedSharding(mesh, spec))
 
         args = [put(a, s) for a, s in zip(args, in_specs)]
-        self._carry = init(*args)
+        with self._halo:
+            self._carry = init(*args)
         self._check_dropped()
         self._sync_observation()
 
-    def _check_dropped(self):
-        dropped = int(self._carry.n_dropped)
+    def _check_dropped(self, chunk_index: int | None = None):
+        """Raise a structured :class:`HealthError` when migration dropped
+        atoms, reporting per-device counts and the last-good checkpoint."""
+        vec = np.atleast_1d(np.asarray(self._carry.n_dropped))
+        dropped = int(vec.sum())
         if dropped:
-            raise RuntimeError(
+            per_dev = {int(i): int(v) for i, v in enumerate(vec) if v}
+            raise HealthError(
                 f"domain cell overflow: {dropped} atom(s) dropped at "
                 f"migration (cell capacity {self._rplan.dspec.capacity} "
                 "exceeded or an atom jumped more than one cell between "
                 "rebuilds); increase cell_capacity or shrink the "
-                "skin/timestep")
+                f"skin/timestep; per-device drop counts: {per_dev}",
+                step=self._step_now(), chunk_index=chunk_index,
+                signals={"dropped": dropped,
+                         "dropped_per_device": per_dev},
+                checkpoint_path=self._last_ckpt)
 
     @property
     def n_migrated(self) -> int:
@@ -1192,7 +1336,7 @@ class Engine:
             temperature=_UNSET, field=_UNSET,
             callback: Callable[["Engine"], None] | None = None,
             checkpoint_dir: str | None = None, checkpoint_every: int = 1,
-            resume: bool = False) -> SpinLatticeState:
+            resume: bool = False, telemetry=None) -> SpinLatticeState:
         """Advance ``n_steps`` through the plan's compiled chunk.
 
         ``temperature``/``field`` override the engine-level schedule axis
@@ -1204,7 +1348,19 @@ class Engine:
         resumed trajectory bitwise identical to an uninterrupted one.
         ``callback`` (flat/replica plans) receives the engine after each
         chunk with observation state synced.
+
+        ``telemetry`` (a :class:`repro.telemetry.Telemetry`, or a runlog
+        path as shorthand) turns on run observability: per-chunk wall
+        times / steps/s / compile deltas / halo bytes go to the JSONL
+        runlog, health signals are checked against the config's
+        thresholds at every chunk boundary (raising a structured
+        :class:`~repro.telemetry.monitor.HealthError` that names the
+        last-good checkpoint), and an optional ``profile_dir`` dumps a
+        perfetto trace.  Health signals are computed on every run either
+        way and land in ``self.trace.health``; only the checking and
+        persistence are opt-in.
         """
+        tel = as_telemetry(telemetry)
         targ = self._norm_arg(
             self.temperature if temperature is _UNSET else temperature,
             vec=False)
@@ -1226,38 +1382,97 @@ class Engine:
             self._replica_restart_if_swapped(farg)
             targ, farg = self._replica_put(targ), self._replica_put(farg)
 
+        session = None
+        if tel is not None:
+            session = TelemetrySession(
+                tel, ledger=self._halo,
+                run_info=self._run_info(n_steps, chunk))
+        try:
+            with maybe_trace(tel.profile_dir if tel is not None else None):
+                self._run_loop(n_steps, key, chunk, targ, farg, callback,
+                               checkpoint_dir, checkpoint_every, tel,
+                               session)
+        except BaseException as exc:
+            if session is not None:
+                session.finish(status="failed", error=str(exc))
+            raise
+        if session is not None:
+            session.finish(status="ok")
+        return self.state
+
+    def _run_loop(self, n_steps, key, chunk, targ, farg, callback,
+                  checkpoint_dir, checkpoint_every, tel, session) -> None:
         carry = self._carry
         t0 = float(self._step_now()) * self.cfg.dt
-        rows, times = [], []
+        rows, times, hrows = [], [], []
         done = 0
         chunks_done = 0
+        reb_prev = int(np.asarray(carry.n_rebuilds))
+        mig_prev = (int(np.asarray(carry.n_migrated))
+                    if isinstance(self.plan, Sharded) else 0)
         while done < n_steps:
             n = min(chunk, n_steps - done)
             emit = self._emit_for(n)
             key, sub = jax.random.split(key)
             if isinstance(self.plan, Replicated):
                 sub = self._replica_put(sub)
-            if isinstance(self.plan, Sharded):
-                fn = self._chunk_for(n, emit, targ, farg)
-                args = [carry, sub]
-                if targ is not None:
-                    args.append(targ)
-                if farg is not None:
-                    args.append(farg)
-                carry, obs = fn(*args)
-            else:
-                carry, obs = self._chunk_fn(carry, sub, targ, farg, n, emit)
+            t_chunk = time.perf_counter()
+            with self._halo:     # run-scoped ledger catches chunk traces
+                if isinstance(self.plan, Sharded):
+                    fn = self._chunk_for(n, emit, targ, farg)
+                    args = [carry, sub]
+                    if targ is not None:
+                        args.append(targ)
+                    if farg is not None:
+                        args.append(farg)
+                    carry, obs, health = fn(*args)
+                else:
+                    carry, obs, health = self._chunk_fn(carry, sub, targ,
+                                                        farg, n, emit)
             if emit is None:
                 times.append(t0 + (done + n) * self.cfg.dt)
             else:
                 times.extend(t0 + (done + i + 1) * self.cfg.dt
                              for i in emit)
             rows.append(jax.tree_util.tree_map(np.asarray, obs))
+            h_host = {k: np.asarray(v).item() for k, v in health.items()}
+            hrows.append(h_host)
+            wall = time.perf_counter() - t_chunk  # np.asarray blocked above
             done += n
             chunks_done += 1
             self._carry = carry
-            if isinstance(self.plan, Sharded):
-                self._check_dropped()
+
+            # health gate BEFORE checkpointing: a failing chunk must not
+            # become the newest checkpoint (abort-and-resume contract)
+            verdict, err = "ok", None
+            try:
+                if isinstance(self.plan, Sharded):
+                    self._check_dropped(chunk_index=chunks_done - 1)
+                if tel is not None and tel.health is not None:
+                    verdict = check_chunk(
+                        h_host, tel.health, step=self._step_now(),
+                        chunk_index=chunks_done - 1,
+                        checkpoint_path=self._last_ckpt)
+            except HealthError as e:
+                verdict, err = "fail", e
+            if session is not None:
+                reb = int(np.asarray(carry.n_rebuilds))
+                counters = {"rebuilds": reb - reb_prev}
+                reb_prev = reb
+                if isinstance(self.plan, Sharded):
+                    mig = int(np.asarray(carry.n_migrated))
+                    counters["migrations"] = mig - mig_prev
+                    mig_prev = mig
+                session.chunk(
+                    steps=n, step=self._step_now(),
+                    time_ps=t0 + done * self.cfg.dt, wall_s=wall,
+                    health=h_host, verdict=verdict,
+                    chunk_cache=self._chunk_cache_size(),
+                    counters=counters,
+                    error=None if err is None else str(err))
+            if err is not None:
+                self._fold_trace(rows, times, hrows)
+                raise err
             if checkpoint_dir is not None and (
                     chunks_done % checkpoint_every == 0 or done >= n_steps):
                 self.save(checkpoint_dir, key=key)
@@ -1279,13 +1494,49 @@ class Engine:
                 carry = self._carry
         self._carry = carry
         self._sync_observation()
-        if rows:
-            cat = np.stack if self.obs_every is None else np.concatenate
-            self.trace = EngineTrace(
-                time=np.asarray(times),
-                values={k: cat([r[k] for r in rows])
-                        for k in self.observables})
-        return self.state
+        self._fold_trace(rows, times, hrows)
+
+    def _fold_trace(self, rows, times, hrows) -> None:
+        if not rows:
+            return
+        cat = np.stack if self.obs_every is None else np.concatenate
+        self.trace = EngineTrace(
+            time=np.asarray(times),
+            values={k: cat([r[k] for r in rows])
+                    for k in self.observables},
+            health={k: np.asarray([h[k] for h in hrows])
+                    for k in hrows[0]})
+
+    def _chunk_cache_size(self) -> int:
+        """Compiled chunk-variant count (the compile watchdog's partner:
+        a steady-state run holds this at 1 per (n, emit) signature)."""
+        if isinstance(self.plan, Sharded):
+            return len(self._chunk_cache)
+        try:
+            return self._chunk_fn._cache_size()
+        except Exception:
+            return -1
+
+    def _run_info(self, n_steps: int, chunk: int) -> dict:
+        """Static run descriptor for the runlog header."""
+        if isinstance(self.plan, Sharded):
+            n_atoms = self._n_atoms
+        elif isinstance(self.plan, Replicated):
+            n_atoms = self.state.pos.shape[1]
+        else:
+            n_atoms = self.state.pos.shape[0]
+        info = {"plan": type(self.plan).__name__, "n_steps": n_steps,
+                "chunk": chunk, "n_atoms": int(n_atoms),
+                "dt_ps": float(self.cfg.dt), "replicas": self.replicas,
+                "observables": list(self.observables),
+                "potential": type(self.potential).__name__}
+        if isinstance(self.plan, Sharded):
+            rp = self._rplan
+            info["mesh"] = {a: int(rp.mesh.shape[a])
+                            for a in rp.mesh.axis_names}
+            info["cells"] = list(rp.dspec.cells)
+            info["cell_capacity"] = int(rp.dspec.capacity)
+        return info
 
     # ------------------------------------------------------------------
     def save(self, directory: str, key: jax.Array, keep: int = 3) -> str:
@@ -1300,8 +1551,10 @@ class Engine:
         unrelated RNG stream.
         """
         from repro.ckpt.checkpoint import save_md
-        return save_md(directory, self._step_now(), self._carry, key,
+        path = save_md(directory, self._step_now(), self._carry, key,
                        keep=keep)
+        self._last_ckpt = path
+        return path
 
     def restore(self, directory: str, step: int | None = None) -> jax.Array:
         """Restore the hot carry from a checkpoint; returns the saved run

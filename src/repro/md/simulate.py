@@ -141,6 +141,13 @@ class Simulation:
             return self._engine.n_rebuilds
         return self._legacy_rebuilds
 
+    @property
+    def halo_ledger(self):
+        """Run-scoped halo ledger (empty: the flat plan moves no halos)."""
+        if not self._fused:
+            raise AttributeError("halo_ledger requires the fused path")
+        return self._engine.halo_ledger
+
     # ==================================================================
     # legacy (pre-fusion) path: host-side skin test, recompile per rebuild
     # ==================================================================
@@ -184,7 +191,8 @@ class Simulation:
 
     # ==================================================================
     def run(self, n_steps: int, key: jax.Array, chunk: int = 20,
-            callback: Callable[[SpinLatticeState, ForceField], None] | None = None):
+            callback: Callable[[SpinLatticeState, ForceField], None] | None = None,
+            telemetry=None):
         """Advance ``n_steps``; rebuilds the neighbor table when the skin
         test trips (in-scan on the fused path). Returns the final state.
         On the fused path, per-chunk diagnostics land in ``self.trace``
@@ -193,8 +201,13 @@ class Simulation:
         A ``callback`` receives the (observation-order) state and forces
         after every chunk; note this forces a host sync per chunk, which the
         fused path otherwise avoids entirely.
+
+        ``telemetry`` (a :class:`repro.telemetry.Telemetry` or a runlog
+        path) is forwarded to ``Engine.run`` on the fused path.
         """
         if not self._fused:
+            if telemetry is not None:
+                raise ValueError("telemetry requires the fused path")
             return self._run_legacy(n_steps, key, chunk, callback)
 
         self._engine.state = self.state   # honor a caller-swapped state
@@ -205,7 +218,7 @@ class Simulation:
                 callback(self.state, self._ff)
                 engine.state = self.state  # callback may perturb the state
         self._engine.run(n_steps, key, chunk=chunk, field=self.field,
-                         callback=cb)
+                         callback=cb, telemetry=telemetry)
         self._pull()
         tr = self._engine.trace
         if tr is not None:
@@ -347,9 +360,14 @@ class SimulationSharded:
     def energy(self):
         return self._engine.energy
 
+    @property
+    def halo_ledger(self):
+        """This run's halo exchange ledger (see ``Engine.halo_ledger``)."""
+        return self._engine.halo_ledger
+
     # ------------------------------------------------------------------
     def run(self, n_steps: int, key: jax.Array, chunk: int = 20,
-            temperature=None):
+            temperature=None, telemetry=None):
         """Advance ``n_steps`` through the sharded fused loop.
 
         ``temperature`` (scalar K, (R,) with replicas, or a Schedule) and
@@ -357,10 +375,13 @@ class SimulationSharded:
         arguments of the compiled chunk - schedules are evaluated per step
         INSIDE the scan.  Per-chunk diagnostics land in ``self.trace``; a
         cell-capacity overflow raises at the chunk boundary where it is
-        detected.  Returns the final (original-atom-order) state.
+        detected.  ``telemetry`` (a :class:`repro.telemetry.Telemetry` or
+        a runlog path) is forwarded to ``Engine.run``.  Returns the final
+        (original-atom-order) state.
         """
         self._engine.run(n_steps, key, chunk=chunk,
-                         temperature=temperature, field=self.field)
+                         temperature=temperature, field=self.field,
+                         telemetry=telemetry)
         self._pull()
         tr = self._engine.trace
         if tr is not None:

@@ -30,11 +30,13 @@ Three layers of API, used by the sharded fused MD loop
   exchange produces the same collective automatically.
 
 Instrumentation: every exchange/fold records (at **trace time**) its tag,
-call count, and per-device message bytes into the module-level
-:data:`TRACE`.  Because the fused MD chunk traces its step body exactly
-once, the recorded counts ARE the per-step exchange counts - the weak-
-scaling benchmark asserts "one position halo per drift" from this trace
-(see ``benchmarks/scaling.py``).
+call count, and per-device message bytes into every *active* run-scoped
+:class:`HaloTrace` ledger (installed as a context manager - the Engine
+opens one per run) and, for backwards compatibility, into the deprecated
+process-global :data:`TRACE`.  Because the fused MD chunk traces its step
+body exactly once, the recorded counts ARE the per-step exchange counts -
+the weak-scaling benchmark asserts "one position halo per drift" from this
+trace (see ``benchmarks/scaling.py``).
 """
 from __future__ import annotations
 
@@ -55,6 +57,12 @@ def _perm(n: int, shift: int):
 # trace-time instrumentation
 # ---------------------------------------------------------------------------
 
+# Per-step steady-state exchange tags: one occurrence each per traced step
+# body (rebuild/migrate tags live inside a lax.cond and fire on rebuild
+# steps only, so they are excluded from the per-step wire estimate).
+STEP_TAGS = ("drift-pos", "spin", "adjoint", "qfp")
+
+
 @dataclasses.dataclass
 class HaloTrace:
     """Trace-time exchange ledger: tag -> (#exchange calls, message bytes).
@@ -63,6 +71,14 @@ class HaloTrace:
     a fused chunk (step body traced once) ``counts[tag]`` is the number of
     logical exchanges *per step* and ``bytes[tag]`` the per-device bytes
     each such exchange moves per step.
+
+    A ledger is *run-scoped* when installed as a context manager::
+
+        with ledger:
+            carry, obs = chunk_fn(...)   # traces record into ``ledger``
+
+    Any number of ledgers may be active (they nest); recording tees into
+    all of them plus the deprecated process-global :data:`TRACE`.
     """
 
     counts: dict = dataclasses.field(default_factory=dict)
@@ -80,8 +96,60 @@ class HaloTrace:
         self.counts[tag] = self.counts.get(tag, 0) + 1
         self.bytes[tag] = self.bytes.get(tag, 0) + n_bytes
 
+    # -- run-scoped activation -----------------------------------------
+    def __enter__(self) -> "HaloTrace":
+        _ACTIVE.append(self)
+        return self
 
+    def __exit__(self, *exc) -> None:
+        # remove the most recent activation of *this* ledger (re-entrant
+        # safe: the engine opens the same ledger around setup and chunks)
+        for i in range(len(_ACTIVE) - 1, -1, -1):
+            if _ACTIVE[i] is self:
+                del _ACTIVE[i]
+                break
+
+    # -- derived views -------------------------------------------------
+    def per_exchange_bytes(self) -> dict:
+        """tag -> per-device bytes one occurrence of the exchange moves."""
+        return {t: self.bytes[t] // max(self.counts.get(t, 1), 1)
+                for t in self.bytes}
+
+    def per_step_bytes(self) -> int:
+        """Per-device halo bytes per steady-state step: one occurrence of
+        each :data:`STEP_TAGS` exchange (rebuild-path tags excluded)."""
+        per = self.per_exchange_bytes()
+        return int(sum(per.get(t, 0) for t in STEP_TAGS))
+
+    def snapshot(self) -> dict:
+        """JSON-friendly copy: counts, bytes, and the per-step estimate."""
+        return {"counts": dict(self.counts), "bytes": dict(self.bytes),
+                "bytes_per_step": self.per_step_bytes()}
+
+
+#: Deprecated process-global ledger.  It accumulates across every run in
+#: the process and is never reset automatically - per-run accounting must
+#: use a run-scoped ledger (``Engine.halo_ledger``).  Kept as a tee target
+#: so existing callers of ``TRACE.reset()`` / ``TRACE.counts`` still work.
 TRACE = HaloTrace()
+
+_ACTIVE: list[HaloTrace] = []
+
+
+def _record(tag: str, n_bytes: int) -> None:
+    """Tee a trace-time exchange record into the global + active ledgers."""
+    TRACE.record(tag, n_bytes)
+    for ledger in _ACTIVE:
+        ledger.record(tag, n_bytes)
+
+
+def _axis_size(name: str) -> int:
+    """Mesh axis width for allgather volume: innermost active ledger wins,
+    then the global ledger, then the minimal sharded width of 2."""
+    for ledger in reversed(_ACTIVE):
+        if name in ledger.axis_sizes:
+            return ledger.axis_sizes[name]
+    return TRACE.axis_sizes.get(name, 2)
 
 
 def _message_bytes(x: jax.Array, dims, axis_names, width: int,
@@ -100,7 +168,7 @@ def _message_bytes(x: jax.Array, dims, axis_names, width: int,
             face = int(np.prod([s for i, s in enumerate(shape) if i != d]))
             layers = 2 * width
             if allgather:
-                n = TRACE.axis_sizes.get(name, 2)
+                n = _axis_size(name)
                 layers = 2 * width * max(n - 1, 1)
             total += layers * face * x.dtype.itemsize
         shape[d] += 2 * width
@@ -165,10 +233,10 @@ def exchange_halo(x: jax.Array, axis_names: tuple[str | None, str | None,
                   allgather: bool = False) -> jax.Array:
     """Extend a (cx, cy, cz, ...) local block with ghosts on all 3 dims."""
     if tag is not None:
-        TRACE.record(tag, _message_bytes(x, dims, axis_names, width,
-                                         allgather))
-    for d, name in zip(dims, axis_names):
-        x = exchange_axis(x, d, name, width, allgather)
+        _record(tag, _message_bytes(x, dims, axis_names, width, allgather))
+    with jax.named_scope(f"repro.halo.{tag or 'exchange'}"):
+        for d, name in zip(dims, axis_names):
+            x = exchange_axis(x, d, name, width, allgather)
     return x
 
 
@@ -292,10 +360,10 @@ def fold_halo(x: jax.Array, axis_names: tuple[str | None, str | None,
     edge/corner contributions propagate exactly as their forward ghosts did.
     """
     if tag is not None:
-        TRACE.record(tag, _message_bytes(x, dims, axis_names, width,
-                                         allgather))
-    for d, name in reversed(list(zip(dims, axis_names))):
-        x = fold_axis(x, d, name, width, allgather)
+        _record(tag, _message_bytes(x, dims, axis_names, width, allgather))
+    with jax.named_scope(f"repro.halo.{tag or 'fold'}"):
+        for d, name in reversed(list(zip(dims, axis_names))):
+            x = fold_axis(x, d, name, width, allgather)
     return x
 
 

@@ -250,11 +250,16 @@ class ResolvedSharded:
                             n_dropped=P())
         return carry, cell, rsc
 
-    def register_halo_sizes(self):
-        """Teach the trace-time halo ledger the concrete axis widths."""
+    def register_halo_sizes(self, ledger=None):
+        """Teach the trace-time halo ledger(s) the concrete axis widths.
+
+        Updates the deprecated process-global ``TRACE`` and, when given,
+        the run-scoped ``ledger`` (the Engine passes its own)."""
         from repro.parallel.halo import TRACE
-        TRACE.axis_sizes.update(
-            {a: int(self.mesh.shape[a]) for a in self.spatial_axes})
+        sizes = {a: int(self.mesh.shape[a]) for a in self.spatial_axes}
+        TRACE.axis_sizes.update(sizes)
+        if ledger is not None:
+            ledger.axis_sizes.update(sizes)
 
 
 def as_plan(plan, replicas: int = 0):

@@ -1,0 +1,139 @@
+"""In-scan health monitoring: signals, thresholds, and structured abort.
+
+The Engine computes a small dict of *health signals* inside every compiled
+chunk (psum/pmax-reduced to replicated scalars on the sharded plan, so the
+host reads one number per signal regardless of layout):
+
+    e_drift    total energy (potential + kinetic) at chunk end minus chunk
+               start [eV]; signed on single-trajectory plans, the
+               max-magnitude replica's value on replica plans
+    spin_dev   max | |s| - 1 | over occupied magnetic atoms
+    nonfinite  count of non-finite entries across positions, forces, spins
+    nbr_occ    max neighbor-slot occupancy fraction (1.0 = a full row:
+               no headroom, the next rebuild may silently truncate)
+    cell_occ   (sharded plan only) max cell occupancy fraction; 1.0 means
+               the next migration can overflow and drop atoms
+
+Signals ride back with the chunk outputs and are folded into
+``EngineTrace.health`` (one row per chunk).  When ``Engine.run`` is given
+a telemetry config, :func:`check_chunk` compares them against
+:class:`HealthConfig` thresholds at each chunk boundary and raises a
+structured :class:`HealthError` carrying the last-good checkpoint path
+(written by ``Engine.save``) so a driver can abort-and-resume instead of
+integrating garbage.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+class HealthError(RuntimeError):
+    """A health check failed at a chunk boundary.
+
+    Subclasses ``RuntimeError`` so pre-telemetry callers catching the bare
+    migration-overflow raise keep working.  Attributes:
+
+    - ``step``: global step index at the failing chunk boundary
+    - ``chunk_index``: 0-based index of the offending chunk (-1 = setup)
+    - ``signals``: host-side signal dict that tripped the check
+    - ``checkpoint_path``: last-good checkpoint directory written by
+      ``Engine.save`` (None when the run was not checkpointing)
+    """
+
+    def __init__(self, message: str, *, step: int | None = None,
+                 chunk_index: int | None = None, signals: dict | None = None,
+                 checkpoint_path: str | None = None):
+        if checkpoint_path is not None:
+            message += f" [last-good checkpoint: {checkpoint_path}]"
+        super().__init__(message)
+        self.step = step
+        self.chunk_index = chunk_index
+        self.signals = dict(signals or {})
+        self.checkpoint_path = checkpoint_path
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthConfig:
+    """Chunk-boundary thresholds; ``None`` disables a check.
+
+    ``max_*`` violations and non-finite values raise :class:`HealthError`;
+    occupancy past ``warn_occupancy`` only downgrades the chunk verdict to
+    "warn" (headroom exhaustion is a risk, not yet an error).
+    """
+
+    fail_on_nonfinite: bool = True
+    max_energy_drift: float | None = None   # |e_drift| bound [eV]
+    max_spin_dev: float | None = None       # | |s|-1 | bound
+    warn_occupancy: float = 1.0             # nbr/cell occupancy warn level
+
+
+# ---------------------------------------------------------------------------
+# pure-jnp signal helpers (layout-agnostic; callers reduce across devices)
+# ---------------------------------------------------------------------------
+
+def spin_norm_dev(spin, mask):
+    """Max ``| |s| - 1 |`` over slots where ``mask`` is True.
+
+    ``spin``: (..., 3); ``mask``: broadcastable to ``spin.shape[:-1]``.
+    Returns 0 when no slot is masked in (empty local block)."""
+    import jax.numpy as jnp
+
+    norm = jnp.linalg.norm(spin, axis=-1)
+    dev = jnp.abs(norm - 1.0)
+    return jnp.max(jnp.where(mask, dev, 0.0))
+
+
+def nonfinite_count(*arrays):
+    """Total count of non-finite entries across ``arrays`` (int32)."""
+    import jax.numpy as jnp
+
+    total = jnp.asarray(0, jnp.int32)
+    for a in arrays:
+        total = total + jnp.sum(~jnp.isfinite(a)).astype(jnp.int32)
+    return total
+
+
+def occupancy_fraction(mask, axis=-1):
+    """Max occupied fraction of a padded slot axis (neighbor rows, cells)."""
+    import jax.numpy as jnp
+
+    cap = mask.shape[axis]
+    occ = jnp.sum(mask.astype(jnp.int32), axis=axis)
+    return jnp.max(occ) / float(max(cap, 1))
+
+
+# ---------------------------------------------------------------------------
+# host-side chunk-boundary check
+# ---------------------------------------------------------------------------
+
+def check_chunk(signals: dict, cfg: HealthConfig, *, step: int,
+                chunk_index: int,
+                checkpoint_path: str | None = None) -> str:
+    """Return the chunk verdict ("ok" | "warn") or raise :class:`HealthError`.
+
+    ``signals`` are host floats/ints (the Engine converts device scalars).
+    """
+    fails = []
+    if cfg.fail_on_nonfinite and signals.get("nonfinite", 0) > 0:
+        fails.append(f"{int(signals['nonfinite'])} non-finite value(s) in "
+                     "positions/forces/spins")
+    drift = signals.get("e_drift")
+    if (cfg.max_energy_drift is not None and drift is not None
+            and abs(drift) > cfg.max_energy_drift):
+        fails.append(f"energy drift {drift:+.3e} eV exceeds "
+                     f"{cfg.max_energy_drift:.3e}")
+    sdev = signals.get("spin_dev")
+    if (cfg.max_spin_dev is not None and sdev is not None
+            and sdev > cfg.max_spin_dev):
+        fails.append(f"spin-norm deviation {sdev:.3e} exceeds "
+                     f"{cfg.max_spin_dev:.3e}")
+    if fails:
+        raise HealthError(
+            f"health check failed at step {step} (chunk {chunk_index}): "
+            + "; ".join(fails),
+            step=step, chunk_index=chunk_index, signals=signals,
+            checkpoint_path=checkpoint_path)
+    for key in ("nbr_occ", "cell_occ"):
+        if signals.get(key, 0.0) >= cfg.warn_occupancy:
+            return "warn"
+    return "ok"

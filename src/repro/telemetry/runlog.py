@@ -1,0 +1,95 @@
+"""Per-run JSONL event stream: the machine-readable record of a run.
+
+One runlog = one file = one run.  Line 1 is a ``run_start`` header
+(provenance-stamped: jax version, backend, device count, timestamp - the
+same stamp ``benchmarks/common.write_json`` attaches), followed by one
+``chunk`` record per engine chunk (steps/s, halo bytes, compile delta,
+health signals + verdict), and a final ``run_end`` with totals.  Writes
+are line-buffered and flushed per record, so a killed run keeps every
+completed chunk - the whole point of a flight recorder.
+
+``launch/report.py`` renders human-readable reports from runlogs, and the
+ROADMAP's planner/serving layers consume them as training data (steps/s,
+bytes/step, memory per configuration).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+
+SCHEMA_VERSION = 1
+
+
+def provenance() -> dict:
+    """Environment stamp attached to the ``run_start`` header."""
+    import jax
+
+    return {
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "host_cores": os.cpu_count(),
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+    }
+
+
+def _jsonable(x):
+    """Coerce numpy/jax scalars and containers to plain JSON types."""
+    if isinstance(x, dict):
+        return {str(k): _jsonable(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_jsonable(v) for v in x]
+    if hasattr(x, "item") and getattr(x, "ndim", None) == 0:
+        x = x.item()
+    if hasattr(x, "tolist"):
+        return _jsonable(x.tolist())
+    if isinstance(x, float):
+        return x if x == x and abs(x) != float("inf") else repr(x)
+    return x
+
+
+class RunLog:
+    """Append-only JSONL writer for one run."""
+
+    def __init__(self, path: str | os.PathLike):
+        self.path = str(path)
+        parent = os.path.dirname(self.path)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
+        self._fh = open(self.path, "w")
+        self._closed = False
+
+    def write(self, event: str, **fields) -> dict:
+        record = {"event": event, "t_wall": time.time(),
+                  **_jsonable(fields)}
+        self._fh.write(json.dumps(record) + "\n")
+        self._fh.flush()
+        return record
+
+    def run_start(self, **fields) -> dict:
+        return self.write("run_start", schema=SCHEMA_VERSION,
+                          provenance=provenance(), **fields)
+
+    def close(self) -> None:
+        if not self._closed:
+            self._fh.close()
+            self._closed = True
+
+    def __enter__(self) -> "RunLog":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def read_runlog(path: str | os.PathLike) -> list[dict]:
+    """Parse a runlog back into a list of record dicts."""
+    records = []
+    with open(path) as fh:
+        for line in fh:
+            line = line.strip()
+            if line:
+                records.append(json.loads(line))
+    return records
