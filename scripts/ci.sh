@@ -22,7 +22,14 @@
 #                                        warmup, energy drift + health
 #                                        verdict are present, and
 #                                        `python -m repro.launch.report`
-#                                        renders it without error.
+#                                        renders it without error.  Also
+#                                        the resilience smoke
+#                                        (scripts/resilience_smoke.py):
+#                                        a supervised seeded-NaN
+#                                        rollback-retry asserted bitwise
+#                                        with zero retry recompiles, and
+#                                        a SIGKILL kill-and-resume cycle
+#                                        (<= 1 chunk lost, bitwise).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -30,6 +37,8 @@ if [[ "${1:-}" == "--smoke" ]]; then
   env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
       XLA_FLAGS="--xla_force_host_platform_device_count=2" \
       python scripts/engine_smoke.py
+  env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+      python scripts/resilience_smoke.py
   exec env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" BENCH_SMOKE=1 \
       python -m benchmarks.run --smoke
 fi

@@ -1,0 +1,147 @@
+"""CI smoke: supervised fault recovery + kill-and-resume.
+
+Run from scripts/ci.sh --smoke:
+
+  PYTHONPATH=src python scripts/resilience_smoke.py
+
+Two end-to-end recovery paths on the flat plan (small enough for CI, and
+the supervisor logic is plan-independent - the sharded variants live in
+tests/test_resilience.py):
+
+1. supervised retry: a seeded NaN fault is injected mid-run, the health
+   gate raises, the supervisor rolls back to the newest checkpoint and
+   retries; the recovered trajectory must be BITWISE identical to an
+   uninterrupted run, the retry must reuse the compiled chunk (0 compiles
+   in every chunk record after the rollback), and the runlog must carry
+   the structured fault_injected / rollback / retry / recovered records
+   which ``python -m repro.launch.report`` renders;
+
+2. kill-and-resume: a crash fault SIGKILLs a child run mid-trajectory;
+   the parent asserts the kill, restores the newest checkpoint (at most
+   one chunk of work lost), and the resumed trajectory is bitwise too.
+"""
+import json
+import os
+import signal
+import subprocess
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))), "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core.hamiltonian import HeisenbergDMIModel  # noqa: E402
+from repro.ckpt.checkpoint import latest_step  # noqa: E402
+from repro.md.engine import Engine  # noqa: E402
+from repro.md.integrator import IntegratorConfig  # noqa: E402
+from repro.md.lattice import simple_cubic  # noqa: E402
+from repro.md.state import init_state  # noqa: E402
+from repro.resilience import (Fault, FaultPlan, Supervisor,  # noqa: E402
+                              SupervisorConfig, install_faults)
+from repro.telemetry import (HealthConfig, Telemetry,  # noqa: E402
+                             read_runlog)
+
+
+def make_engine():
+    lat = simple_cubic()
+    st = init_state(lat, (4, 4, 4), temperature=300.0, spin_init="helix_x",
+                    key=jax.random.PRNGKey(3))
+    return Engine(potential=HeisenbergDMIModel(d0=0.008),
+                  cfg=IntegratorConfig(dt=2e-3, spin_alpha=0.05,
+                                       lattice_gamma=1.0),
+                  state=st, masses=jnp.asarray(lat.masses),
+                  magnetic=jnp.asarray(lat.moments) > 0, cutoff=5.0,
+                  capacity=8, skin=0.2,
+                  observables=("energy", "magnetization"))
+
+
+def assert_bitwise(a, b, what):
+    for leaf in ("pos", "vel", "spin"):
+        x, y = np.asarray(getattr(a, leaf)), np.asarray(getattr(b, leaf))
+        assert np.array_equal(x, y), \
+            f"{what}: {leaf} differs (max {np.abs(x - y).max()})"
+
+
+def main():
+    tmp = tempfile.mkdtemp(prefix="resilience_smoke_")
+    key = jax.random.PRNGKey(0)
+
+    # reference: uninterrupted run
+    ref = make_engine()
+    ref.run(40, key, chunk=10)
+
+    # --- 1. supervised NaN retry --------------------------------------
+    log = os.path.join(tmp, "run.jsonl")
+    eng = make_engine()
+    install_faults(eng, FaultPlan(faults=(
+        Fault(kind="nan", step=25, leaf="force"),)), runlog=log)
+    sup = Supervisor(SupervisorConfig(max_retries=2))
+    out = sup.run(eng, 40, key, chunk=10,
+                  checkpoint_dir=os.path.join(tmp, "ck"),
+                  telemetry=Telemetry(runlog=log, health=HealthConfig()))
+    events = [e["event"] for e in sup.events]
+    assert events == ["rollback", "retry", "recovered"], events
+    assert_bitwise(ref.state, out, "supervised retry")
+
+    records = read_runlog(log)
+    logged = [r["event"] for r in records]
+    for ev in ("fault_injected", "rollback", "retry", "recovered"):
+        assert ev in logged, logged
+    first_rb = next(i for i, r in enumerate(records)
+                    if r["event"] == "rollback")
+    retry_compiles = [r["compiles"] for r in records[first_rb:]
+                      if r["event"] == "chunk"]
+    assert retry_compiles and all(c == 0 for c in retry_compiles), \
+        f"retry recompiled: {retry_compiles}"
+    print(f"[resilience_smoke] supervised retry OK "
+          f"(bitwise, retry compiles {retry_compiles})")
+
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.report", log],
+        capture_output=True, text=True,
+        env={**os.environ,
+             "PYTHONPATH": "src" + os.pathsep
+             + os.environ.get("PYTHONPATH", "")},
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "rollback" in r.stdout and "recovered" in r.stdout, r.stdout
+    print("[resilience_smoke] report renders recovery events OK")
+
+    # --- 2. kill-and-resume -------------------------------------------
+    ck2 = os.path.join(tmp, "ck_crash")
+    child = subprocess.run(
+        [sys.executable, __file__, "--crash-child", ck2],
+        capture_output=True, text=True,
+        env={**os.environ,
+             "PYTHONPATH": "src" + os.pathsep
+             + os.environ.get("PYTHONPATH", "")})
+    assert child.returncode == -signal.SIGKILL, \
+        (child.returncode, child.stderr[-2000:])
+    last = latest_step(ck2)
+    assert last is not None and 40 - last <= 20, \
+        f"more than one chunk lost (newest checkpoint {last})"
+    eng2 = make_engine()
+    key2 = eng2.restore(ck2)
+    eng2.run(40 - int(eng2._step_now()), key2, chunk=10)
+    assert_bitwise(ref.state, eng2.state, "kill-and-resume")
+    print(f"[resilience_smoke] kill-and-resume OK "
+          f"(killed run checkpointed through step {last}, bitwise)")
+
+
+def crash_child(ck):
+    eng = make_engine()
+    install_faults(eng, FaultPlan(faults=(Fault(kind="crash", step=25),)))
+    eng.run(40, jax.random.PRNGKey(0), chunk=10,
+            checkpoint_dir=ck, checkpoint_every=1)
+    raise SystemExit("crash fault did not fire")
+
+
+if __name__ == "__main__":
+    if len(sys.argv) > 2 and sys.argv[1] == "--crash-child":
+        crash_child(sys.argv[2])
+    else:
+        main()

@@ -9,10 +9,19 @@ Design points for 1000+-node deployments:
   * atomic commit: shards are written first, the manifest LAST (a partial
     checkpoint is never loadable; restart scans for the newest manifest)
   * async save: device->host transfer happens on the caller thread, file IO
-    in a worker thread so the training loop resumes immediately
+    in a worker thread so the training loop resumes immediately.  The
+    returned :class:`SaveHandle` is joinable and carries the write error;
+    an unjoined failed write is re-raised on the NEXT save/load so a
+    failed save can never silently become "no newest checkpoint"
+  * crash hygiene: stale ``step_*.tmp`` directories left by a crash
+    mid-write are swept on the next save into the same directory (in-flight
+    async writes are tracked and never swept)
+  * rollback pinning: ``pin=<step>`` exempts one step from GC so a
+    supervised run's rollback target cannot be collected while it is live
   * elastic restart: leaves are saved UNSHARDED (gathered); reload works on
     any mesh shape - resharding happens on the first pjit'd step (see
-    ckpt/elastic.py for the sharded-save variant + resharding loader)
+    ckpt/elastic.py for the carry-gathering loader that re-bins an MD
+    domain checkpoint onto a different mesh)
   * self-describing: the manifest stores the flattened treedef string so a
     restart can validate compatibility before touching array data
 """
@@ -33,13 +42,102 @@ def _tree_paths(tree):
     return flat, treedef
 
 
+# ---------------------------------------------------------------------------
+# async-write bookkeeping (process-wide)
+# ---------------------------------------------------------------------------
+
+_LOCK = threading.Lock()
+_IN_FLIGHT: set[str] = set()     # tmp paths with live async writers
+_DEFERRED: list[BaseException] = []   # async failures not yet re-raised
+
+
+class SaveHandle(str):
+    """Path of a (possibly in-flight) checkpoint write.
+
+    A ``str`` subclass so every existing ``path``-shaped caller keeps
+    working; additionally joinable: :meth:`join` blocks until the write
+    commits and re-raises its error, :attr:`error` peeks without blocking.
+    Synchronous saves return an already-committed handle.
+    """
+
+    def __new__(cls, path: str):
+        self = super().__new__(cls, path)
+        self._thread = None
+        self._error = None
+        return self
+
+    @property
+    def error(self) -> BaseException | None:
+        return self._error
+
+    @property
+    def done(self) -> bool:
+        return self._thread is None or not self._thread.is_alive()
+
+    def join(self, timeout: float | None = None) -> "SaveHandle":
+        """Wait for the write to commit; re-raise its failure (and clear
+        it from the deferred queue - joining IS the acknowledgment)."""
+        if self._thread is not None:
+            self._thread.join(timeout)
+        if self._error is not None:
+            err = self._error
+            with _LOCK:
+                if err in _DEFERRED:
+                    _DEFERRED.remove(err)
+            raise RuntimeError(
+                f"async checkpoint write to {self} failed") from err
+        return self
+
+
+def _raise_deferred():
+    """Surface the oldest unacknowledged async-write failure."""
+    with _LOCK:
+        if not _DEFERRED:
+            return
+        err = _DEFERRED.pop(0)
+    raise RuntimeError(
+        "a previous async checkpoint write failed (its checkpoint was "
+        "never committed - the newest on-disk step is older than the "
+        "caller believes)") from err
+
+
+def sweep_tmp(directory: str) -> list[str]:
+    """Remove stale ``step_*.tmp`` dirs left by a crash mid-write.
+
+    In-flight async writes are tracked and skipped.  Returns the paths
+    swept (for logging)."""
+    if not os.path.isdir(directory):
+        return []
+    swept = []
+    for d in os.listdir(directory):
+        if not (d.startswith("step_") and d.endswith(".tmp")):
+            continue
+        full = os.path.join(directory, d)
+        with _LOCK:
+            live = full in _IN_FLIGHT
+        if not live:
+            shutil.rmtree(full, ignore_errors=True)
+            swept.append(full)
+    return swept
+
+
 def save_checkpoint(directory: str, step: int, tree, *,
-                    async_: bool = False, keep: int = 3) -> str:
-    """Write a checkpoint; returns its path. ``async_`` offloads file IO."""
+                    async_: bool = False, keep: int = 3,
+                    pin: int | None = None) -> SaveHandle:
+    """Write a checkpoint; returns its (joinable) path handle.
+
+    ``async_`` offloads file IO to a worker thread; the handle's
+    :meth:`SaveHandle.join` waits for the atomic commit.  ``pin`` exempts
+    one step from the keep-``keep`` GC (a supervised run pins its rollback
+    target so GC can never collect the checkpoint it is about to restore).
+    """
+    _raise_deferred()
+    sweep_tmp(directory)
     flat, treedef = _tree_paths(tree)
     host = [np.asarray(x) for x in flat]   # device->host (blocking, cheap)
     path = os.path.join(directory, f"step_{step:09d}")
     tmp = path + ".tmp"
+    handle = SaveHandle(path)
 
     def _write():
         os.makedirs(tmp, exist_ok=True)
@@ -58,22 +156,40 @@ def save_checkpoint(directory: str, step: int, tree, *,
         if os.path.exists(path):
             shutil.rmtree(path)
         os.rename(tmp, path)               # atomic commit
-        _gc(directory, keep)
+        _gc(directory, keep, pin=pin)
 
     if async_:
-        t = threading.Thread(target=_write, daemon=True)
+        with _LOCK:
+            _IN_FLIGHT.add(tmp)
+
+        def _run():
+            try:
+                _write()
+            except BaseException as e:   # surfaced on join or next save/load
+                handle._error = e
+                with _LOCK:
+                    _DEFERRED.append(e)
+            finally:
+                with _LOCK:
+                    _IN_FLIGHT.discard(tmp)
+
+        t = threading.Thread(target=_run, daemon=True)
+        handle._thread = t
         t.start()
-        return path
+        return handle
     _write()
-    return path
+    return handle
 
 
-def _gc(directory: str, keep: int):
+def _gc(directory: str, keep: int, pin: int | None = None):
+    pinned = None if pin is None else f"step_{pin:09d}"
     steps = sorted(
         d for d in os.listdir(directory)
         if d.startswith("step_") and not d.endswith(".tmp")
         and os.path.exists(os.path.join(directory, d, "manifest.json")))
-    for d in steps[:-keep]:
+    for d in steps[:-keep] if keep > 0 else steps:
+        if d == pinned:
+            continue
         shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
 
 
@@ -95,7 +211,7 @@ def latest_step(directory: str) -> int | None:
 # ---------------------------------------------------------------------------
 
 def save_md(directory: str, step: int, carry, key, *, keep: int = 3,
-            async_: bool = False) -> str:
+            async_: bool = False, pin: int | None = None) -> SaveHandle:
     """Checkpoint an MD engine's hot carry + run RNG key.
 
     The carry is the COMPLETE device-resident loop state of one compiled
@@ -104,33 +220,40 @@ def save_md(directory: str, step: int, carry, key, *, keep: int = 3,
     and resuming with the saved key reproduces the uninterrupted trajectory
     bitwise on every parallel plan.  Sharded carries are gathered to host
     (leaves are saved unsharded); pass ``shardings`` to :func:`load_md` for
-    direct sharded re-placement.
+    direct sharded re-placement.  ``pin`` protects a rollback-target step
+    from the keep-``keep`` GC.
     """
     return save_checkpoint(directory, step, {"carry": carry, "key": key},
-                           keep=keep, async_=async_)
+                           keep=keep, async_=async_, pin=pin)
 
 
 def load_md(directory: str, carry_like, *, step: int | None = None,
-            shardings=None):
+            shardings=None, strict_shapes: bool = True):
     """Restore (carry, key, step) saved by :func:`save_md`.
 
     ``carry_like`` supplies the pytree structure (the engine's current
     carry); ``shardings``: optional ``{"carry": tree-of-NamedSharding,
     "key": NamedSharding}`` for sharded placement onto a device mesh.
+    ``strict_shapes=False`` loads the checkpoint's own leaf shapes even
+    when they differ from ``carry_like`` (the elastic-restart gather path:
+    same treedef, different mesh/grid).
     """
-    import jax.numpy as jnp
-    key_like = jnp.zeros((2,), jnp.uint32)
+    key_like = np.zeros((2,), np.uint32)   # structure template only
     tree, step = load_checkpoint(directory, {"carry": carry_like,
                                              "key": key_like},
-                                 step=step, shardings=shardings)
+                                 step=step, shardings=shardings,
+                                 strict_shapes=strict_shapes)
     return tree["carry"], tree["key"], step
 
 
 def load_checkpoint(directory: str, tree_like, step: int | None = None,
-                    shardings=None):
+                    shardings=None, strict_shapes: bool = True):
     """Restore into the structure of ``tree_like``. ``shardings``: optional
     pytree of NamedSharding for direct sharded placement (elastic restart
-    onto a different mesh)."""
+    onto a different mesh).  ``strict_shapes=False`` skips the per-leaf
+    shape check and returns the checkpoint's own shapes (gather-to-canonical
+    elastic path)."""
+    _raise_deferred()
     step = step if step is not None else latest_step(directory)
     if step is None:
         raise FileNotFoundError(f"no checkpoint in {directory}")
@@ -146,10 +269,17 @@ def load_checkpoint(directory: str, tree_like, step: int | None = None,
              if shardings is not None else [None] * len(flat))
     for i, (ref, shd) in enumerate(zip(flat, sflat)):
         arr = np.load(os.path.join(path, f"shard_{i:05d}.npz"))["data"]
-        assert list(arr.shape) == list(ref.shape), (
-            f"leaf {i}: ckpt {arr.shape} vs model {ref.shape}")
+        if strict_shapes:
+            assert list(arr.shape) == list(ref.shape), (
+                f"leaf {i}: ckpt {arr.shape} vs model {ref.shape}")
+        # a restored leaf must present the SAME jit cache key as the live
+        # one it replaces, or the first post-restore step recompiles:
+        # weak-typed scalars (e.g. a python-float-born cutoff) reload as
+        # python scalars to stay weak
+        src = (arr.item() if arr.ndim == 0
+               and getattr(ref, "weak_type", False) else arr)
         if shd is not None:
-            out.append(jax.device_put(arr, shd))
+            out.append(jax.device_put(src, shd))
         else:
-            out.append(jax.numpy.asarray(arr))
+            out.append(jax.numpy.asarray(src))
     return jax.tree_util.tree_unflatten(treedef, out), step

@@ -2,26 +2,33 @@
 
 Covers the three failure/rescale paths a 1000+-node run needs:
 
-1. **Node failure -> restart on fewer nodes**: checkpoints are saved
-   unsharded (ckpt/checkpoint.py), so a restart simply builds a smaller
-   mesh, re-resolves the sharding rules against it (repro.parallel.sharding
-   is mesh-shape-agnostic), loads, and continues.  For the MD domain, the
-   cell grid is re-decomposed: `redecompose` below rebins the atom state to
-   the new device grid.
+1. **Node failure -> restart on a different mesh**: Engine checkpoints are
+   saved unsharded (ckpt/checkpoint.py gathers every carry leaf), so a
+   restart can target ANY device count.  :func:`gather_md_state` loads a
+   sharded :class:`~repro.md.engine.DomainCarry` checkpoint into the
+   canonical unsharded form - flat (N, ...) atom arrays in original order -
+   and ``Engine.restore(..., plan=new_plan)`` re-bins the cells onto the
+   new device grid and rebuilds the neighbor table at the chunk boundary.
+   That turns checkpoint-restart into the mechanism for preemptible/spot
+   capacity: lose a node, restore onto the survivors, continue.  For the
+   pre-Engine DomainState surface, :func:`redecompose` re-bins directly.
 
 2. **Straggler mitigation**: all compute paths are statically balanced by
    construction (equal cell slabs for MD, equal expert capacity for MoE,
    equal microbatches for accumulation) - no dynamic work stealing is
    needed on TPU-class collectives where the slowest chip gates every
-   all-reduce.  The knob that matters is cadence: `StragglerPolicy` tracks
-   per-step wall time and flags chips whose step time exceeds the p99 so
-   the scheduler can evict/replace the host (on real fleets this hooks the
-   platform health API; here it is exercised by tests with synthetic
-   timings).
+   all-reduce.  The knob that matters is cadence: :class:`StragglerPolicy`
+   tracks per-step wall time and flags steps whose time exceeds a multiple
+   of the trailing median.  :func:`straggler_chunks` feeds it the per-chunk
+   wall times a telemetry runlog records, so ``launch/report.py`` can flag
+   straggled chunks from real data (on real fleets this hooks the platform
+   health API).
 
 3. **Preemption-safe trainer**: `run_resumable` wraps a step function with
    checkpoint-every-N plus automatic restore, so a SIGTERM at any point
-   loses at most N steps.
+   loses at most N steps.  (The MD engine's equivalent is
+   ``Engine.run(checkpoint_dir=..., resume=True)``, and
+   ``repro.resilience.Supervisor`` adds rollback-retry on top.)
 """
 from __future__ import annotations
 
@@ -30,7 +37,7 @@ import time
 
 import numpy as np
 
-from repro.ckpt.checkpoint import latest_step, load_checkpoint, \
+from repro.ckpt.checkpoint import latest_step, load_checkpoint, load_md, \
     save_checkpoint
 
 
@@ -38,6 +45,7 @@ from repro.ckpt.checkpoint import latest_step, load_checkpoint, \
 class StragglerPolicy:
     window: int = 50
     threshold: float = 1.5          # x median = straggler
+    min_samples: int = 10           # no verdicts before this many records
     _times: list = dataclasses.field(default_factory=list)
 
     def record(self, step_time: float) -> bool:
@@ -45,7 +53,7 @@ class StragglerPolicy:
         self._times.append(step_time)
         if len(self._times) > self.window:
             self._times.pop(0)
-        if len(self._times) < 10:
+        if len(self._times) < self.min_samples:
             return False
         med = float(np.median(self._times))
         return step_time > self.threshold * med
@@ -53,6 +61,27 @@ class StragglerPolicy:
     @property
     def median(self) -> float:
         return float(np.median(self._times)) if self._times else 0.0
+
+
+def straggler_chunks(wall_times, *, window: int = 50,
+                     threshold: float = 1.5,
+                     min_samples: int = 4) -> list[int]:
+    """Indices of straggled chunks in a sequence of per-chunk wall times.
+
+    Feeds :class:`StragglerPolicy` the ``wall_s`` column of a telemetry
+    runlog's chunk records (``launch/report.py`` renders the result).  The
+    report default ``min_samples=4`` is lower than the live policy's: a
+    report sees the whole (often short) run at once, while the live policy
+    wants a settled median before evicting hosts.  The first (warmup/
+    compile) chunk is recorded but never flagged.
+    """
+    policy = StragglerPolicy(window=window, threshold=threshold,
+                             min_samples=min_samples)
+    flagged = []
+    for i, w in enumerate(wall_times):
+        if policy.record(float(w)) and i > 0:
+            flagged.append(i)
+    return flagged
 
 
 def run_resumable(step_fn, state, n_steps: int, ckpt_dir: str,
@@ -85,3 +114,47 @@ def redecompose(dspec_old, dspec_new, dstate):
     from repro.parallel.domain import pack_domain, unpack_domain
     pos, vel, spin, types = unpack_domain(dstate)
     return pack_domain(dspec_new, pos, vel, spin, types)
+
+
+# ---------------------------------------------------------------------------
+# elastic restart for Engine checkpoints (sharded DomainCarry -> canonical)
+# ---------------------------------------------------------------------------
+
+def gather_md_state(directory: str, carry_like, *, step: int | None = None):
+    """Load a sharded-Engine checkpoint into the canonical unsharded form.
+
+    ``carry_like`` is any :class:`~repro.md.engine.DomainCarry` with the
+    SAME pytree structure as the checkpointed one (the target engine's
+    live carry - structure is mesh-independent, only leaf shapes differ,
+    so a 2-device checkpoint loads through a 1-device engine's template
+    and vice versa).  The cell-blocked leaves are un-binned by the carried
+    atom ids back to original atom order.
+
+    Returns ``(state, key, step)`` where ``state`` is a flat (N, ...)
+    :class:`~repro.md.state.SpinLatticeState` carrying the checkpoint's
+    box and step counter, and ``key`` is the saved run RNG key.
+    ``Engine.restore(..., plan=...)`` feeds this to a fresh domain setup:
+    re-bin onto the new grid, rebuild the neighbor table, re-evaluate
+    forces - the chunk-boundary contract of an elastic restart.
+    """
+    import jax.numpy as jnp
+    from repro.md.state import SpinLatticeState
+    from repro.parallel.domain import unbin_cells
+
+    carry, key, step = load_md(directory, carry_like, step=step,
+                               strict_shapes=False)
+    aid = np.asarray(carry.aid)
+    if aid.ndim != 4:
+        raise NotImplementedError(
+            "elastic restore supports single-trajectory sharded carries "
+            f"(aid ndim 4), got ndim {aid.ndim} (replica-sharded "
+            "checkpoints: restore per replica)")
+    pos, vel, spin, types = unbin_cells(
+        aid, carry.state.pos, carry.state.vel, carry.state.spin,
+        carry.state.types)
+    state = SpinLatticeState(
+        pos=jnp.asarray(pos), vel=jnp.asarray(vel), spin=jnp.asarray(spin),
+        types=jnp.asarray(types.astype(np.int32)),
+        box=jnp.asarray(np.asarray(carry.state.box), pos.dtype),
+        step=jnp.asarray(np.asarray(carry.state.step), jnp.int32))
+    return state, key, step

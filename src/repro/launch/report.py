@@ -73,8 +73,13 @@ def runlog_report(path: str | os.PathLike) -> str:
 
     events = read_runlog(path)
     start = next((e for e in events if e.get("event") == "run_start"), {})
-    end = next((e for e in events if e.get("event") == "run_end"), None)
+    # a supervised run appends retry segments to one file: the LAST
+    # run_end is the final word, chunk records span all segments
+    end = next((e for e in reversed(events)
+                if e.get("event") == "run_end"), None)
     chunks = [e for e in events if e.get("event") == "chunk"]
+    segments = sum(1 for e in events if e.get("event") == "run_start")
+    resil = [e for e in events if e.get("event") in _RESIL_EVENTS]
 
     lines = [f"## Run report: {path}", ""]
     prov = start.get("provenance", {})
@@ -126,6 +131,25 @@ def runlog_report(path: str | os.PathLike) -> str:
             verdicts[v] = verdicts.get(v, 0) + 1
         lines.append("- health: " + ", ".join(
             f"{n}x {v}" for v, n in sorted(verdicts.items())))
+        walls = [c.get("wall_s") for c in chunks]
+        if all(_is_num(w) for w in walls) and len(walls) >= 2:
+            from repro.ckpt.elastic import straggler_chunks
+            slow = straggler_chunks(walls)
+            if slow:
+                lines.append(
+                    f"- stragglers: {len(slow)} chunk(s) over 1.5x the "
+                    f"trailing median wall time: "
+                    + ", ".join(f"#{i} ({walls[i]:.2f}s)" for i in slow))
+
+    if resil:
+        counts = {}
+        for e in resil:
+            counts[e["event"]] = counts.get(e["event"], 0) + 1
+        lines.append("- resilience: " + ", ".join(
+            f"{n}x {k}" for k, n in sorted(counts.items()))
+            + (f" across {segments} run segment(s)" if segments > 1 else ""))
+        for e in resil:
+            lines.append("  " + _fmt_resil(e))
 
     if end is None:
         lines.append("- status: **incomplete** (no run_end record)")
@@ -142,6 +166,49 @@ def runlog_report(path: str | os.PathLike) -> str:
                 f"- peak device memory: "
                 f"{_fmt_bytes(end['peak_memory_bytes'])}")
     return "\n".join(lines)
+
+
+_RESIL_EVENTS = ("fault_injected", "rollback", "retry", "degrade",
+                 "degrade_restore", "recovered", "give_up",
+                 "elastic_restore")
+
+
+def _fmt_resil(e: dict) -> str:
+    """One report line per resilience event record."""
+    ev = e.get("event")
+    step = e.get("step", "?")
+    if ev == "fault_injected":
+        return (f"fault_injected: {e.get('kind')} at step "
+                f"{e.get('fault_step', step)} (leaf {e.get('leaf')})")
+    if ev == "rollback":
+        return (f"rollback #{e.get('attempt', '?')}: {e.get('kind')} at "
+                f"step {step} -> checkpoint {e.get('checkpoint')}")
+    if ev == "retry":
+        return (f"retry #{e.get('attempt', '?')}: resumed at step {step}, "
+                f"{e.get('remaining', '?')} steps remaining")
+    if ev == "degrade":
+        if e.get("action") == "capacity":
+            return (f"degrade: cell_capacity {e.get('prev_capacity')} -> "
+                    f"{e.get('cell_capacity')} at step {step}")
+        if e.get("action") == "dt":
+            return (f"degrade: dt {e.get('prev_dt')} -> {e.get('dt')} for "
+                    f"{e.get('span_steps')} steps at step {step}")
+        return f"degrade: {e.get('kind')} at step {step} (no action)"
+    if ev == "degrade_restore":
+        return f"degrade_restore: dt back to {e.get('dt')} at step {step}"
+    if ev == "recovered":
+        return f"recovered after {e.get('attempts')} attempt(s) at step {step}"
+    if ev == "give_up":
+        return (f"give_up: {e.get('kind')} after {e.get('attempts')} "
+                f"attempt(s) at step {step}")
+    if ev == "elastic_restore":
+        f_, t_ = e.get("from_layout", {}), e.get("to_layout", {})
+        return (f"elastic_restore at step {step}: "
+                f"{f_.get('devices', '?')} -> {t_.get('devices', '?')} "
+                f"device(s), cells {f_.get('cells')} -> {t_.get('cells')}, "
+                f"capacity {f_.get('cell_capacity')} -> "
+                f"{t_.get('cell_capacity')}")
+    return f"{ev}: {e}"
 
 
 def _is_num(x) -> bool:

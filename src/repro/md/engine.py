@@ -365,6 +365,10 @@ class Engine:
     def __post_init__(self):
         self._halo = HaloTrace()    # run-scoped halo ledger (this engine)
         self._last_ckpt = None      # newest checkpoint written by save()
+        self.ckpt_pin = None        # step save() must never GC (the
+                                    # supervisor's rollback target)
+        self._fault_injector = None  # resilience hook: (engine, carry,
+                                     # n) -> carry at each chunk boundary
         self.plan = as_plan(self.plan)
         self.observables = _check_names(self.observables)
         if self.obs_every is not None and self.obs_every < 1:
@@ -1280,7 +1284,7 @@ class Engine:
                 step=self._step_now(), chunk_index=chunk_index,
                 signals={"dropped": dropped,
                          "dropped_per_device": per_dev},
-                checkpoint_path=self._last_ckpt)
+                checkpoint_path=self._last_ckpt, kind="overflow")
 
     @property
     def n_migrated(self) -> int:
@@ -1413,6 +1417,12 @@ class Engine:
         while done < n_steps:
             n = min(chunk, n_steps - done)
             emit = self._emit_for(n)
+            if self._fault_injector is not None:
+                # resilience hook: host-side carry corruption at the chunk
+                # boundary (repro.resilience.faults); keeps self._carry in
+                # sync so step accounting sees the injected carry
+                carry = self._fault_injector(self, carry, n)
+                self._carry = carry
             key, sub = jax.random.split(key)
             if isinstance(self.plan, Replicated):
                 sub = self._replica_put(sub)
@@ -1552,34 +1562,118 @@ class Engine:
         """
         from repro.ckpt.checkpoint import save_md
         path = save_md(directory, self._step_now(), self._carry, key,
-                       keep=keep)
+                       keep=keep, pin=self.ckpt_pin)
         self._last_ckpt = path
         return path
 
-    def restore(self, directory: str, step: int | None = None) -> jax.Array:
+    def restore(self, directory: str, step: int | None = None, *,
+                plan=None) -> jax.Array:
         """Restore the hot carry from a checkpoint; returns the saved run
         RNG key (continue with ``engine.run(remaining, key)`` for a
-        bitwise-identical trajectory)."""
+        bitwise-identical trajectory).
+
+        ``plan`` switches on **elastic restart**: the checkpointed sharded
+        carry is gathered to the canonical unsharded form, re-binned onto
+        the new plan's cell grid/mesh, and the neighbor table and forces
+        are rebuilt - the engine continues the trajectory on a different
+        device count.  The rebuild happens at a chunk boundary, so it is
+        exactly the migration-rebuild contract the in-scan loop already
+        honors (same-mesh vs cross-mesh restores agree to the force
+        evaluation's reduction order).
+        """
+        if plan is not None:
+            return self._restore_elastic(directory, step, plan)
         from repro.ckpt.checkpoint import load_md
         carry, key, _ = load_md(directory, self._carry, step=step,
                                 shardings=self._carry_shardings())
         self._carry = carry
         self._sync_observation()
+        # hand the key back the way run() receives it: an uncommitted
+        # default-device array, not the mesh-replicated placement the
+        # loader used - a committed key would recompile random.split on
+        # the first retried chunk
+        return jnp.asarray(np.asarray(key))
+
+    def _restore_elastic(self, directory: str, step: int | None,
+                         plan) -> jax.Array:
+        from repro.ckpt.elastic import gather_md_state
+        if not isinstance(self.plan, Sharded) or self.replicas:
+            raise NotImplementedError(
+                "elastic restore re-bins sharded single-trajectory "
+                "carries; current plan is "
+                f"{type(self.plan).__name__}(replicas={self.replicas})")
+        plan = as_plan(plan)
+        if not isinstance(plan, Sharded) or plan.replicas:
+            raise NotImplementedError(
+                "elastic restore targets a Sharded plan without replicas")
+        state, key, _ = gather_md_state(directory, self._carry, step=step)
+        self.plan = plan
+        self.state = state
+        self.table = None
+        # drop the old-mesh carry BEFORE setup: _step_now must fall back
+        # to the restored state's step while schedules are re-evaluated
+        self.__dict__.pop("_carry", None)
+        self._setup_domain()    # re-resolve, re-bin, rebuild, re-evaluate
         return key
+
+    # ------------------------------------------------------------------
+    def rebind(self, *, cfg: IntegratorConfig | None = None,
+               skin: float | None = None, plan=None) -> None:
+        """Rebuild the compiled chunk around a new config / skin / plan.
+
+        The supervisor's graceful-degradation lever: the current carry is
+        synced to the canonical ``self.state`` (original atom order), the
+        requested knobs are swapped, and the plan setup re-runs from that
+        state - one retrace, exactly as at construction.  Trajectory
+        continuity is the chunk-boundary contract: positions / velocities
+        / spins / step carry over bitwise; the neighbor table and forces
+        are rebuilt.
+
+        On the ``Sharded`` plan a new plan object may change the cell
+        grid, capacity, or mesh (elastic in-place rescale).  Replica
+        batches cannot be re-packed through the flat state and are
+        rejected.
+        """
+        if isinstance(self.plan, Sharded) and self.replicas:
+            raise NotImplementedError(
+                "rebind on the replicated-sharded plan is not supported "
+                "(the flat re-pack path is single-trajectory)")
+        self._sync_observation()
+        if cfg is not None:
+            self.cfg = cfg
+        if skin is not None:
+            self.skin = skin
+        if plan is not None:
+            self.plan = as_plan(plan, replicas=self.replicas)
+        self.table = None
+        self.__dict__.pop("_carry", None)   # _step_now -> state.step
+        if isinstance(self.plan, SingleDevice):
+            self._setup_flat()
+        elif isinstance(self.plan, Replicated):
+            self._setup_replica()
+            if self.plan.devices is not None:
+                self.shard_replicas(self.plan.devices)
+        elif isinstance(self.plan, Sharded):
+            self._setup_domain()
+        else:
+            raise TypeError(f"unknown plan {self.plan!r}")
 
     def _carry_shardings(self):
         """Sharding tree for direct placement at restore: each leaf goes
         back exactly where the live carry holds it (mesh-sharded on the
-        domain plan, replica-axis-sharded after :meth:`shard_replicas`,
-        default device otherwise)."""
-        carry_shd = jax.tree_util.tree_map(lambda x: x.sharding,
-                                           self._carry)
+        domain plan, replica-axis-sharded after :meth:`shard_replicas`).
+        Returns None on unsharded plans: there a committed ``device_put``
+        would change the jit cache key of the already-compiled chunk (the
+        warm chunk was traced against uncommitted arrays), so restore
+        places leaves with plain ``jnp.asarray`` and retries recompile
+        nothing."""
         from jax.sharding import NamedSharding, PartitionSpec as P
         if isinstance(self.plan, Sharded):
             key_shd = NamedSharding(self._rplan.mesh, P())
         elif getattr(self, "_replica_mesh", None) is not None:
             key_shd = NamedSharding(self._replica_mesh, P())
         else:
-            from jax.sharding import SingleDeviceSharding
-            key_shd = SingleDeviceSharding(jax.devices()[0])
+            return None
+        carry_shd = jax.tree_util.tree_map(lambda x: x.sharding,
+                                           self._carry)
         return {"carry": carry_shd, "key": key_shd}

@@ -152,6 +152,28 @@ def unpack_domain(state: DomainState):
             flat(state.spin, (3,)), flat(state.types, ()))
 
 
+def unbin_cells(aid, *arrays):
+    """Host-side inverse of the cell binning, in ORIGINAL atom order.
+
+    ``aid`` is the (CX, CY, CZ, K) original-atom-id block the sharded loop
+    carries through migrations (-1 = empty slot); each of ``arrays`` is a
+    cell-blocked (CX, CY, CZ, K, ...) field.  Returns the (N, ...) arrays
+    ordered by atom id - the canonical unsharded form the elastic-restart
+    loader re-bins onto a new grid (the same inverse ``Engine._sync_domain``
+    applies at observation boundaries).
+    """
+    aidf = np.asarray(aid).reshape(-1)
+    sel = np.nonzero(aidf >= 0)[0]
+    n = sel.size
+    order = np.empty(n, np.int64)
+    order[aidf[sel]] = sel
+    outs = []
+    for a in arrays:
+        a = np.asarray(a)
+        outs.append(a.reshape(-1, *a.shape[4:])[order])
+    return tuple(outs)
+
+
 # 27-point stencil shifts
 _SHIFTS = [(dx, dy, dz) for dx in (-1, 0, 1) for dy in (-1, 0, 1)
            for dz in (-1, 0, 1)]

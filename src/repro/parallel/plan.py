@@ -79,6 +79,9 @@ class Sharded:
     cell_capacity: int | None = None   # per-cell capacity K (None -> auto)
     replicas: int = 0                  # 0 = no replica axis
     replica_axis: str = "replica"
+    devices: tuple | None = None       # subset for the auto-built 1D mesh
+                                       # (elastic restart onto fewer devices
+                                       # without hand-building a Mesh)
 
     @property
     def is_sharded(self) -> bool:
@@ -95,7 +98,8 @@ class Sharded:
 
         mesh, axis_map = self.mesh, self.axis_map
         if mesh is None:
-            devs = np.asarray(jax.devices())
+            devs = np.asarray(list(self.devices) if self.devices is not None
+                              else jax.devices())
             mesh = Mesh(devs.reshape(len(devs)), ("sx",))
             if axis_map is None:
                 axis_map = ("sx", None, None)
@@ -249,6 +253,17 @@ class ResolvedSharded:
                             trip=P(), n_rebuilds=P(), n_migrated=P(),
                             n_dropped=P())
         return carry, cell, rsc
+
+    def describe(self) -> dict:
+        """JSON-able layout summary (runlog headers, elastic-restore
+        records)."""
+        return {
+            "mesh": {a: int(self.mesh.shape[a])
+                     for a in self.mesh.axis_names},
+            "devices": int(self.mesh.size),
+            "cells": list(self.dspec.cells),
+            "cell_capacity": int(self.dspec.capacity),
+        }
 
     def register_halo_sizes(self, ledger=None):
         """Teach the trace-time halo ledger(s) the concrete axis widths.

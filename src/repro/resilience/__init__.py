@@ -1,0 +1,36 @@
+"""Fault tolerance for long engine campaigns: inject, detect, recover.
+
+Extreme-scale runs (the paper's 1000+-node regime) see faults as routine:
+silent data corruption flips bits in device memory, a kicked atom overflows
+its link cell, a host dies mid-chunk.  This package closes the loop around
+the PR 6 health monitoring:
+
+* :mod:`repro.resilience.faults` - deterministic, seeded fault injection
+  at chunk boundaries (NaN, bit-flip SDC, migration overflow, per-device
+  halo corruption, host crash), installable on any plan via the engine's
+  ``_fault_injector`` hook.  Faults are *data*, so a failure campaign is
+  reproducible.
+* :mod:`repro.resilience.supervisor` - :class:`Supervisor` wraps
+  ``Engine.run`` with rollback-retry: on a structured
+  :class:`~repro.telemetry.monitor.HealthError` it restores the last-good
+  checkpoint (which the health gate guarantees is good), pins it against
+  GC, backs off, and retries with a bounded budget.  Repeated same-class
+  failures climb a graceful-degradation ladder (overflow -> rebuild with
+  larger cell capacity; drift/NaN -> integrate a span at reduced dt, then
+  restore).  Retries reuse the already-compiled chunk - an unchanged
+  config recompiles nothing.  Every rollback / retry / degrade /
+  elastic-restore lands in the telemetry runlog as a structured event
+  that ``launch/report.py`` renders.
+
+Elastic restart itself lives on the engine
+(``Engine.restore(ckpt, plan=new_plan)``, backed by
+:func:`repro.ckpt.elastic.gather_md_state`); the supervisor's
+:meth:`~repro.resilience.supervisor.Supervisor.elastic_restore` adds the
+event bookkeeping.
+"""
+from repro.resilience.faults import Fault, FaultInjector, FaultPlan, \
+    install_faults
+from repro.resilience.supervisor import Supervisor, SupervisorConfig
+
+__all__ = ["Fault", "FaultPlan", "FaultInjector", "install_faults",
+           "Supervisor", "SupervisorConfig"]

@@ -1,0 +1,234 @@
+"""Deterministic seeded fault injection for the unified engine.
+
+A :class:`FaultPlan` is pure data - a tuple of :class:`Fault` records plus
+a seed - so a failure campaign replays exactly.  :func:`install_faults`
+compiles it into a host-side injector on the engine's chunk-boundary hook
+(``engine._fault_injector``): right before a chunk whose step window
+covers a fault's trigger step, the injector pulls the target carry leaf to
+host, corrupts it, and puts it back **with its original sharding and
+dtype** (``jax.device_put(host, arr.sharding)``), so injection works
+unchanged on the flat, replica, and sharded plans.
+
+Fault kinds and what they model:
+
+``nan``        a transient nonsense value (cosmic-ray upset caught late):
+               NaN written into ``count`` occupied elements of a leaf.
+``bit_flip``   silent data corruption proper: XOR one bit of one element's
+               raw representation.  High exponent bits make the corruption
+               detectable through the energy/nonfinite health signals.
+``overflow``   a migration overflow on one device: adds ``count`` to the
+               carry's per-device ``n_dropped`` and keeps firing until the
+               engine's cell capacity exceeds the capacity at install time
+               - i.e. it models *this layout is too small*, which is
+               exactly what the supervisor's capacity ladder fixes.
+               Sharded plan only.
+``halo``       corruption localized to ONE device's boundary face (a bad
+               link or NIC): NaNs in the +x-face occupied position slots
+               of device ``device``.  Sharded plan only.
+``crash``      the host dies: ``SIGKILL`` to the current process.  For
+               subprocess tests of kill-and-resume.
+
+Transient kinds (``nan``/``bit_flip``/``halo``/``crash``) fire once ever
+(``once=True`` default): after the supervisor rolls back past the trigger
+step, the re-run sails through - the transient-fault recovery contract.
+Set ``once=False`` for a persistent fault (fires on every pass through
+its window), e.g. to force the degradation ladder; combine with
+``while_dt_ge=<dt>`` to model an integration instability that a smaller
+timestep genuinely fixes - the fault goes inert once the supervisor's dt
+ladder drops ``engine.cfg.dt`` below that threshold, the transient
+analogue of the overflow fault's capacity condition.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import signal as _signal
+
+import numpy as np
+
+_KINDS = ("nan", "bit_flip", "overflow", "halo", "crash")
+_LEAVES = ("pos", "vel", "spin", "force")
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """One seeded fault; fires at the first chunk whose step window
+    ``[step0, step0 + n)`` contains :attr:`step`."""
+
+    kind: str                 # one of _KINDS
+    step: int                 # global step the fault triggers at
+    leaf: str = "force"       # target carry leaf (nan / bit_flip)
+    device: int = 0           # target device (overflow / halo)
+    count: int = 1            # elements corrupted / atoms dropped
+    bit: int = 62             # bit index for bit_flip (f64: 62 = top
+                              # exponent bit; f32 arrays clamp to 30)
+    once: bool = True         # transient (fire once ever) vs persistent
+    while_dt_ge: float | None = None   # fire only while cfg.dt >= this
+                              # (a dt-ladder-fixable instability)
+
+    def __post_init__(self):
+        if self.kind not in _KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"expected one of {_KINDS}")
+        if self.leaf not in _LEAVES:
+            raise ValueError(f"unknown fault leaf {self.leaf!r}; "
+                             f"expected one of {_LEAVES}")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A reproducible failure campaign: faults + the RNG seed that picks
+    the corrupted elements."""
+
+    faults: tuple = ()
+    seed: int = 0
+
+    def __post_init__(self):
+        object.__setattr__(self, "faults", tuple(self.faults))
+
+
+def install_faults(engine, plan: FaultPlan, *,
+                   runlog=None) -> "FaultInjector":
+    """Arm ``engine`` with ``plan``; returns the injector (inspect
+    ``injector.fired`` in tests).  ``runlog`` optionally appends a
+    ``fault_injected`` event record per firing."""
+    inj = FaultInjector(engine, plan, runlog=runlog)
+    engine._fault_injector = inj
+    return inj
+
+
+class FaultInjector:
+    """The compiled form of a :class:`FaultPlan` for one engine."""
+
+    def __init__(self, engine, plan: FaultPlan, *, runlog=None):
+        from repro.parallel.plan import Sharded
+
+        self.plan = plan
+        self.runlog = runlog
+        self.fired: list[dict] = []
+        self._done: set[int] = set()
+        sharded = isinstance(engine.plan, Sharded)
+        for f in plan.faults:
+            if f.kind in ("overflow", "halo") and not sharded:
+                raise ValueError(f"fault kind {f.kind!r} targets the "
+                                 "sharded plan's per-device state; "
+                                 f"engine plan is {type(engine.plan).__name__}")
+        # overflow models "capacity at install is too small": it goes
+        # inert once the engine's capacity grows past this
+        self._cap0 = (int(engine._rplan.dspec.capacity) if sharded else None)
+
+    # ------------------------------------------------------------------
+    def __call__(self, engine, carry, n: int):
+        step0 = int(np.asarray(
+            getattr(carry, "state", getattr(carry, "states", None)).step
+        ).reshape(-1)[0])
+        for i, f in enumerate(self.plan.faults):
+            if i in self._done:
+                continue
+            if not (step0 <= f.step < step0 + n):
+                continue
+            if (f.kind == "overflow"
+                    and int(engine._rplan.dspec.capacity) > self._cap0):
+                continue    # capacity ladder fixed it; fault is inert
+            if (f.while_dt_ge is not None
+                    and float(engine.cfg.dt) < f.while_dt_ge):
+                continue    # dt ladder fixed it; fault is inert
+            if f.once:
+                self._done.add(i)
+            record = {"kind": f.kind, "fault_step": f.step,
+                      "chunk_step": step0, "leaf": f.leaf,
+                      "device": f.device}
+            self.fired.append(record)
+            if self.runlog is not None:
+                from repro.telemetry.runlog import append_event
+                append_event(self.runlog, "fault_injected", **record)
+            carry = self._fire(engine, carry, f, i)
+        return carry
+
+    # ------------------------------------------------------------------
+    def _fire(self, engine, carry, f: Fault, index: int):
+        if f.kind == "crash":
+            os.kill(os.getpid(), _signal.SIGKILL)
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.plan.seed, index]))
+        if f.kind == "overflow":
+            return self._fire_overflow(carry, f)
+        if f.kind == "halo":
+            return self._fire_halo(carry, f)
+        return self._fire_leaf(carry, f, rng)
+
+    @staticmethod
+    def _split(carry):
+        """(state, ff, rebuild) for any plan's carry."""
+        if hasattr(carry, "states"):    # ReplicaCarry
+            return carry.states, carry.ffs, (
+                lambda st, ff: carry._replace(states=st, ffs=ff))
+        return carry.state, carry.ff, (
+            lambda st, ff: carry._replace(state=st, ff=ff))
+
+    @staticmethod
+    def _put_back(host, arr):
+        """Re-place a corrupted host copy exactly where the leaf lived.
+
+        Mesh-sharded leaves go back through ``device_put`` with their
+        live ``NamedSharding``; unsharded leaves use ``jnp.asarray`` so
+        the result stays UNCOMMITTED - a committed single-device put
+        would change the warm chunk's jit cache key and force a
+        recompile on the very chunk the fault rides into.  The host copy
+        carries the leaf's own dtype either way, so nothing downcasts."""
+        import jax
+        import jax.numpy as jnp
+        from jax.sharding import NamedSharding
+        if isinstance(arr.sharding, NamedSharding):
+            return jax.device_put(host, arr.sharding)
+        return jnp.asarray(host)
+
+    def _fire_leaf(self, carry, f: Fault, rng):
+        state, ff, rebuild = self._split(carry)
+        arr = {"pos": state.pos, "vel": state.vel, "spin": state.spin,
+               "force": ff.force}[f.leaf]
+        host = np.array(arr)
+        # occupied slots only: empty cell slots (types == -1) are masked
+        # out of every reduction, so corrupting them would be invisible
+        occ = np.asarray(state.types).reshape(-1) >= 0
+        flat = host.reshape(-1, host.shape[-1])
+        cand = np.nonzero(occ)[0]
+        rows = rng.choice(cand, size=min(f.count, cand.size), replace=False)
+        cols = rng.integers(0, flat.shape[-1], size=rows.size)
+        if f.kind == "nan":
+            flat[rows, cols] = np.nan
+        else:                       # bit_flip
+            bits = host.dtype.itemsize * 8
+            uview = flat.view(np.uint64 if bits == 64 else np.uint32)
+            uview[rows, cols] ^= np.asarray(1 << min(f.bit, bits - 2),
+                                            uview.dtype)
+        arr = self._put_back(host, arr)
+        if f.leaf == "force":
+            ff = ff._replace(force=arr)
+        else:
+            state = state._replace(**{f.leaf: arr})
+        return rebuild(state, ff)
+
+    def _fire_overflow(self, carry, f: Fault):
+        vec = np.array(carry.n_dropped)
+        vec.reshape(-1)[f.device % vec.size] += f.count
+        return carry._replace(
+            n_dropped=self._put_back(vec, carry.n_dropped))
+
+    def _fire_halo(self, carry, f: Fault):
+        """NaN the +x boundary-face occupied position slots of ONE
+        device's shard - the footprint of a corrupted halo message."""
+        pos = carry.state.pos
+        shards = carry.state.types.addressable_shards   # cell dims only
+        shard = shards[f.device % len(shards)]
+        host = np.array(pos)
+        types = np.asarray(carry.state.types)
+        idx = shard.index          # global (CX, CY, CZ, K) shard slices;
+        sub = host[idx]            # pos keeps its trailing (3,) dim
+        tsub = types[idx]
+        face = (slice(sub.shape[0] - 1, sub.shape[0]),)  # +x cell face
+        occ = tsub[face] >= 0
+        sub[face][occ] = np.nan
+        host[idx] = sub
+        return carry._replace(state=carry.state._replace(
+            pos=self._put_back(host, pos)))

@@ -1,0 +1,190 @@
+"""Rollback-retry supervision of ``Engine.run`` with graceful degradation.
+
+The health gate (PR 6) runs BEFORE checkpointing, so the newest checkpoint
+is always good - which makes recovery mechanical:
+
+1. ``Engine.run`` raises a structured
+   :class:`~repro.telemetry.monitor.HealthError` at a chunk boundary.
+2. The supervisor restores the newest checkpoint, **pins** it so the
+   checkpoint GC can never collect the rollback target, waits out a
+   linear backoff, and re-runs the remaining steps.
+3. A plain retry reuses the engine's already-compiled chunk: with an
+   unchanged config and chunk-aligned checkpoints the retry costs **zero
+   recompiles** (asserted from the compile watchdog in the runlog).
+4. ``degrade_after`` consecutive failures of the SAME class climb the
+   degradation ladder keyed on ``HealthError.kind``:
+
+   - ``overflow``: rebind the sharded plan with ``capacity_factor`` x the
+     resolved cell capacity (permanent - the layout was too small).
+   - ``nonfinite`` / ``drift`` / ``spin``: rebind at ``dt_factor`` x dt,
+     integrate a span of ``degrade_span`` chunks through the trouble
+     spot, then restore the original config and continue at full dt.
+
+Every rollback / retry / degrade / give-up / elastic-restore appends a
+structured event record to the telemetry runlog (``launch/report.py``
+renders them), and retry segments re-open the runlog in append mode so
+one file tells the whole story.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from repro.telemetry import HealthError, Telemetry, as_telemetry
+from repro.telemetry.runlog import append_event
+
+_TRANSIENT = ("nonfinite", "drift", "spin")
+
+
+@dataclasses.dataclass(frozen=True)
+class SupervisorConfig:
+    max_retries: int = 4        # total rollback budget per run() call
+    backoff_s: float = 0.0      # sleep attempt * backoff_s before retry
+    degrade_after: int = 2      # consecutive same-class fails -> ladder
+    dt_factor: float = 0.5      # transient ladder: dt multiplier
+    capacity_factor: float = 2.0  # overflow ladder: capacity multiplier
+    degrade_span: int = 2       # chunks to run at reduced dt
+
+
+class Supervisor:
+    """Wraps ``Engine.run`` with rollback-retry (see module doc).
+
+    One supervisor instance can drive many runs; ``events`` accumulates
+    the structured recovery records (also mirrored to the runlog)."""
+
+    def __init__(self, config: SupervisorConfig | None = None, *,
+                 runlog=None):
+        self.config = config or SupervisorConfig()
+        self.runlog = runlog        # default event sink (else tel.runlog)
+        self.events: list[dict] = []
+
+    # ------------------------------------------------------------------
+    def _event(self, log_path, event: str, **fields) -> dict:
+        record = {"event": event, **fields}
+        self.events.append(record)
+        if log_path is not None:
+            append_event(log_path, event, **fields)
+        return record
+
+    # ------------------------------------------------------------------
+    def run(self, engine, n_steps: int, key, chunk: int = 20, *,
+            checkpoint_dir: str, checkpoint_every: int = 1,
+            telemetry=None, **run_kw):
+        """``Engine.run`` with automatic rollback-retry.
+
+        ``checkpoint_dir`` is mandatory: it is both the rollback store and
+        the resume point.  An initial checkpoint is written before the
+        first step so even a chunk-0 fault has a rollback target.  For the
+        zero-recompile retry path keep ``n_steps`` a multiple of ``chunk``
+        and checkpoints chunk-aligned (the defaults do).
+        """
+        cfg = self.config
+        tel = as_telemetry(telemetry)
+        log_path = self.runlog if self.runlog is not None else (
+            tel.runlog if tel is not None else None)
+        target = engine._step_now() + n_steps
+        engine.save(checkpoint_dir, key=key)
+        engine.ckpt_pin = engine._step_now()
+
+        attempts = 0
+        last_kind, same_count = None, 0
+        seg_tel = tel
+        while True:
+            remaining = target - engine._step_now()
+            if remaining <= 0:
+                break
+            try:
+                engine.run(remaining, key, chunk,
+                           checkpoint_dir=checkpoint_dir,
+                           checkpoint_every=checkpoint_every,
+                           telemetry=seg_tel, **run_kw)
+                break
+            except HealthError as err:
+                attempts += 1
+                kind = err.kind or "unknown"
+                same_count = same_count + 1 if kind == last_kind else 1
+                last_kind = kind
+                self._event(
+                    log_path, "rollback", kind=kind, attempt=attempts,
+                    step=err.step, chunk_index=err.chunk_index,
+                    signals=err.signals, checkpoint=err.checkpoint_path,
+                    error=str(err))
+                if attempts > cfg.max_retries:
+                    self._event(log_path, "give_up", kind=kind,
+                                attempts=attempts, step=err.step)
+                    raise
+                if cfg.backoff_s:
+                    time.sleep(attempts * cfg.backoff_s)
+                key = engine.restore(checkpoint_dir)
+                engine.ckpt_pin = engine._step_now()
+                if seg_tel is not None:
+                    seg_tel = dataclasses.replace(seg_tel, append=True)
+                if same_count >= cfg.degrade_after:
+                    key = self._degrade(engine, kind, key, chunk,
+                                        checkpoint_dir, checkpoint_every,
+                                        seg_tel, target, log_path, run_kw)
+                    same_count = 0
+                self._event(log_path, "retry", attempt=attempts,
+                            kind=kind, step=engine._step_now(),
+                            remaining=target - engine._step_now())
+        if attempts:
+            self._event(log_path, "recovered", attempts=attempts,
+                        step=engine._step_now())
+        return engine.state
+
+    # ------------------------------------------------------------------
+    def _degrade(self, engine, kind, key, chunk, checkpoint_dir,
+                 checkpoint_every, seg_tel, target, log_path, run_kw):
+        """Climb one rung of the degradation ladder; returns the loop key
+        to continue with."""
+        cfg = self.config
+        if kind == "overflow":
+            cap = int(engine._rplan.dspec.capacity)
+            new_cap = max(int(cap * cfg.capacity_factor), cap + 1)
+            plan = dataclasses.replace(engine.plan, cell_capacity=new_cap)
+            self._event(log_path, "degrade", kind=kind, action="capacity",
+                        cell_capacity=new_cap, prev_capacity=cap,
+                        step=engine._step_now())
+            engine.rebind(plan=plan)    # permanent: the layout was wrong
+            return key
+        if kind in _TRANSIENT:
+            old_cfg = engine.cfg
+            new_dt = old_cfg.dt * cfg.dt_factor
+            span = min(cfg.degrade_span * chunk,
+                       target - engine._step_now())
+            self._event(log_path, "degrade", kind=kind, action="dt",
+                        dt=new_dt, prev_dt=old_cfg.dt, span_steps=span,
+                        step=engine._step_now())
+            engine.rebind(cfg=dataclasses.replace(old_cfg, dt=new_dt))
+            try:
+                if span > 0:
+                    engine.run(span, key, chunk,
+                               checkpoint_dir=checkpoint_dir,
+                               checkpoint_every=checkpoint_every,
+                               telemetry=seg_tel, **run_kw)
+                    key = engine.restore(checkpoint_dir)
+                    engine.ckpt_pin = engine._step_now()
+            finally:
+                engine.rebind(cfg=old_cfg)
+                self._event(log_path, "degrade_restore", kind=kind,
+                            dt=old_cfg.dt, step=engine._step_now())
+            return key
+        self._event(log_path, "degrade", kind=kind, action="none",
+                    step=engine._step_now())
+        return key
+
+    # ------------------------------------------------------------------
+    def elastic_restore(self, engine, checkpoint_dir, plan, *,
+                        step: int | None = None, runlog=None):
+        """``Engine.restore(..., plan=...)`` plus the event record: restore
+        a sharded checkpoint onto a different mesh/device count and log
+        the layout transition.  Returns the saved run RNG key."""
+        log_path = runlog if runlog is not None else self.runlog
+        before = engine._rplan.describe()
+        key = engine.restore(checkpoint_dir, step=step, plan=plan)
+        after = engine._rplan.describe()
+        engine.ckpt_pin = engine._step_now()
+        self._event(log_path, "elastic_restore",
+                    step=engine._step_now(), from_layout=before,
+                    to_layout=after, checkpoint=str(checkpoint_dir))
+        return key

@@ -34,13 +34,13 @@ from repro.telemetry.monitor import (HealthConfig, HealthError, check_chunk,
                                      nonfinite_count, occupancy_fraction,
                                      spin_norm_dev)
 from repro.telemetry.profiling import annotate, maybe_trace, phase
-from repro.telemetry.runlog import RunLog, read_runlog
+from repro.telemetry.runlog import RunLog, append_event, read_runlog
 
 __all__ = [
     "Telemetry", "TelemetrySession", "RunMetrics", "CompileWatchdog",
-    "HealthConfig", "HealthError", "RunLog", "read_runlog", "check_chunk",
-    "nonfinite_count", "occupancy_fraction", "spin_norm_dev", "phase",
-    "annotate", "maybe_trace", "peak_device_memory", "as_telemetry",
+    "HealthConfig", "HealthError", "RunLog", "read_runlog", "append_event",
+    "check_chunk", "nonfinite_count", "occupancy_fraction", "spin_norm_dev",
+    "phase", "annotate", "maybe_trace", "peak_device_memory", "as_telemetry",
 ]
 
 
@@ -53,6 +53,7 @@ class Telemetry:
         default_factory=HealthConfig)          # None disables checking
     profile_dir: str | os.PathLike | None = None   # perfetto dump dir
     metrics: RunMetrics = dataclasses.field(default_factory=RunMetrics)
+    append: bool = False     # append to an existing runlog (retry segments)
 
 
 def as_telemetry(telemetry) -> "Telemetry | None":
@@ -80,7 +81,8 @@ class TelemetrySession:
         self._t0 = time.perf_counter()
         self._steps = 0
         self._chunks = 0
-        self.runlog = RunLog(tel.runlog) if tel.runlog else None
+        self.runlog = (RunLog(tel.runlog, mode="a" if tel.append else "w")
+                       if tel.runlog else None)
         if self.runlog is not None:
             self.runlog.run_start(**run_info)
 

@@ -38,11 +38,15 @@ class HealthError(RuntimeError):
     - ``signals``: host-side signal dict that tripped the check
     - ``checkpoint_path``: last-good checkpoint directory written by
       ``Engine.save`` (None when the run was not checkpointing)
+    - ``kind``: failure class ("nonfinite" | "drift" | "spin" |
+      "overflow" | None) - the key the resilience supervisor's
+      graceful-degradation ladder dispatches on
     """
 
     def __init__(self, message: str, *, step: int | None = None,
                  chunk_index: int | None = None, signals: dict | None = None,
-                 checkpoint_path: str | None = None):
+                 checkpoint_path: str | None = None,
+                 kind: str | None = None):
         if checkpoint_path is not None:
             message += f" [last-good checkpoint: {checkpoint_path}]"
         super().__init__(message)
@@ -50,6 +54,7 @@ class HealthError(RuntimeError):
         self.chunk_index = chunk_index
         self.signals = dict(signals or {})
         self.checkpoint_path = checkpoint_path
+        self.kind = kind
 
 
 @dataclasses.dataclass(frozen=True)
@@ -113,26 +118,29 @@ def check_chunk(signals: dict, cfg: HealthConfig, *, step: int,
 
     ``signals`` are host floats/ints (the Engine converts device scalars).
     """
-    fails = []
+    fails, kinds = [], []
     if cfg.fail_on_nonfinite and signals.get("nonfinite", 0) > 0:
         fails.append(f"{int(signals['nonfinite'])} non-finite value(s) in "
                      "positions/forces/spins")
+        kinds.append("nonfinite")
     drift = signals.get("e_drift")
     if (cfg.max_energy_drift is not None and drift is not None
             and abs(drift) > cfg.max_energy_drift):
         fails.append(f"energy drift {drift:+.3e} eV exceeds "
                      f"{cfg.max_energy_drift:.3e}")
+        kinds.append("drift")
     sdev = signals.get("spin_dev")
     if (cfg.max_spin_dev is not None and sdev is not None
             and sdev > cfg.max_spin_dev):
         fails.append(f"spin-norm deviation {sdev:.3e} exceeds "
                      f"{cfg.max_spin_dev:.3e}")
+        kinds.append("spin")
     if fails:
         raise HealthError(
             f"health check failed at step {step} (chunk {chunk_index}): "
             + "; ".join(fails),
             step=step, chunk_index=chunk_index, signals=signals,
-            checkpoint_path=checkpoint_path)
+            checkpoint_path=checkpoint_path, kind=kinds[0])
     for key in ("nbr_occ", "cell_occ"):
         if signals.get(key, 0.0) >= cfg.warn_occupancy:
             return "warn"

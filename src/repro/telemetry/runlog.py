@@ -51,14 +51,28 @@ def _jsonable(x):
 
 
 class RunLog:
-    """Append-only JSONL writer for one run."""
+    """Append-only JSONL writer for one run.
 
-    def __init__(self, path: str | os.PathLike):
+    ``mode="a"`` appends to an existing runlog instead of truncating it -
+    a supervised run's retry segments and resilience events (rollback /
+    retry / degrade / elastic_restore) share one file with the original
+    attempt, so the flight record of the whole campaign reads in order.
+    """
+
+    def __init__(self, path: str | os.PathLike, mode: str = "w"):
+        if mode not in ("w", "a"):
+            raise ValueError(f"RunLog mode must be 'w' or 'a', got {mode!r}")
         self.path = str(path)
         parent = os.path.dirname(self.path)
         if parent:
             os.makedirs(parent, exist_ok=True)
-        self._fh = open(self.path, "w")
+        if mode == "w":
+            open(self.path, "w").close()    # truncate
+        # the live handle is ALWAYS O_APPEND: out-of-session records
+        # (``append_event`` - fault injection, supervisor rollbacks) may
+        # interleave with session writes, and a plain "w" handle keeps its
+        # own offset and would silently overwrite them
+        self._fh = open(self.path, "a")
         self._closed = False
 
     def write(self, event: str, **fields) -> dict:
@@ -82,6 +96,21 @@ class RunLog:
 
     def __exit__(self, *exc) -> None:
         self.close()
+
+
+def append_event(path: str | os.PathLike, event: str, **fields) -> dict:
+    """Append one structured record to a runlog outside any session.
+
+    The resilience supervisor uses this to interleave rollback / retry /
+    degrade / elastic_restore records between engine run segments (each
+    segment owns its RunLog handle only while running)."""
+    record = {"event": event, "t_wall": time.time(), **_jsonable(fields)}
+    parent = os.path.dirname(str(path))
+    if parent:
+        os.makedirs(parent, exist_ok=True)
+    with open(str(path), "a") as fh:
+        fh.write(json.dumps(record) + "\n")
+    return record
 
 
 def read_runlog(path: str | os.PathLike) -> list[dict]:

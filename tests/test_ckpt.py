@@ -8,8 +8,8 @@ import numpy as np
 import pytest
 
 from repro.ckpt.checkpoint import (latest_step, load_checkpoint,
-                                   save_checkpoint)
-from repro.ckpt.elastic import StragglerPolicy, run_resumable
+                                   save_checkpoint, sweep_tmp)
+from repro.ckpt.elastic import StragglerPolicy, run_resumable, straggler_chunks
 
 
 def _tree(key):
@@ -76,6 +76,77 @@ def test_run_resumable_restores(tmp_path):
                               batch_fn=lambda i: i, async_save=False)
     assert start == 10          # resumed, not recomputed from 0
     assert int(s2["x"]) == 12
+
+
+def test_gc_never_collects_pinned_step(tmp_path):
+    """``pin=<step>`` exempts the supervisor's rollback target from GC no
+    matter how many newer checkpoints land."""
+    t = _tree(jax.random.PRNGKey(4))
+    save_checkpoint(str(tmp_path), 1, t)
+    for s in (2, 3, 4, 5, 6):
+        save_checkpoint(str(tmp_path), s, t, keep=2, pin=1)
+    kept = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert "step_000000001" in kept, kept       # pinned survives
+    assert len(kept) == 3                       # pin + newest keep=2
+    loaded, step = load_checkpoint(str(tmp_path), t, step=1)
+    assert step == 1
+
+
+def test_stale_tmp_swept_on_next_save(tmp_path):
+    """A ``step_*.tmp`` directory left by a crash mid-write is removed by
+    the next save into the same directory."""
+    stale = tmp_path / "step_000000009.tmp"
+    stale.mkdir()
+    (stale / "shard_00000.npz").write_bytes(b"partial")
+    t = _tree(jax.random.PRNGKey(5))
+    save_checkpoint(str(tmp_path), 10, t)
+    assert not stale.exists()
+    assert latest_step(str(tmp_path)) == 10
+    # sweep_tmp is also callable directly (restart hygiene)
+    stale.mkdir()
+    assert sweep_tmp(str(tmp_path)) == [str(stale)]
+    assert not stale.exists()
+
+
+def _failing_save(tmp_path, step):
+    """Async save doomed to fail: a FILE occupies the tmp dir path, so the
+    worker thread's makedirs raises."""
+    blocker = tmp_path / f"step_{step:09d}.tmp"
+    blocker.write_bytes(b"not a directory")
+    t = _tree(jax.random.PRNGKey(6))
+    h = save_checkpoint(str(tmp_path), step, t, async_=True)
+    while not h.done:          # wait for the worker without acknowledging
+        pass
+    return t, h
+
+
+def test_async_write_failure_surfaces_on_join(tmp_path):
+    _, h = _failing_save(tmp_path, 3)
+    assert h.error is not None
+    with pytest.raises(RuntimeError, match="async checkpoint write"):
+        h.join()
+    # joining acknowledged the failure: the next save is clean
+    t = _tree(jax.random.PRNGKey(7))
+    save_checkpoint(str(tmp_path / "clean"), 4, t)
+
+
+def test_async_write_failure_surfaces_on_next_save(tmp_path):
+    """An unjoined failed async write re-raises on the NEXT save so it can
+    never silently become 'no newest checkpoint'."""
+    t, h = _failing_save(tmp_path, 5)
+    with pytest.raises(RuntimeError, match="previous async checkpoint"):
+        save_checkpoint(str(tmp_path / "other"), 6, t)
+    assert h.error is not None      # still inspectable after re-raise
+
+
+def test_straggler_chunks():
+    """Post-hoc straggler flagging over a run's per-chunk wall times."""
+    walls = [1.0, 1.1, 0.9, 5.0, 1.0, 1.05]
+    assert straggler_chunks(walls) == [3]
+    # warmup (chunk 0 compiles) is never a straggler
+    assert straggler_chunks([9.0, 1.0, 1.1, 0.9, 1.0]) == []
+    # too few samples to call anyone slow
+    assert straggler_chunks([1.0, 9.0], min_samples=4) == []
 
 
 def test_straggler_policy():
