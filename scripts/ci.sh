@@ -30,6 +30,13 @@
 #                                        with zero retry recompiles, and
 #                                        a SIGKILL kill-and-resume cycle
 #                                        (<= 1 chunk lost, bitwise).
+#                                        Plus the serving smoke
+#                                        (scripts/serve_smoke.py): a
+#                                        mixed fleet through the batched
+#                                        job server at f64 with bitwise
+#                                        packed-vs-solo parity, and the
+#                                        docs link check
+#                                        (scripts/check_docs.py).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -39,6 +46,13 @@ if [[ "${1:-}" == "--smoke" ]]; then
       python scripts/engine_smoke.py
   env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
       python scripts/resilience_smoke.py
+  # serving smoke: >=6 mixed-size jobs over >=2 shape buckets at f64 -
+  # zero steady-state recompiles, packed-vs-solo bitwise parity, and a
+  # consistent per-tenant accounting ledger (scripts/serve_smoke.py)
+  env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+      python scripts/serve_smoke.py
+  # docs must not reference files that no longer exist
+  python scripts/check_docs.py
   exec env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" BENCH_SMOKE=1 \
       python -m benchmarks.run --smoke
 fi

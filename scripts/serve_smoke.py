@@ -1,0 +1,101 @@
+"""Serving smoke: the PR-8 acceptance run, at f64.
+
+Drives the batched job server (:mod:`repro.serve`) end-to-end the way CI
+wants it proven:
+
+* >= 6 mixed-size jobs across >= 2 shape buckets (two geometries from
+  ``repro.launch.serve.build_fleet``), heterogeneous (T, B) protocols;
+* ZERO steady-state recompiles after one warmup chunk per bucket,
+  asserted from the runlog's compile watchdog (the accounting replay
+  splits each bucket's chunk records into warmup vs steady);
+* every packed job's streamed observables and final state BITWISE equal
+  to the same job through a single-slot server - at f64, where a 1-ulp
+  fusion divergence cannot hide behind f32 noise;
+* per-tenant accounting totals consistent with the engine's chunk
+  records (charged + idle slot-steps == computed slot-steps).
+
+Run directly (``scripts/ci.sh --smoke`` wires it in)::
+
+    PYTHONPATH=src python scripts/serve_smoke.py
+"""
+import sys
+
+import jax
+
+# f64 before any jax arrays exist: the bitwise-parity assertion below is
+# the acceptance criterion, and it must hold at full precision (the
+# in-process test suite covers the same contract at default f32)
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np  # noqa: E402
+
+from repro.launch.serve import build_fleet  # noqa: E402
+from repro.serve import ServeConfig, SimServer  # noqa: E402
+
+
+N_JOBS = 6
+CHUNK = 10
+OBS_EVERY = 5
+
+
+def run_server(tmp, name, slots):
+    cfg = ServeConfig(runlog=f"{tmp}/{name}.jsonl", workdir=f"{tmp}/{name}",
+                      slots=slots, chunk=CHUNK)
+    server = SimServer(cfg)
+    handles = [server.submit(job)
+               for job in build_fleet(N_JOBS, CHUNK, OBS_EVERY)]
+    server.drain()
+    return server, handles
+
+
+def main() -> int:
+    import tempfile
+    tmp = tempfile.mkdtemp(prefix="serve-smoke-")
+    packed, ph = run_server(tmp, "packed", slots=2)
+    solo, sh = run_server(tmp, "solo", slots=1)
+
+    for h in ph + sh:
+        assert h.status == "done", f"{h.id}: {h.status} ({h.error})"
+    buckets = {h.bucket for h in ph}
+    assert len(buckets) >= 2, f"expected >= 2 shape buckets, got {buckets}"
+    print(f"{len(ph)} jobs done across {len(buckets)} buckets")
+
+    # f64 actually on (otherwise the parity assertion proves less)
+    spin = np.asarray(ph[0].final_state.spin)
+    assert spin.dtype == np.float64, spin.dtype
+
+    # compile watchdog: one warmup per bucket, zero steady-state compiles
+    acct = packed.accounting
+    for bid, b in sorted(acct.buckets.items()):
+        assert b["warmup_compiles"] >= 1, (bid, b)
+        assert b["steady_compiles"] == 0, (
+            f"bucket {bid} recompiled in steady state: {b}")
+        print(f"bucket {bid}: {b['chunks']} chunks, "
+              f"{b['warmup_compiles']} warmup / 0 steady compiles")
+
+    # packed-vs-solo bitwise parity at f64, streams AND final states
+    for h, g in zip(ph, sh):
+        for name, rows in g.observables.items():
+            assert np.array_equal(h.observables[name], rows), \
+                f"{h.id} {name} diverges from solo"
+        assert np.array_equal(h.times, g.times), h.id
+        for leaf in ("pos", "vel", "spin", "step"):
+            assert np.array_equal(
+                np.asarray(getattr(h.final_state, leaf)),
+                np.asarray(getattr(g.final_state, leaf))), \
+                f"{h.id} final {leaf} diverges from solo"
+    print("packed-vs-solo bitwise parity: OK (f64)")
+
+    # accounting ledger closes: charged + idle == computed slot-steps
+    assert acct.consistent(), acct.summary()
+    assert acct.charged_steps + acct.idle_steps == acct.computed_slot_steps
+    for tenant, t in sorted(acct.tenants.items()):
+        assert t["jobs_done"] == t["jobs_submitted"]
+        print(f"tenant {tenant}: {t['jobs_done']} jobs, "
+              f"{t['charged_steps']} slot-steps charged")
+    print("serve smoke: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -228,7 +228,8 @@ def save_md(directory: str, step: int, carry, key, *, keep: int = 3,
 
 
 def load_md(directory: str, carry_like, *, step: int | None = None,
-            shardings=None, strict_shapes: bool = True):
+            shardings=None, strict_shapes: bool = True,
+            key_shape: tuple = (2,)):
     """Restore (carry, key, step) saved by :func:`save_md`.
 
     ``carry_like`` supplies the pytree structure (the engine's current
@@ -236,9 +237,11 @@ def load_md(directory: str, carry_like, *, step: int | None = None,
     "key": NamedSharding}`` for sharded placement onto a device mesh.
     ``strict_shapes=False`` loads the checkpoint's own leaf shapes even
     when they differ from ``carry_like`` (the elastic-restart gather path:
-    same treedef, different mesh/grid).
+    same treedef, different mesh/grid).  ``key_shape`` is the saved run
+    key's shape: ``(2,)`` for one loop key, ``(R, 2)`` for a per-slot
+    engine's stacked key chains (see ``Engine.per_slot``).
     """
-    key_like = np.zeros((2,), np.uint32)   # structure template only
+    key_like = np.zeros(key_shape, np.uint32)   # structure template only
     tree, step = load_checkpoint(directory, {"carry": carry_like,
                                              "key": key_like},
                                  step=step, shardings=shardings,

@@ -15,6 +15,10 @@ shared across replicas or per-replica:
 Outside the knot range the endpoint values hold (clamped), so a finite
 protocol composes with an arbitrarily long run.  Duplicate knot times give
 exact step discontinuities (quenches).
+
+:class:`SlotSchedules` stacks R *independent* schedules (one per replica
+slot, each on its own clock) behind the same duck-typed ``at`` surface -
+the serving layer's per-job protocol carrier (see :mod:`repro.serve`).
 """
 from __future__ import annotations
 
@@ -60,6 +64,78 @@ def _as_knots(times, values) -> Schedule:
     if bool(np.any(np.diff(np.asarray(times)) < 0)):
         raise ValueError("knot times must be non-decreasing")
     return Schedule(times=times, values=values)
+
+
+class SlotSchedules(NamedTuple):
+    """Per-slot independent schedules with one shared knot count.
+
+    The replica-axis analogue of :class:`Schedule`, used by the serving
+    layer (:mod:`repro.serve`): slot ``i`` follows its own piecewise-linear
+    protocol ``Schedule(times[i], values[i])``, every slot padded to the
+    same knot count K (:func:`pad_schedule`) so the stack is one regular
+    array - one jit signature per shape bucket no matter which jobs occupy
+    the slots.  Duck-types as a Schedule (``at`` / ``times`` / ``values``),
+    so the engine's schedule plumbing (pytree flattening, jit-cache
+    signatures, runtime knot values) applies unchanged:
+
+        times  (R, K)              per-slot knot times [ps]
+        values (R, K) | (R, K, 3)  per-slot knot values
+
+    ``at(t)`` accepts a scalar ``t`` (all slots read one clock) or a
+    per-slot ``(R,)`` vector (each slot on its own clock - how the
+    engine's ``per_slot`` replica mode evaluates backfilled jobs that
+    started at different global steps), returning ``(R,)`` / ``(R, 3)``.
+    """
+
+    times: jax.Array   # (R, K)
+    values: jax.Array  # (R, K) or (R, K, 3)
+
+    def at(self, t) -> jax.Array:
+        """Evaluate every slot's schedule at its own time (clamped)."""
+        t = jnp.asarray(t)
+        r = self.times.shape[0]
+        tt = jnp.broadcast_to(t, (r,)) if t.ndim == 0 else t
+        return jax.vmap(lambda tm, vl, x: Schedule(tm, vl).at(x))(
+            self.times, self.values, tt)
+
+
+def pad_schedule(sched: Schedule, k: int) -> Schedule:
+    """Pad a schedule to exactly ``k`` knots by repeating the final knot.
+
+    Evaluation is preserved bitwise: for ``t`` before the last knot the
+    padded knots are never selected, and at/past it the duplicated final
+    knot forms a zero-width clamped interval whose lerp weight is exactly
+    0, so ``at`` returns ``values[-1]`` itself.  The serving layer pads
+    every job's protocol to the bucket's knot count so one compiled chunk
+    (one ``(R, K)`` signature) serves heterogeneous protocols.
+    """
+    k0 = int(sched.times.shape[0])
+    if k0 > k:
+        raise ValueError(f"schedule has {k0} knots > pad target {k}")
+    if k0 == k:
+        return sched
+    pad = k - k0
+    return Schedule(
+        times=jnp.concatenate(
+            [sched.times, jnp.repeat(sched.times[-1:], pad, axis=0)]),
+        values=jnp.concatenate(
+            [sched.values, jnp.repeat(sched.values[-1:], pad, axis=0)]))
+
+
+def stack_schedules(scheds: Sequence[Schedule],
+                    k: int | None = None) -> SlotSchedules:
+    """Stack per-slot schedules into a :class:`SlotSchedules`.
+
+    Each schedule is padded (:func:`pad_schedule`) to ``k`` knots
+    (default: the largest knot count in the stack); all values must share
+    one tail shape (all scalar or all (3,) vector)."""
+    if not scheds:
+        raise ValueError("stack_schedules needs at least one schedule")
+    if k is None:
+        k = max(int(s.times.shape[0]) for s in scheds)
+    padded = [pad_schedule(s, k) for s in scheds]
+    return SlotSchedules(times=jnp.stack([s.times for s in padded]),
+                         values=jnp.stack([s.values for s in padded]))
 
 
 def constant(value) -> Schedule:

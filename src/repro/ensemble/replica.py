@@ -69,6 +69,27 @@ def replicate(state: SpinLatticeState, n_replicas: int) -> SpinLatticeState:
         lambda x: jnp.repeat(x[None], n_replicas, axis=0), state)
 
 
+def stack_states(states) -> SpinLatticeState:
+    """Stack DISTINCT single-replica states onto a leading replica axis.
+
+    The serving layer's packing primitive: where :func:`replicate` tiles
+    one state, this lays independent jobs' states side by side so each
+    replica slot carries its own trajectory (own positions, spins, and
+    ``step`` clock).  All states must share one geometry (atom count,
+    types, box) - that is what a shape bucket guarantees
+    (:mod:`repro.serve.bucket`)."""
+    states = list(states)
+    if not states:
+        raise ValueError("stack_states needs at least one state")
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
+
+
+def unstack_state(states: SpinLatticeState, i: int) -> SpinLatticeState:
+    """Extract replica slot ``i`` as a single (unbatched) state - the
+    inverse of one :func:`stack_states` row (serving-layer job harvest)."""
+    return jax.tree_util.tree_map(lambda x: x[i], states)
+
+
 def _as_schedule(value, default) -> protocol.Schedule:
     if value is None:
         return protocol.constant(default)

@@ -170,7 +170,7 @@ def runlog_report(path: str | os.PathLike) -> str:
 
 _RESIL_EVENTS = ("fault_injected", "rollback", "retry", "degrade",
                  "degrade_restore", "recovered", "give_up",
-                 "elastic_restore")
+                 "elastic_restore", "evict")
 
 
 def _fmt_resil(e: dict) -> str:
@@ -196,6 +196,10 @@ def _fmt_resil(e: dict) -> str:
         return f"degrade: {e.get('kind')} at step {step} (no action)"
     if ev == "degrade_restore":
         return f"degrade_restore: dt back to {e.get('dt')} at step {step}"
+    if ev == "evict":
+        return (f"evict: job {e.get('job', '?')} (tenant "
+                f"{e.get('tenant', '?')}) off slot {e.get('slot', '?')} "
+                f"for {e.get('kind')} at step {step}")
     if ev == "recovered":
         return f"recovered after {e.get('attempts')} attempt(s) at step {step}"
     if ev == "give_up":

@@ -1,86 +1,145 @@
-"""Batched serving driver: prefill + autoregressive decode for any zoo arch.
+"""CLI front-end for the simulation job server (:mod:`repro.serve`).
 
-  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --smoke \
-      --batch 4 --prompt-len 32 --gen 32
+Builds a synthetic multi-tenant fleet of heterogeneous (T, B)-protocol
+jobs - mixed step budgets, two geometries (two shape buckets), constant
+holds, linear anneals, and field protocols - submits them through
+admission control, drains the server, and prints per-job statuses plus
+the per-tenant accounting replayed from the runlog:
 
-Serves synthetic prompts through the real prefill/decode paths (the same
-code the dry-run lowers at production scale): builds KV/state caches,
-prefills them token-by-token (teacher-forced write path), then greedy-
-decodes, reporting prefill and decode throughput.
+    PYTHONPATH=src python -m repro.launch.serve --smoke
+    PYTHONPATH=src python -m repro.launch.serve --jobs 12 --slots 4 \\
+        --runlog runs/serve.jsonl --report
+
+``--threaded`` exercises the background worker (submit-then-wait)
+instead of the synchronous ``drain()``.  ``--report`` renders the runlog
+through ``launch/report.py`` afterwards.  See ``docs/serving.md`` for
+the job API and operator runbook.
 """
 from __future__ import annotations
 
 import argparse
-import time
+import os
+import tempfile
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro import configs
-from repro.models import lm
-from repro.models import transformer as tfm
+from repro.core.hamiltonian import HeisenbergDMIModel
+from repro.ensemble import protocol
+from repro.md.integrator import IntegratorConfig
+from repro.md.lattice import simple_cubic
+from repro.md.state import init_state
+from repro.serve import ServeConfig, SimJob, SimServer
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen2-7b")
-    ap.add_argument("--smoke", action="store_true", default=True)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+def build_fleet(n_jobs: int, chunk: int, obs_every: int,
+                dt: float = 2e-3) -> list[SimJob]:
+    """A deterministic synthetic job mix: two geometries, two tenants,
+    four protocol shapes, step budgets cycling over 2/3/4 chunks."""
+    lat = simple_cubic()
+    # frozen_lattice: the server admits spin-dynamics jobs only (packed
+    # slots share one neighbor table - see serve.validate_job)
+    cfg = IntegratorConfig(dt=dt, spin_alpha=0.05, frozen_lattice=True,
+                           temperature=100.0)
+    geoms = [(4, 4, 4), (6, 4, 4)]
+    tenants = ["alice", "bob"]
+    jobs = []
+    for i in range(n_jobs):
+        n_cells = geoms[i % len(geoms)]
+        steps = chunk * (2 + i % 3)
+        if i % 4 == 0:
+            temp, field = 100.0, None                      # plain hold
+        elif i % 4 == 1:
+            temp = protocol.linear(0.0, steps * dt, 300.0, 50.0)
+            field = None                                   # anneal
+        elif i % 4 == 2:
+            temp, field = 100.0, np.asarray([0.0, 0.0, 5.0])
+        else:
+            temp, field = protocol.field_cooling(
+                300.0, 50.0, 10.0, t_hold=chunk * dt,
+                t_ramp=chunk * dt)                         # Fig. 9 shape
+        state = init_state(lat, n_cells, key=jax.random.PRNGKey(100 + i),
+                           temperature=100.0, spin_init="helix_x")
+        jobs.append(SimJob(
+            state=state, potential=HeisenbergDMIModel(d0=0.01), cfg=cfg,
+            masses=np.asarray(lat.masses),
+            magnetic=np.asarray(lat.moments) > 0,
+            steps=steps, temperature=temp, field=field,
+            obs_every=obs_every, seed=100 + i,
+            tenant=tenants[i % len(tenants)],
+            name=f"fleet-{i:02d}"))
+    return jobs
 
-    cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(
-        args.arch)
-    if cfg.family == "audio":
-        raise SystemExit("use the enc-dec demo in tests/ for seamless")
-    key = jax.random.PRNGKey(args.seed)
-    params = lm.init_params(cfg, key, tp=1)
-    n = sum(int(np.prod(p.shape))
-            for p in jax.tree_util.tree_leaves(params))
-    print(f"serving {cfg.name}: {n/1e6:.1f}M params, batch {args.batch}")
 
-    b = args.batch
-    total = args.prompt_len + args.gen
-    prompts = jax.random.randint(jax.random.PRNGKey(1), (b, args.prompt_len),
-                                 0, cfg.vocab)
-    caches = tfm.init_caches(cfg, b, total, jnp.float32)
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--jobs", type=int, default=8,
+                    help="fleet size (default 8)")
+    ap.add_argument("--slots", type=int, default=2,
+                    help="replica slots per packed batch")
+    ap.add_argument("--chunk", type=int, default=10,
+                    help="segment length in steps")
+    ap.add_argument("--obs-every", type=int, default=5,
+                    help="observable cadence in steps")
+    ap.add_argument("--runlog", default=None,
+                    help="runlog path (default: workdir/serve.jsonl)")
+    ap.add_argument("--workdir", default=None,
+                    help="checkpoint/working dir (default: temp dir)")
+    ap.add_argument("--threaded", action="store_true",
+                    help="background worker + wait() instead of drain()")
+    ap.add_argument("--report", action="store_true",
+                    help="render the runlog report afterwards")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small fast fleet (6 jobs, tiny geometries)")
+    args = ap.parse_args(argv)
 
-    decode = jax.jit(lambda p, c, t, pos: tfm.decode_step(cfg, p, c, t,
-                                                          pos))
+    if args.smoke:
+        args.jobs = min(args.jobs, 6)
+    workdir = args.workdir or tempfile.mkdtemp(prefix="simserve-")
+    runlog = args.runlog or os.path.join(workdir, "serve.jsonl")
+    cfg = ServeConfig(runlog=runlog, workdir=workdir, slots=args.slots,
+                      chunk=args.chunk)
+    server = SimServer(cfg)
+    fleet = build_fleet(args.jobs, args.chunk, args.obs_every)
+    print(f"submitting {len(fleet)} jobs "
+          f"({args.slots} slots, chunk {args.chunk}) -> {runlog}")
+    handles = [server.submit(job) for job in fleet]
+    n_buckets = len({h.bucket for h in handles})
+    print(f"{n_buckets} shape bucket(s)")
 
-    # prefill through the decode path (incremental cache writes)
-    t0 = time.time()
-    logits = None
-    for i in range(args.prompt_len):
-        logits, caches = decode(params, caches, prompts[:, i:i + 1],
-                                jnp.full((b,), i, jnp.int32))
-    jax.block_until_ready(logits)
-    t_pre = time.time() - t0
-    print(f"prefill: {args.prompt_len} tokens x {b} seqs in {t_pre:.2f}s "
-          f"({b*args.prompt_len/t_pre:.1f} tok/s)")
+    if args.threaded:
+        server.start()
+        for h in handles:
+            h.wait(timeout=600)
+        server.stop()
+    else:
+        server.drain()
 
-    # greedy decode
-    tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-    out = [tok]
-    t0 = time.time()
-    for i in range(args.prompt_len, total):
-        logits, caches = decode(params, caches, tok,
-                                jnp.full((b,), i, jnp.int32))
-        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-        out.append(tok)
-    jax.block_until_ready(tok)
-    t_dec = time.time() - t0
-    gen = jnp.concatenate(out, axis=1)
-    print(f"decode: {args.gen} tokens x {b} seqs in {t_dec:.2f}s "
-          f"({b*args.gen/t_dec:.1f} tok/s, "
-          f"{t_dec/args.gen*1e3:.1f} ms/token/batch)")
-    print("sample generations (token ids):")
-    for row in np.asarray(gen)[:2]:
-        print("  ", row[:16].tolist())
+    for h in handles:
+        tail = (f"{h.rows_streamed} rows"
+                if h.status == "done" else (h.error or "")[:48])
+        print(f"  {h.id} [{h.job.name}] tenant={h.tenant} "
+              f"bucket={h.bucket.id} steps={h.job.steps}: "
+              f"{h.status} ({tail})")
+
+    acct = server.accounting
+    print("accounting consistent:", acct.consistent())
+    for tenant, t in sorted(acct.tenants.items()):
+        print(f"  {tenant}: {t['jobs_done']}/{t['jobs_submitted']} done, "
+              f"{t['charged_steps']} slot-steps charged "
+              f"({t['wall_s']:.2f}s wall share)")
+    for bid, b in sorted(acct.buckets.items()):
+        print(f"  bucket {bid}: {b['chunks']} chunks, "
+              f"{b['warmup_compiles']} warmup / "
+              f"{b['steady_compiles']} steady compiles")
+
+    if args.report:
+        from repro.launch.report import runlog_report
+        print()
+        print(runlog_report(runlog))
+    bad = [h for h in handles if h.status != "done"]
+    return 1 if bad else 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

@@ -280,10 +280,59 @@ def _is_schedule(x) -> bool:
             and hasattr(x, "values"))
 
 
+class _StepValues(NamedTuple):
+    """Per-step schedule values, host-evaluated once per chunk.
+
+    ``rows[i]`` is the (temperature / field) value of in-chunk step ``i``:
+    shape (n,), (n, R), (n, 3) or (n, R, 3).  Schedules are evaluated on
+    the HOST (:func:`_host_sched_rows`) rather than inside the compiled
+    chunk because XLA:CPU's backend FMA-contracts the time/lerp arithmetic
+    differently at different batch widths (R=1 vs R=2 vectorize
+    differently), which breaks the serving layer's packed-vs-solo bitwise
+    parity by 1 ulp.  Host numpy runs one ufunc at a time - nothing fuses,
+    so every width computes identical bits.  The chunk only gathers
+    ``rows[i]``, and the jit cache now keys on the (n, ...) row shape
+    alone, not the schedule's knot count."""
+
+    rows: jax.Array
+
+
+def _host_lerp(times, values, t):
+    """Numpy mirror of ``Schedule.at`` (clamped piecewise-linear)."""
+    k = times.shape[0]
+    hi = np.clip(np.searchsorted(times, t, side="right"), 1, k - 1)
+    lo = hi - 1
+    w = np.clip((t - times[lo]) / np.maximum(times[hi] - times[lo],
+                                             np.float32(1e-30)),
+                np.float32(0.0), np.float32(1.0))
+    w = w.reshape(w.shape + (1,) * (values.ndim - 1))
+    return values[lo] + w * (values[hi] - values[lo])
+
+
+def _host_sched_rows(arg, t):
+    """Evaluate a (Slot)Schedule at host times ``t`` in pure numpy f32.
+
+    ``t`` is (n,) for a shared schedule (2-d ``times`` means a per-slot
+    SlotSchedules stack and ``t`` is the (n, R) per-slot clock matrix).
+    Separate numpy ufuncs per op: bitwise width-independent, unlike the
+    same arithmetic fused inside a jitted chunk (see :class:`_StepValues`).
+    """
+    times = np.asarray(arg.times, np.float32)
+    values = np.asarray(arg.values, np.float32)
+    t = np.asarray(t, np.float32)
+    if times.ndim == 2:
+        cols = [_host_lerp(times[r], values[r], t[:, r])
+                for r in range(times.shape[0])]
+        return np.stack(cols, axis=1)
+    return _host_lerp(times, values, t)
+
+
 def _arg_sig(x):
     """Hashable signature of a schedule argument for the chunk cache."""
     if x is None:
         return None
+    if isinstance(x, _StepValues):
+        return ("rows", tuple(x.rows.shape))
     if _is_schedule(x):
         return ("sched", tuple(x.values.shape))
     return ("const", tuple(jnp.shape(x)))
@@ -304,15 +353,26 @@ def _permute_atoms(state: SpinLatticeState, order) -> SpinLatticeState:
 _NBH_AXES = Neighborhood(idx=None, mask=None, tj=None, dr=0)
 
 
-def _scan_chunk(body, carry, key, n: int, emit, final_obs):
+def _scan_chunk(body, carry, key, n: int, emit, final_obs,
+                slot_keys: bool = False):
     """The shared scan driver of every plan's chunk.
 
     ``body(carry, xs)`` consumes xs = (step key, in-chunk index[, emit
     flag]).  With ``emit`` (static in-chunk offsets) the per-step ys are
     gathered to the emitted rows; otherwise ``final_obs(carry)`` runs once
     after the scan.  Returns (carry, observable rows).
+
+    ``slot_keys=True`` (the replica plan's ``per_slot`` mode): ``key`` is a
+    stacked (R, 2) array of independent per-slot streams, split per step
+    into (n, R, 2) rows - slot ``i`` consumes exactly the key sequence a
+    solo run seeded with its key would, which is what makes a packed slot
+    bitwise-reproducible against a solo run of the same job.
     """
-    keys = jax.random.split(key, n)
+    if slot_keys:
+        keys = jax.vmap(lambda kk: jax.random.split(kk, n),
+                        out_axes=1)(key)
+    else:
+        keys = jax.random.split(key, n)
     ivec = jnp.arange(n, dtype=jnp.float32)
     if emit is None:
         carry, _ = jax.lax.scan(body, carry, (keys, ivec))
@@ -351,6 +411,11 @@ class Engine:
     observables: tuple = ("energy", "kinetic", "magnetization", "charge")
     obs_every: int | None = None       # None -> emit at chunk boundaries;
                                        # k -> in-scan emit every k steps
+    per_slot: bool = False             # Replicated plan only: treat each
+                                       # replica slot as an INDEPENDENT job
+                                       # (own RNG stream, own clock, own
+                                       # schedule row) - the serving
+                                       # layer's packing mode (repro.serve)
     capacity: int = 64                 # per-atom neighbor capacity M
     skin: float = 0.5
     use_cell_list: bool = False        # flat-plan table construction
@@ -369,10 +434,19 @@ class Engine:
                                     # supervisor's rollback target)
         self._fault_injector = None  # resilience hook: (engine, carry,
                                      # n) -> carry at each chunk boundary
+        self.evict_slot_hook = None  # serving hook: (HealthError) -> info
+                                     # dict; the supervisor calls it to
+                                     # evict one poisoned per-slot job
+                                     # instead of degrading the whole batch
+        self.run_tags = {}           # extra run_start header fields (the
+                                     # serving layer tags segments with
+                                     # their bucket id for accounting)
         self.plan = as_plan(self.plan)
         self.observables = _check_names(self.observables)
         if self.obs_every is not None and self.obs_every < 1:
             raise ValueError("obs_every must be >= 1")
+        if self.per_slot and not isinstance(self.plan, Replicated):
+            raise ValueError("per_slot=True requires the Replicated plan")
         if isinstance(self.plan, SingleDevice):
             if not hasattr(self.potential, "compute"):
                 raise ValueError("the flat engine plan requires a potential "
@@ -446,32 +520,77 @@ class Engine:
 
     def _value_now(self, arg, vec: bool):
         """Concrete schedule-argument value at the carry's current time
-        (host-side; used for carry (re)initialization)."""
+        (host-side; used for carry (re)initialization).  In ``per_slot``
+        mode each slot reads its own clock (its own ``states.step`` row),
+        so backfilled jobs that started at different global steps get
+        their own schedule value."""
         if arg is None:
             return None
         if _is_schedule(arg):
-            v = arg.at(jnp.asarray(self._step_now(), jnp.float32)
-                       * self.cfg.dt)
+            if self.per_slot:
+                c = getattr(self, "_carry", None)
+                steps = (c.states.step if c is not None else
+                         jnp.asarray(self.state.step).reshape(-1))
+                v = arg.at(steps.astype(jnp.float32) * self.cfg.dt)
+            else:
+                v = arg.at(jnp.asarray(self._step_now(), jnp.float32)
+                           * self.cfg.dt)
             if self.replicas:
                 v = jnp.broadcast_to(
                     v, (self.replicas, 3) if vec else (self.replicas,))
             return v
         return arg
 
-    def _make_eval_args(self, r_local: int):
-        """In-graph per-step schedule evaluation: (t, targ, farg) ->
-        (temperature, field) with replica broadcasting.  ``t`` is the
-        chunk-anchored time ``t0 + i*dt`` (f32), the same arithmetic a
-        host-side vectorized ``schedule.at(t0 + arange(n)*dt)`` performs -
-        so in-scan protocol evaluation is bitwise-reproducible against
-        chunk-precomputed references."""
+    def _chunk_arg(self, arg, carry, n: int):
+        """Lower a schedule argument to this chunk's :class:`_StepValues`.
 
-        def eval_args(t, targ, farg):
+        Called once per chunk dispatch with the live carry: builds the
+        chunk's step-time vector ``t0 + arange(n)*dt`` on the host (per
+        slot in ``per_slot`` mode, where every slot keeps its own clock)
+        and evaluates the schedule there in pure numpy.  Keeping this
+        arithmetic out of the compiled chunk is what makes schedule-driven
+        runs bitwise width-independent - XLA's backend FMA-contracts the
+        fused time/lerp chain differently at different replica counts (see
+        :class:`_StepValues`).  None and constants pass through untouched.
+        """
+        if arg is None or isinstance(arg, _StepValues) \
+                or not _is_schedule(arg):
+            return arg
+        dt = np.float32(self.cfg.dt)
+        ivec = np.arange(n, dtype=np.float32) * dt
+        if isinstance(self.plan, Replicated):
+            steps = np.asarray(carry.states.step)
+            t0 = (steps.astype(np.float32) * dt if self.per_slot
+                  else np.float32(steps[0]) * dt)
+        elif isinstance(self.plan, Sharded):
+            t0 = np.float32(self._step_now()) * dt
+        else:
+            t0 = np.float32(np.asarray(carry.state.step)) * dt
+        t = (t0[None, :] + ivec[:, None] if getattr(t0, "ndim", 0)
+             else t0 + ivec)
+        return _StepValues(rows=jnp.asarray(_host_sched_rows(arg, t)))
+
+    def _make_eval_args(self, r_local: int):
+        """Per-step schedule-argument lookup: (t0, i, targ, farg) ->
+        (temperature, field) with replica broadcasting.  Schedule args
+        arrive as :class:`_StepValues` (host-evaluated per chunk by
+        :meth:`_chunk_arg` - see there for why evaluation cannot live
+        inside the compiled chunk) and are gathered at the in-chunk step
+        index; constants pass through.  The in-graph ``schedule.at``
+        fallback serves direct ``chunk`` callers that skip the run loop."""
+        dt = self.cfg.dt
+
+        def eval_args(t0, i, targ, farg):
 
             def ev(a, vec):
                 if a is None:
                     return None
-                v = a.at(t) if _is_schedule(a) else a
+                if isinstance(a, _StepValues):
+                    v = a.rows[jnp.asarray(i, jnp.int32)]
+                elif _is_schedule(a):
+                    v = a.at(t0 + i * dt)
+                else:
+                    v = a
                 if r_local:
                     v = jnp.broadcast_to(jnp.asarray(v),
                                          (r_local, 3) if vec else (r_local,))
@@ -565,7 +684,7 @@ class Engine:
 
             def body(c, xs):
                 (k, i, flag) = xs if emit is not None else (*xs, None)
-                temp, field = eval_args(t0 + i * dt, targ, farg)
+                temp, field = eval_args(t0, i, targ, farg)
 
                 def do_rebuild(c):
                     st, ff, tab, nbh, perm = rebuild(c.state, c.perm, field)
@@ -665,6 +784,7 @@ class Engine:
         potential = self.potential
         skin, dt = self.skin, self.cfg.dt
         masses, magnetic = self.masses, self.magnetic
+        per_slot = self.per_slot
 
         build, _, _ = make_table_builder(box0, self.cutoff, self.capacity,
                                          self.cell_capacity, skin,
@@ -724,17 +844,31 @@ class Engine:
             st, ffs = c.states, c.ffs
             drift = (ffs.energy + vkin(st)) - etot0     # (R,)
             mag = magnetic[jnp.maximum(st.types, 0)]    # (R, N)
-            return {
+            h = {
                 # the max-magnitude replica's signed drift
                 "e_drift": drift[jnp.argmax(jnp.abs(drift))],
                 "spin_dev": spin_norm_dev(st.spin, mag),
                 "nonfinite": nonfinite_count(st.pos, ffs.force, st.spin),
                 "nbr_occ": occupancy_fraction(c.table.mask),
             }
+            if per_slot:
+                # per-slot attribution vectors: the health check gates on
+                # the scalars above; these ride along in HealthError's
+                # signals so the serving layer can pin a failure on one
+                # slot (supervisor.attribute_slot)
+                h["slot_nonfinite"] = jax.vmap(
+                    lambda p, f, s: nonfinite_count(p, f, s))(
+                        st.pos, ffs.force, st.spin)
+                h["slot_e_drift"] = drift
+                h["slot_spin_dev"] = jax.vmap(spin_norm_dev)(st.spin, mag)
+            return h
 
         @partial(jax.jit, static_argnames=("n", "emit"))
         def chunk(carry: ReplicaCarry, key, targ, farg, n: int, emit):
-            t0 = carry.states.step[0].astype(jnp.float32) * dt
+            # per_slot: every slot keeps its own clock (R,) so backfilled
+            # jobs evaluate their schedules at their own elapsed time
+            t0 = (carry.states.step.astype(jnp.float32) * dt if per_slot
+                  else carry.states.step[0].astype(jnp.float32) * dt)
             etot0 = carry.ffs.energy + vkin(carry.states)
             obs_zero = (None if emit is None else jax.tree_util.tree_map(
                 lambda s: jnp.zeros(s.shape, s.dtype),
@@ -742,7 +876,7 @@ class Engine:
 
             def body(c, xs):
                 (k, i, flag) = xs if emit is not None else (*xs, None)
-                temp, field = eval_args(t0 + i * dt, targ, farg)
+                temp, field = eval_args(t0, i, targ, farg)
                 t_ax = None if temp is None else 0
                 f_ax = None if field is None else 0
                 vstep = jax.vmap(step, in_axes=(0, 0, _NBH_AXES, 0, t_ax,
@@ -757,8 +891,11 @@ class Engine:
                     lambda p: needs_rebuild(c.table, p, box0, skin))(
                         c.states.pos))
                 c = jax.lax.cond(trip, do_rebuild, lambda c: c, c)
-                keys = jax.vmap(lambda i: jax.random.fold_in(k, i))(
-                    jnp.arange(r))
+                # per_slot: k is already a (R, 2) stack of independent
+                # per-slot keys (see _scan_chunk slot_keys) - a job's
+                # stream must not depend on which slot it landed in
+                keys = k if per_slot else jax.vmap(
+                    lambda i: jax.random.fold_in(k, i))(jnp.arange(r))
                 with phase("integrate"):
                     states, ffs, nbh = vstep(c.states, c.ffs, c.nbh, keys,
                                              temp, field)
@@ -770,7 +907,8 @@ class Engine:
                 return c, ys
 
             carry, obs = _scan_chunk(body, carry, key, n, emit,
-                                     lambda c: vobserve(c.states, c.ffs))
+                                     lambda c: vobserve(c.states, c.ffs),
+                                     slot_keys=per_slot)
             return carry, obs, health_of(carry, etot0)
 
         self._chunk_fn = chunk
@@ -779,18 +917,23 @@ class Engine:
         self._box0, self._types0 = box0, types0
 
         # initial shared table + blocks + forces at the engine field's
-        # current value (None evaluates without the Zeeman term - same
-        # numbers as a zero field)
+        # current value.  Forces are seeded through the same jitted row
+        # path write_slots / resync use (zeros stand in for None - same
+        # numbers as skipping the Zeeman term): the eager op-by-op vmap
+        # FMA-contracts differently from the fused program, and a 1-ulp
+        # seed difference would break seat-vs-backfill bitwise parity.
         f0 = self._value_now(self._norm_arg(self.field, vec=True), vec=True)
         if self.table is not None:
             nbh = shared_blocks(self.table, self.state.pos)
-            f_ax = None if f0 is None else 0
-            ffs = jax.vmap(
-                lambda d, s, f: compute_ff(nbh._replace(dr=d), s, types0, f),
-                in_axes=(0, 0, f_ax))(nbh.dr, self.state.spin, f0)
             table = self.table
         else:
-            table, nbh, ffs = build_shared(self.state, f0)
+            with phase("rebuild"):
+                table = build(reference_pos(self.state), box0)
+                nbh = shared_blocks(table, self.state.pos)
+        if f0 is None:
+            f0 = jnp.zeros((self.plan.replicas, 3), self.state.pos.dtype)
+        ffs = self._vcompute(nbh.dr, self.state.spin,
+                             self._replica_put(f0), nbh)
         self._carry = ReplicaCarry(self.state, ffs, table, nbh,
                                    jnp.asarray(0, jnp.int32))
         self._sync_observation()
@@ -867,6 +1010,64 @@ class Engine:
         self._ff = c.ffs
         self.table = c.table
         self._obs_state = self.state
+
+    def write_slots(self, slots, states, *, field=_UNSET):
+        """Surgically (re)write replica slots with new job states
+        (Replicated plan; the serving layer's backfill hook).
+
+        ``slots`` is a sequence of slot indices and ``states`` the
+        matching replica-stacked ``(k, N, ...)`` :class:`SpinLatticeState`
+        (see :func:`repro.ensemble.replica.stack_states`).  Only the named
+        slots change: their rows are scattered into the carry, their
+        ``dr`` blocks refreshed against the EXISTING shared table (no
+        rebuild - same-bucket jobs share one crystalline reference), and
+        their forces recomputed at ``field`` evaluated on each written
+        slot's own clock (``states.step``).  Untouched slots keep their
+        exact bits, so batch-mates' trajectories are unaffected by a
+        backfill between chunks.
+
+        ``field`` defaults to the engine-level field; the serving packer
+        passes its current per-slot stack
+        (:class:`repro.ensemble.protocol.SlotSchedules`) so a freshly
+        seated job sees its own protocol row.
+        """
+        if not isinstance(self.plan, Replicated):
+            raise ValueError("write_slots requires the Replicated plan")
+        idx = jnp.asarray(list(slots), jnp.int32)
+        if idx.ndim != 1 or idx.shape[0] == 0:
+            raise ValueError("slots must be a non-empty index sequence")
+        c = self._carry
+        new_states = jax.tree_util.tree_map(
+            lambda cur, row: cur.at[idx].set(row.astype(cur.dtype)),
+            c.states, states)
+        dr_rows = jax.vmap(
+            lambda p: refresh_dr(c.nbh, p, self._box0).dr)(
+                new_states.pos[idx])
+        nbh = c.nbh._replace(dr=c.nbh.dr.at[idx].set(dr_rows))
+        farg = self._norm_arg(self.field if field is _UNSET else field,
+                              vec=True)
+        if farg is None:
+            # None evaluates without the Zeeman term - same numbers as a
+            # zero field (the batched force path needs an array)
+            f_rows = jnp.zeros((idx.shape[0], 3), new_states.pos.dtype)
+        elif _is_schedule(farg):
+            t_rows = (new_states.step[idx].astype(jnp.float32)
+                      * self.cfg.dt)
+            if getattr(farg.times, "ndim", 1) == 2:   # per-slot stack
+                f_rows = type(farg)(times=farg.times[idx],
+                                    values=farg.values[idx]).at(t_rows)
+            else:
+                f_rows = farg.at(t_rows)
+            f_rows = jnp.broadcast_to(jnp.asarray(f_rows),
+                                      (idx.shape[0], 3))
+        else:
+            f_rows = jnp.asarray(farg)[idx]
+        ffs_rows = self._vcompute(dr_rows, new_states.spin[idx],
+                                  f_rows, c.nbh._replace(dr=dr_rows))
+        ffs = jax.tree_util.tree_map(
+            lambda cur, row: cur.at[idx].set(row), c.ffs, ffs_rows)
+        self._carry = c._replace(states=new_states, nbh=nbh, ffs=ffs)
+        self._sync_observation()
 
     # ==================================================================
     # sharded domain plan
@@ -1080,7 +1281,7 @@ class Engine:
 
             def body(c, xs):
                 (k, i, flag) = xs if emit is not None else (*xs, None)
-                temp, field = eval_args(t0 + i * dt, targ, farg)
+                temp, field = eval_args(t0, i, targ, farg)
                 t_ax = 0 if temp is not None else None
                 f_ax = 0 if field is not None else None
                 vstep = vm(step, in_axes=(state_ax, 0, nbh_ax, 0, t_ax,
@@ -1141,6 +1342,10 @@ class Engine:
             """PartitionSpec tree for a schedule argument."""
             if a is None:
                 return None
+            if isinstance(a, _StepValues):
+                per_rep = a.rows.ndim == (3 if vec else 2)
+                return _StepValues(rows=P(None, lead) if per_rep
+                                   and lead is not None else P())
             if _is_schedule(a):
                 per_rep = a.values.ndim == (3 if vec else 2)
                 vspec = (P(None, lead) if per_rep and lead is not None
@@ -1363,6 +1568,16 @@ class Engine:
         perfetto trace.  Health signals are computed on every run either
         way and land in ``self.trace.health``; only the checking and
         persistence are opt-in.
+
+        ``key`` is a single ``(2,)`` PRNG key - except on a ``per_slot``
+        Replicated plan, where it must be a per-slot ``(R, 2)`` stack:
+        each slot owns an independent RNG stream (split per chunk via
+        ``vmap(random.split)``), its own schedule clock (derived from its
+        ``states.step`` row), and its own health signals, which is what
+        lets the serving layer pack and backfill jobs whose solo
+        trajectories must be reproduced bitwise.  Schedules in per-slot
+        mode may be :class:`~repro.ensemble.protocol.SlotSchedules`
+        stacks (one knot row per slot).
         """
         tel = as_telemetry(telemetry)
         targ = self._norm_arg(
@@ -1404,6 +1619,24 @@ class Engine:
             session.finish(status="ok")
         return self.state
 
+    def _split_key(self, key):
+        """Advance the loop RNG one chunk: ``(next_key, chunk_key)``.
+
+        In ``per_slot`` mode ``key`` is a stacked ``(R, 2)`` array of
+        independent per-slot keys (one stream per packed job) and both
+        returns keep that shape - each slot's chain advances exactly as a
+        solo run's scalar chain would, so a job's trajectory is bitwise
+        independent of its batch-mates."""
+        if self.per_slot:
+            key = jnp.asarray(key)
+            if key.ndim != 2 or key.shape != (self.plan.replicas, 2):
+                raise ValueError(
+                    f"per_slot run() needs a ({self.plan.replicas}, 2) "
+                    f"stacked key, got shape {key.shape}")
+            pair = jax.vmap(lambda kk: jax.random.split(kk))(key)
+            return pair[:, 0], pair[:, 1]
+        return jax.random.split(key)
+
     def _run_loop(self, n_steps, key, chunk, targ, farg, callback,
                   checkpoint_dir, checkpoint_every, tel, session) -> None:
         carry = self._carry
@@ -1423,29 +1656,38 @@ class Engine:
                 # sync so step accounting sees the injected carry
                 carry = self._fault_injector(self, carry, n)
                 self._carry = carry
-            key, sub = jax.random.split(key)
+            key, sub = self._split_key(key)
             if isinstance(self.plan, Replicated):
                 sub = self._replica_put(sub)
+            # schedules lower to host-evaluated per-step rows HERE, with
+            # the live carry's clock(s) - see _chunk_arg for why this
+            # cannot happen inside the compiled chunk
+            targ_c = self._chunk_arg(targ, carry, n)
+            farg_c = self._chunk_arg(farg, carry, n)
             t_chunk = time.perf_counter()
             with self._halo:     # run-scoped ledger catches chunk traces
                 if isinstance(self.plan, Sharded):
-                    fn = self._chunk_for(n, emit, targ, farg)
+                    fn = self._chunk_for(n, emit, targ_c, farg_c)
                     args = [carry, sub]
-                    if targ is not None:
-                        args.append(targ)
-                    if farg is not None:
-                        args.append(farg)
+                    if targ_c is not None:
+                        args.append(targ_c)
+                    if farg_c is not None:
+                        args.append(farg_c)
                     carry, obs, health = fn(*args)
                 else:
-                    carry, obs, health = self._chunk_fn(carry, sub, targ,
-                                                        farg, n, emit)
+                    carry, obs, health = self._chunk_fn(carry, sub, targ_c,
+                                                        farg_c, n, emit)
             if emit is None:
                 times.append(t0 + (done + n) * self.cfg.dt)
             else:
                 times.extend(t0 + (done + i + 1) * self.cfg.dt
                              for i in emit)
             rows.append(jax.tree_util.tree_map(np.asarray, obs))
-            h_host = {k: np.asarray(v).item() for k, v in health.items()}
+            # per_slot health carries (R,) attribution vectors alongside
+            # the gating scalars - keep vectors as lists (JSON-able)
+            h_host = {k: (np.asarray(v).tolist() if np.asarray(v).ndim
+                          else np.asarray(v).item())
+                      for k, v in health.items()}
             hrows.append(h_host)
             wall = time.perf_counter() - t_chunk  # np.asarray blocked above
             done += n
@@ -1540,6 +1782,9 @@ class Engine:
                 "dt_ps": float(self.cfg.dt), "replicas": self.replicas,
                 "observables": list(self.observables),
                 "potential": type(self.potential).__name__}
+        if self.per_slot:
+            info["per_slot"] = True
+        info.update(getattr(self, "run_tags", {}) or {})
         if isinstance(self.plan, Sharded):
             rp = self._rplan
             info["mesh"] = {a: int(rp.mesh.shape[a])
@@ -1584,8 +1829,10 @@ class Engine:
         if plan is not None:
             return self._restore_elastic(directory, step, plan)
         from repro.ckpt.checkpoint import load_md
+        key_shape = ((self.plan.replicas, 2) if self.per_slot else (2,))
         carry, key, _ = load_md(directory, self._carry, step=step,
-                                shardings=self._carry_shardings())
+                                shardings=self._carry_shardings(),
+                                key_shape=key_shape)
         self._carry = carry
         self._sync_observation()
         # hand the key back the way run() receives it: an uncommitted

@@ -24,6 +24,14 @@ Every rollback / retry / degrade / give-up / elastic-restore appends a
 structured event record to the telemetry runlog (``launch/report.py``
 renders them), and retry segments re-open the runlog in append mode so
 one file tells the whole story.
+
+When the engine carries an ``evict_slot_hook`` (the serving layer's
+per-slot batches, :mod:`repro.serve`), the ladder gains a rung BELOW
+degradation: the failing chunk's per-slot health signals
+(:func:`attribute_slot`) pin the fault on one replica slot, the hook
+evicts that slot's job, and the batch retries from the rollback
+checkpoint with its healthy batch-mates untouched - one poisoned job
+never costs the whole batch its dt or its progress.
 """
 from __future__ import annotations
 
@@ -34,6 +42,43 @@ from repro.telemetry import HealthError, Telemetry, as_telemetry
 from repro.telemetry.runlog import append_event
 
 _TRANSIENT = ("nonfinite", "drift", "spin")
+
+# HealthError.kind -> the per-slot signal vector that attributes it
+_SLOT_SIGNALS = {"nonfinite": "slot_nonfinite",
+                 "drift": "slot_e_drift",
+                 "spin": "slot_spin_dev"}
+
+
+def attribute_slot(signals: dict, kind: str | None = None) -> int | None:
+    """Pin a chunk failure on one replica slot from its health signals.
+
+    ``signals`` is ``HealthError.signals`` from a ``per_slot`` engine
+    chunk, which carries per-slot attribution vectors
+    (``slot_nonfinite`` / ``slot_e_drift`` / ``slot_spin_dev``) alongside
+    the gating scalars.  The vector matching ``kind`` is consulted first
+    (nonfinite count, else largest |signal|); with no kind, vectors are
+    tried in severity order.  Returns the slot index, or None when the
+    signals carry no per-slot vector (a non-per_slot engine, or an
+    occupancy-class failure that is not attributable to one slot)."""
+    import numpy as np
+
+    order = [kind] if kind in _SLOT_SIGNALS else list(_SLOT_SIGNALS)
+    for k in order:
+        vec = signals.get(_SLOT_SIGNALS[k])
+        if vec is None:
+            continue
+        v = np.asarray(vec, dtype=np.float64)
+        if v.ndim != 1 or v.size == 0:
+            continue
+        if k == "nonfinite":
+            if np.nanmax(v) > 0 or np.any(~np.isfinite(v)):
+                bad = ~np.isfinite(v)
+                return int(np.argmax(np.where(bad, np.inf, v)))
+            continue
+        v = np.where(np.isfinite(v), np.abs(v), np.inf)
+        if np.max(v) > 0:
+            return int(np.argmax(v))
+    return None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,7 +122,18 @@ class Supervisor:
         first step so even a chunk-0 fault has a rollback target.  For the
         zero-recompile retry path keep ``n_steps`` a multiple of ``chunk``
         and checkpoints chunk-aligned (the defaults do).
-        """
+
+        A :class:`~repro.telemetry.monitor.HealthError` rolls the engine
+        back to the last-good checkpoint and retries (up to
+        ``max_retries``).  When one failure class repeats
+        ``degrade_after`` times, the degradation ladder engages: first
+        the serving rung - if the engine exposes ``evict_slot_hook`` and
+        the per-slot signals attribute the failure to a single slot,
+        only that job is evicted and its batch-mates continue untouched -
+        then capacity growth for ``overflow``, then a bounded
+        reduced-``dt`` span for transient kinds.  Every rung writes a
+        runlog event (``evict`` / ``degrade`` / ``degrade_restore``).
+"""
         cfg = self.config
         tel = as_telemetry(telemetry)
         log_path = self.runlog if self.runlog is not None else (
@@ -122,7 +178,8 @@ class Supervisor:
                 if same_count >= cfg.degrade_after:
                     key = self._degrade(engine, kind, key, chunk,
                                         checkpoint_dir, checkpoint_every,
-                                        seg_tel, target, log_path, run_kw)
+                                        seg_tel, target, log_path, run_kw,
+                                        err=err)
                     same_count = 0
                 self._event(log_path, "retry", attempt=attempts,
                             kind=kind, step=engine._step_now(),
@@ -134,10 +191,21 @@ class Supervisor:
 
     # ------------------------------------------------------------------
     def _degrade(self, engine, kind, key, chunk, checkpoint_dir,
-                 checkpoint_every, seg_tel, target, log_path, run_kw):
+                 checkpoint_every, seg_tel, target, log_path, run_kw,
+                 err=None):
         """Climb one rung of the degradation ladder; returns the loop key
         to continue with."""
         cfg = self.config
+        hook = getattr(engine, "evict_slot_hook", None)
+        if hook is not None and err is not None:
+            # serving-layer rung: evict the one poisoned slot instead of
+            # degrading the whole batch (the hook returns None when the
+            # failure is not attributable to a single slot)
+            info = hook(err)
+            if info:
+                self._event(log_path, "evict", kind=kind,
+                            step=engine._step_now(), **info)
+                return key
         if kind == "overflow":
             cap = int(engine._rplan.dspec.capacity)
             new_cap = max(int(cap * cfg.capacity_factor), cap + 1)

@@ -1,0 +1,243 @@
+"""Simulation-as-a-service: a batched job engine in front of the Engine.
+
+The paper's workload at service scale is not one giant run but a
+firehose of small heterogeneous (T, B)-protocol jobs.  This package
+turns the unified Engine's replica axis into a multi-tenant batch
+server:
+
+* :mod:`repro.serve.queue` - :class:`SimJob` requests and streaming
+  :class:`JobHandle`\\ s;
+* :mod:`repro.serve.bucket` - shape-bucketing: jobs that may share one
+  compiled chunk map to one :class:`BucketKey`;
+* :mod:`repro.serve.pack` - the packer: one per-slot Replicated Engine
+  per bucket, continuous batching via slot backfill, supervised
+  segments with poisoned-job eviction;
+* :mod:`repro.serve.accounting` - per-tenant accounting and admission
+  control over the PR 6 telemetry runlog (the single metrics path).
+
+Entry point::
+
+    cfg = ServeConfig(runlog="runs/serve.jsonl", workdir="runs/serve")
+    server = SimServer(cfg)
+    h = server.submit(SimJob(state=st, potential=pot, cfg=icfg,
+                             masses=m, magnetic=mag, steps=100))
+    server.drain()                  # or server.start() for a worker
+    h.wait(); h.observables         # streamed rows, job clock
+
+See ``docs/serving.md`` for the job API and the operator runbook.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import os
+import threading
+
+import numpy as np
+
+from repro.serve.accounting import (Accounting, AdmissionError, TenantQuota)
+from repro.serve.bucket import BucketKey, bucket_key
+from repro.serve.pack import BucketRuntime
+from repro.serve.queue import (DONE, EVICTED, FAILED, QUEUED, RUNNING,
+                               JobHandle, JobQueue, SimJob)
+from repro.telemetry import HealthConfig
+from repro.telemetry.runlog import append_event
+from repro.resilience.supervisor import SupervisorConfig
+
+__all__ = [
+    "ServeConfig", "SimServer", "SimJob", "JobHandle", "JobQueue",
+    "BucketKey", "bucket_key", "BucketRuntime", "Accounting",
+    "AdmissionError", "TenantQuota", "validate_job",
+    "QUEUED", "RUNNING", "DONE", "FAILED", "EVICTED",
+]
+
+
+def _default_supervisor() -> SupervisorConfig:
+    # degrade_after=1: the first repeat of a failure class already tries
+    # slot eviction (the serving rung); retries bound evictions per batch
+    return SupervisorConfig(degrade_after=1, max_retries=3)
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    """Server-wide configuration (per-job knobs live on :class:`SimJob`).
+
+    ``chunk`` is the segment length: the batch advances in whole chunks
+    and jobs are admitted only if ``obs_every`` divides it.  ``slots`` is
+    the replica-axis width of every packed batch; ``schedule_knots`` the
+    knot count K every job protocol is padded to (jobs with more knots
+    are refused).  ``runlog`` is truncated at server construction - one
+    file is the flight record AND the accounting ledger for the server's
+    lifetime.  ``quotas`` maps tenant name to :class:`TenantQuota`.
+    """
+
+    runlog: str
+    workdir: str
+    slots: int = 2
+    chunk: int = 10
+    schedule_knots: int = 8
+    health: HealthConfig | None = dataclasses.field(
+        default_factory=HealthConfig)
+    supervised: bool = True
+    supervisor: SupervisorConfig = dataclasses.field(
+        default_factory=_default_supervisor)
+    quotas: dict = dataclasses.field(default_factory=dict)
+
+
+def validate_job(job: SimJob, cfg: ServeConfig) -> None:
+    """Admission checks that don't need a quota ledger; raises
+    :class:`AdmissionError`.
+
+    Deliberately does NOT inspect schedule values: a finite-state job
+    with a poisoned protocol is admitted and handled at runtime by the
+    health gate + supervisor eviction (the door checks the request is
+    well-formed, the batch protects itself from what runs)."""
+    if job.steps < 1:
+        raise AdmissionError(f"steps must be >= 1, got {job.steps}")
+    if job.obs_every < 1 or job.steps % job.obs_every:
+        raise AdmissionError(
+            f"steps ({job.steps}) must be a positive multiple of "
+            f"obs_every ({job.obs_every})")
+    if cfg.chunk % job.obs_every:
+        raise AdmissionError(
+            f"obs_every ({job.obs_every}) must divide the server chunk "
+            f"({cfg.chunk})")
+    pos = np.asarray(job.state.pos)
+    if pos.ndim != 2:
+        raise AdmissionError(
+            f"job state must be unbatched (N, 3), got pos {pos.shape}")
+    for name in ("pos", "vel", "spin"):
+        if not np.all(np.isfinite(np.asarray(getattr(job.state, name)))):
+            raise AdmissionError(f"non-finite values in state.{name}")
+    for sched, label in ((job.temperature, "temperature"),
+                         (job.field, "field")):
+        knots = getattr(getattr(sched, "times", None), "shape", None)
+        if knots is not None and int(knots[0]) > cfg.schedule_knots:
+            raise AdmissionError(
+                f"{label} schedule has {int(knots[0])} knots > server "
+                f"limit {cfg.schedule_knots}")
+    if not getattr(job.cfg, "frozen_lattice", False):
+        raise AdmissionError(
+            "serving requires frozen_lattice=True (spin dynamics on the "
+            "crystalline reference): packed slots share one neighbor "
+            "table, and lattice motion would couple rebuild timing "
+            "across batch-mates, breaking the packed-vs-solo parity "
+            "contract")
+    if not hasattr(job.potential, "compute"):
+        raise AdmissionError("potential needs the gather-once .compute() "
+                             "surface")
+
+
+class SimServer:
+    """The batched simulation job server (see package doc).
+
+    ``submit`` validates, meters, buckets, and enqueues a job, returning
+    its :class:`JobHandle`.  ``drain()`` runs every bucket to completion
+    on the calling thread (deterministic round-robin, one segment per
+    bucket per pass); ``start()``/``stop()`` run the same loop on one
+    background worker thread instead.  ``accounting`` replays the runlog
+    into per-tenant totals at call time.
+    """
+
+    def __init__(self, cfg: ServeConfig):
+        self.cfg = cfg
+        os.makedirs(cfg.workdir, exist_ok=True)
+        parent = os.path.dirname(str(cfg.runlog))
+        if parent:
+            os.makedirs(parent, exist_ok=True)
+        open(cfg.runlog, "w").close()   # the server's ledger starts here
+        self.buckets: dict[BucketKey, BucketRuntime] = {}
+        self.handles: list[JobHandle] = []
+        self._ids = itertools.count()
+        self._lock = threading.Lock()       # submit vs worker
+        self._accepted: dict[str, dict] = {}   # tenant -> jobs/steps
+        self._thread: threading.Thread | None = None
+        self._stop = threading.Event()
+
+    # ------------------------------------------------------------------
+    def _check_quota(self, job: SimJob) -> None:
+        quota = self.cfg.quotas.get(job.tenant)
+        used = self._accepted.setdefault(job.tenant,
+                                         {"jobs": 0, "steps": 0})
+        if quota is None:
+            return
+        if (quota.max_jobs is not None
+                and used["jobs"] + 1 > quota.max_jobs):
+            raise AdmissionError(
+                f"tenant {job.tenant!r} over job quota "
+                f"({used['jobs']}/{quota.max_jobs})")
+        if (quota.max_steps is not None
+                and used["steps"] + job.steps > quota.max_steps):
+            raise AdmissionError(
+                f"tenant {job.tenant!r} over step quota "
+                f"({used['steps']} + {job.steps} > {quota.max_steps})")
+
+    def submit(self, job: SimJob) -> JobHandle:
+        """Admit one job: validate, meter, bucket, enqueue."""
+        validate_job(job, self.cfg)
+        with self._lock:
+            self._check_quota(job)
+            key = bucket_key(job, self.cfg)
+            handle = JobHandle(job, f"job-{next(self._ids):03d}",
+                               bucket=key)
+            used = self._accepted[job.tenant]
+            used["jobs"] += 1
+            used["steps"] += job.steps
+            rt = self.buckets.get(key)
+            if rt is None:
+                rt = self.buckets[key] = BucketRuntime(key, self.cfg)
+            append_event(self.cfg.runlog, "job_submit", job=handle.id,
+                         tenant=job.tenant, bucket=key.id,
+                         steps=job.steps, name=job.name)
+            rt.submit(handle)
+            self.handles.append(handle)
+        return handle
+
+    # ------------------------------------------------------------------
+    def _tick(self) -> bool:
+        """One round-robin pass: each bucket with work advances one
+        segment.  Returns True if anything ran."""
+        with self._lock:
+            runtimes = list(self.buckets.values())
+        worked = False
+        for rt in runtimes:
+            if rt.has_work():
+                worked = rt.run_chunk() or worked
+        return worked
+
+    def drain(self) -> None:
+        """Run every queued/packed job to completion (calling thread)."""
+        if self._thread is not None:
+            raise RuntimeError("drain() while a worker thread is running; "
+                               "use handle.wait() instead")
+        while self._tick():
+            pass
+
+    def start(self) -> None:
+        """Start the single background worker (idempotent)."""
+        if self._thread is not None:
+            return
+        self._stop.clear()
+
+        def loop():
+            while not self._stop.is_set():
+                if not self._tick():
+                    self._stop.wait(0.02)
+
+        self._thread = threading.Thread(target=loop, name="sim-serve",
+                                        daemon=True)
+        self._thread.start()
+
+    def stop(self) -> None:
+        """Stop the background worker (waits for the current segment)."""
+        if self._thread is None:
+            return
+        self._stop.set()
+        self._thread.join()
+        self._thread = None
+
+    # ------------------------------------------------------------------
+    @property
+    def accounting(self) -> Accounting:
+        """Per-tenant / per-bucket totals replayed from the runlog."""
+        return Accounting.from_runlog(self.cfg.runlog)

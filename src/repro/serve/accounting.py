@@ -1,0 +1,160 @@
+"""Per-tenant accounting and admission control over the telemetry runlog.
+
+The serving layer does NOT invent a second metrics path: the single
+source of truth for what was computed is the PR 6 runlog.  The engine
+writes one ``chunk`` record per compiled segment (steps, wall seconds,
+compile deltas, health verdict), and the packer appends one
+``serve_chunk`` event per segment mapping replica slots to the jobs and
+tenants that occupied them.  :class:`Accounting` replays that stream and
+produces per-tenant and per-bucket totals, with one auditable invariant:
+
+    sum(tenant charged slot-steps) + idle slot-steps
+        == sum(ok/warn-verdict chunk steps x replicas)
+
+which holds exactly even through supervisor rollback-retries (failed
+chunks are excluded, replayed chunks count once) and slot evictions (an
+evicted job is charged for the segments it actually occupied).  Chunks
+integrated inside a dt-degradation span are excluded too - the
+supervisor rolls them back after the span, so nobody is charged.
+
+Admission control (:class:`TenantQuota`) gates ``SimServer.submit``:
+requested integration steps are debited against a per-tenant budget
+before the job is queued, so a noisy tenant is refused at the door
+instead of starving batch-mates.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.telemetry.runlog import read_runlog
+
+
+class AdmissionError(Exception):
+    """A job was refused at submit time (malformed or over quota)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantQuota:
+    """Admission limits for one tenant (None = unlimited)."""
+
+    max_jobs: int | None = None    # concurrent + completed jobs accepted
+    max_steps: int | None = None   # total requested integration steps
+
+
+def _tenant_zero() -> dict:
+    return {"jobs_submitted": 0, "jobs_done": 0, "jobs_failed": 0,
+            "jobs_evicted": 0, "requested_steps": 0, "charged_steps": 0,
+            "wall_s": 0.0}
+
+
+def _bucket_zero() -> dict:
+    return {"chunks": 0, "warmup_compiles": 0, "steady_compiles": 0,
+            "ok_slot_steps": 0, "failed_chunks": 0, "wall_s": 0.0,
+            "replicas": 0}
+
+
+class Accounting:
+    """Replay a serving runlog into per-tenant / per-bucket totals.
+
+    Build with :meth:`from_runlog` (the normal path) or feed records
+    one-by-one with :meth:`feed` for streaming use.  ``tenants`` and
+    ``buckets`` are plain dicts of counters; :meth:`consistent` checks
+    the charged-vs-computed invariant (module doc) and
+    :meth:`summary` returns everything JSON-able.
+    """
+
+    def __init__(self):
+        self.tenants: dict[str, dict] = {}
+        self.buckets: dict[str, dict] = {}
+        self.idle_steps = 0
+        self.evictions: list[dict] = []
+        self._bucket = None        # current run_start's bucket tag
+        self._replicas = 0
+        self._in_degrade_span = False
+
+    # ------------------------------------------------------------------
+    def _tenant(self, name) -> dict:
+        return self.tenants.setdefault(str(name), _tenant_zero())
+
+    def _bucket_of(self, name) -> dict:
+        return self.buckets.setdefault(str(name), _bucket_zero())
+
+    # ------------------------------------------------------------------
+    def feed(self, rec: dict) -> None:
+        """Consume one runlog record (chunk record or serve event)."""
+        ev = rec.get("event")
+        if ev == "run_start":
+            self._bucket = rec.get("bucket")
+            self._replicas = int(rec.get("replicas") or 0) or 1
+            if self._bucket is not None:
+                self._bucket_of(self._bucket)["replicas"] = self._replicas
+        elif ev == "chunk" and self._bucket is not None:
+            b = self._bucket_of(self._bucket)
+            b["chunks"] += 1
+            compiles = int(rec.get("compiles") or 0)
+            if b["chunks"] == 1:
+                b["warmup_compiles"] += compiles
+            else:
+                b["steady_compiles"] += compiles
+            if rec.get("verdict") == "fail":
+                b["failed_chunks"] += 1
+            elif self._in_degrade_span:
+                pass   # rolled back after the span: nobody is charged
+            else:
+                b["ok_slot_steps"] += int(rec["steps"]) * self._replicas
+                b["wall_s"] += float(rec.get("wall_s") or 0.0)
+        elif ev == "degrade" and rec.get("action") == "dt":
+            self._in_degrade_span = True
+        elif ev == "degrade_restore":
+            self._in_degrade_span = False
+        elif ev == "serve_chunk":
+            steps = int(rec["steps"])
+            occupied = rec.get("slots") or {}
+            for info in occupied.values():
+                t = self._tenant(info["tenant"])
+                t["charged_steps"] += steps
+                t["wall_s"] += (float(rec.get("wall_s") or 0.0)
+                                / max(len(occupied), 1))
+            self.idle_steps += steps * len(rec.get("idle") or ())
+        elif ev == "job_submit":
+            t = self._tenant(rec["tenant"])
+            t["jobs_submitted"] += 1
+            t["requested_steps"] += int(rec.get("steps") or 0)
+        elif ev == "job_done":
+            self._tenant(rec["tenant"])["jobs_done"] += 1
+        elif ev == "job_failed":
+            self._tenant(rec["tenant"])["jobs_failed"] += 1
+        elif ev == "evict":
+            if rec.get("tenant") is not None:
+                self._tenant(rec["tenant"])["jobs_evicted"] += 1
+            self.evictions.append(rec)
+
+    @classmethod
+    def from_runlog(cls, path) -> "Accounting":
+        """Replay a whole serving runlog file."""
+        acct = cls()
+        for rec in read_runlog(path):
+            acct.feed(rec)
+        return acct
+
+    # ------------------------------------------------------------------
+    @property
+    def charged_steps(self) -> int:
+        return sum(t["charged_steps"] for t in self.tenants.values())
+
+    @property
+    def computed_slot_steps(self) -> int:
+        return sum(b["ok_slot_steps"] for b in self.buckets.values())
+
+    def consistent(self) -> bool:
+        """Charged + idle slot-steps exactly cover the computed ones."""
+        return (self.charged_steps + self.idle_steps
+                == self.computed_slot_steps)
+
+    def summary(self) -> dict:
+        return {"tenants": self.tenants, "buckets": self.buckets,
+                "idle_steps": self.idle_steps,
+                "charged_steps": self.charged_steps,
+                "computed_slot_steps": self.computed_slot_steps,
+                "evictions": len(self.evictions),
+                "consistent": self.consistent()}

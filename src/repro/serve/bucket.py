@@ -1,0 +1,96 @@
+"""Shape-bucketing: which jobs may share one compiled chunk.
+
+XLA compiles one executable per (shapes, static config) signature, so the
+unit of batching is the *bucket*: jobs whose geometry, potential,
+integrator config, neighbor layout, observables, and cadence are
+identical compile to - and therefore reuse - exactly one chunk
+executable.  :func:`bucket_key` reduces a :class:`~repro.serve.queue.SimJob`
+to a hashable :class:`BucketKey`; the server keeps one packed Engine per
+key and asserts (via the runlog compile watchdog) that every job after a
+bucket's warmup compiles nothing.
+
+Geometry is digested over the actual array BYTES of positions / box /
+types / masses / magnetic flags, not just shapes: the replica plan builds
+ONE shared neighbor table from the slots' reference positions, so
+same-bucket jobs must share a crystalline reference exactly (spins and
+velocities are free per job).  Schedule knot counts are padded to the
+bucket's ``knots`` (:func:`repro.ensemble.protocol.pad_schedule`) so
+heterogeneous protocols share the one ``(R, K)`` signature.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+
+import numpy as np
+
+
+def _h(update_parts) -> str:
+    h = hashlib.sha1()
+    for part in update_parts:
+        h.update(part)
+    return h.hexdigest()[:12]
+
+
+def geometry_digest(state, masses, magnetic) -> str:
+    """Digest of the crystalline geometry (array bytes, see module doc)."""
+    parts = []
+    for a in (state.pos, state.box, state.types, masses, magnetic):
+        x = np.asarray(a)
+        parts.append(str((x.shape, str(x.dtype))).encode())
+        parts.append(np.ascontiguousarray(x).tobytes())
+    return _h(parts)
+
+
+def potential_digest(potential) -> str:
+    """Digest of the potential's type + parameters (dataclass fields when
+    available, else ``repr``)."""
+    if dataclasses.is_dataclass(potential):
+        body = repr(sorted(
+            (f.name, repr(getattr(potential, f.name)))
+            for f in dataclasses.fields(potential)))
+    else:
+        body = repr(potential)
+    return _h([type(potential).__name__.encode(), body.encode()])
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketKey:
+    """Hashable compile-signature of one shape bucket (see module doc)."""
+
+    geometry: str          # geometry_digest of state/masses/magnetic
+    potential: str         # potential_digest
+    integrator: tuple      # IntegratorConfig field values
+    cutoff: float
+    skin: float
+    capacity: int
+    observables: tuple
+    obs_every: int
+    knots: int             # padded schedule knot count K
+    chunk: int             # server segment length [steps]
+    slots: int             # replica slots per packed batch
+
+    @property
+    def id(self) -> str:
+        """Short stable id for runlog tags and checkpoint directories."""
+        return _h([repr(self).encode()])[:8]
+
+
+def bucket_key(job, cfg) -> BucketKey:
+    """Reduce a job + server config to its :class:`BucketKey`."""
+    icfg = job.cfg
+    if dataclasses.is_dataclass(icfg):
+        integ = tuple((f.name, getattr(icfg, f.name))
+                      for f in dataclasses.fields(icfg))
+    else:
+        integ = (repr(icfg),)
+    return BucketKey(
+        geometry=geometry_digest(job.state, job.masses, job.magnetic),
+        potential=potential_digest(job.potential),
+        integrator=integ,
+        cutoff=float(job.cutoff), skin=float(job.skin),
+        capacity=int(job.capacity),
+        observables=tuple(job.observables),
+        obs_every=int(job.obs_every),
+        knots=int(cfg.schedule_knots),
+        chunk=int(cfg.chunk), slots=int(cfg.slots))

@@ -1,0 +1,296 @@
+"""The packer: same-bucket jobs laid onto one Engine's replica axis.
+
+One :class:`BucketRuntime` owns one per-slot Replicated Engine
+(``Engine(plan=Replicated(slots), per_slot=True)``) and drives it in
+fixed ``chunk``-step segments.  Between segments it backfills freed
+replica slots from the bucket's FIFO queue (``Engine.write_slots`` -
+batch-mates keep their exact bits), streams each job's observable rows
+to its handle, and appends one ``serve_chunk`` accounting event to the
+runlog.  The continuous-batching idiom is the offline-inference one:
+a queue feeding shape-bucketed cached executables, slots turning over
+independently while the compiled step never changes signature.
+
+Determinism contract: a job's trajectory is bitwise the trajectory the
+same job gets from a single-slot server.  Three mechanisms carry it:
+
+* per-slot RNG chains - the packer holds a host-side ``(R, 2)`` key
+  stack seeded from each job's ``seed`` and advances it exactly like the
+  engine's loop (one vmapped split per segment), so a slot's stream
+  never depends on its batch-mates or slot index;
+* per-slot clocks and schedule rows - each slot's ``states.step`` starts
+  at the job's own 0 and its (T, B) protocol lives in one row of a
+  :class:`~repro.ensemble.protocol.SlotSchedules` stack, evaluated at
+  the slot's own elapsed time;
+* a shared neighbor table that all slots of a bucket agree on by
+  construction (the bucket key digests the geometry bytes).
+
+Failure isolation: segments run under the PR 7 Supervisor, and the
+engine's ``evict_slot_hook`` (installed here) turns the degradation rung
+into an eviction - the failing chunk's per-slot health signals pin the
+fault on one slot (:func:`repro.resilience.supervisor.attribute_slot`),
+that job is finished EVICTED with its protocol neutralized, and the
+batch replays the segment from the rollback checkpoint, bitwise, without
+it.  Only when no slot can be blamed (or retries run out) does the whole
+bucket fail.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ensemble import protocol
+from repro.ensemble.replica import stack_states, unstack_state
+from repro.md.engine import Engine
+from repro.parallel.plan import Replicated
+from repro.resilience.supervisor import Supervisor, attribute_slot
+from repro.serve.queue import (DONE, EVICTED, FAILED, JobQueue)
+from repro.telemetry import HealthError, Telemetry
+from repro.telemetry.runlog import append_event
+
+
+def _is_sched(x) -> bool:
+    return (hasattr(x, "at") and hasattr(x, "times")
+            and hasattr(x, "values"))
+
+
+class BucketRuntime:
+    """One shape bucket's packed batch (see module doc).
+
+    Created lazily by ``SimServer`` per :class:`~repro.serve.bucket.BucketKey`;
+    ``submit`` enqueues a handle, ``run_chunk`` advances the batch one
+    segment (seating queued jobs into free slots first) and returns
+    whether any work was done.
+    """
+
+    def __init__(self, key, cfg):
+        self.key = key
+        self.cfg = cfg
+        self.queue = JobQueue()
+        self.engine: Engine | None = None
+        self.handles = [None] * key.slots
+        self.keys = None                    # (R, 2) host-side key stack
+        self.tsched = None                  # SlotSchedules (R, K)
+        self.fsched = None                  # SlotSchedules (R, K, 3)
+        self.failed = False
+        self.segments = 0
+        self.supervisor = (Supervisor(cfg.supervisor, runlog=cfg.runlog)
+                           if cfg.supervised else None)
+        self._ckpt_dir = os.path.join(cfg.workdir, f"bucket-{key.id}")
+
+    # ------------------------------------------------------------------
+    def submit(self, handle) -> None:
+        self.queue.push(handle)
+
+    def has_work(self) -> bool:
+        return not self.failed and (
+            len(self.queue) > 0
+            or any(h is not None for h in self.handles))
+
+    # -- schedule rows -------------------------------------------------
+    def _job_schedules(self, job):
+        """Normalize a job's (T, B) protocol to two padded Schedules on
+        the job's own clock (every job goes through the SAME
+        normalization, packed or solo - part of the parity contract)."""
+        t = job.temperature
+        if t is None:
+            t = getattr(job.cfg, "temperature", 0.0)
+        ts = t if _is_sched(t) else protocol.constant(float(t))
+        f = job.field
+        if f is None:
+            f = jnp.zeros((3,), jnp.float32)
+        fs = f if _is_sched(f) else protocol.constant(
+            jnp.asarray(f, jnp.float32))
+        k = self.key.knots
+        return protocol.pad_schedule(ts, k), protocol.pad_schedule(fs, k)
+
+    def _idle_schedules(self):
+        """Idle slots integrate at T=0, B=0 (their rows are discarded)."""
+        k = self.key.knots
+        return (protocol.pad_schedule(protocol.constant(0.0), k),
+                protocol.pad_schedule(
+                    protocol.constant(jnp.zeros((3,), jnp.float32)), k))
+
+    def _set_slot_protocol(self, slot, ts, fs) -> None:
+        self.tsched = protocol.SlotSchedules(
+            times=self.tsched.times.at[slot].set(ts.times),
+            values=self.tsched.values.at[slot].set(ts.values))
+        self.fsched = protocol.SlotSchedules(
+            times=self.fsched.times.at[slot].set(fs.times),
+            values=self.fsched.values.at[slot].set(fs.values))
+        if self.engine is not None:
+            # values-only updates: same (R, K) signature, no recompile
+            self.engine.temperature = self.tsched
+            self.engine.field = self.fsched
+
+    # -- seating -------------------------------------------------------
+    def _seat(self) -> None:
+        """Fill free slots from the queue (engine start or backfill)."""
+        if self.failed:
+            return
+        if self.engine is None:
+            if not len(self.queue):
+                return
+            for i in range(self.key.slots):
+                if not len(self.queue):
+                    break
+                h = self.queue.pop()
+                self.handles[i] = h
+                h.mark_running()
+            self._start_engine()
+            return
+        for i in range(self.key.slots):
+            if self.handles[i] is not None or not len(self.queue):
+                continue
+            h = self.queue.pop()
+            self.handles[i] = h
+            h.mark_running()
+            self._backfill(i, h)
+
+    def _start_engine(self) -> None:
+        job0 = next(h for h in self.handles if h is not None).job
+        states, tlist, flist, keys = [], [], [], []
+        for h in self.handles:
+            if h is not None:
+                states.append(h.job.state)
+                ts, fs = self._job_schedules(h.job)
+                keys.append(jax.random.PRNGKey(h.job.seed))
+            else:   # idle slot: the bucket geometry at T=0, discarded
+                states.append(job0.state)
+                ts, fs = self._idle_schedules()
+                keys.append(jax.random.PRNGKey(0))
+            tlist.append(ts)
+            flist.append(fs)
+        self.tsched = protocol.stack_schedules(tlist, k=self.key.knots)
+        self.fsched = protocol.stack_schedules(flist, k=self.key.knots)
+        self.keys = jnp.stack(keys)
+        eng = Engine(
+            potential=job0.potential, cfg=job0.cfg,
+            state=stack_states(states),
+            masses=jnp.asarray(job0.masses),
+            magnetic=jnp.asarray(job0.magnetic),
+            cutoff=self.key.cutoff, capacity=self.key.capacity,
+            skin=self.key.skin, plan=Replicated(self.key.slots),
+            temperature=self.tsched, field=self.fsched,
+            observables=self.key.observables,
+            obs_every=self.key.obs_every, per_slot=True)
+        eng.run_tags = {"bucket": self.key.id}
+        eng.evict_slot_hook = self._evict_hook
+        self.engine = eng
+
+    def _backfill(self, slot: int, handle) -> None:
+        """Seat a queued job into a freed slot between segments."""
+        job = handle.job
+        ts, fs = self._job_schedules(job)
+        self._set_slot_protocol(slot, ts, fs)
+        self.keys = self.keys.at[slot].set(jax.random.PRNGKey(job.seed))
+        # one slot per write: bounds _vcompute to a single 1-row variant
+        self.engine.write_slots([slot], stack_states([job.state]),
+                                field=self.fsched)
+
+    # -- failure isolation ---------------------------------------------
+    def _evict_hook(self, err: HealthError):
+        """Supervisor hook: blame one slot, evict its job, keep the rest."""
+        slot = attribute_slot(err.signals, err.kind)
+        if slot is None or not (0 <= slot < self.key.slots):
+            return None
+        h = self.handles[slot]
+        if h is None:
+            return None
+        ts, fs = self._idle_schedules()
+        self._set_slot_protocol(slot, ts, fs)
+        h.finish(EVICTED, error=str(err))
+        self.handles[slot] = None
+        return {"bucket": self.key.id, "slot": slot, "job": h.id,
+                "tenant": h.tenant}
+
+    def _fail_bucket(self, err) -> None:
+        self.failed = True
+        seated = [(i, h) for i, h in enumerate(self.handles)
+                  if h is not None]
+        for i, h in seated:
+            self.handles[i] = None
+            h.finish(FAILED, error=str(err))
+            append_event(self.cfg.runlog, "job_failed", job=h.id,
+                         tenant=h.tenant, bucket=self.key.id,
+                         error=str(err))
+        while len(self.queue):
+            h = self.queue.pop()
+            h.finish(FAILED, error=str(err))
+            append_event(self.cfg.runlog, "job_failed", job=h.id,
+                         tenant=h.tenant, bucket=self.key.id,
+                         error=str(err))
+        append_event(self.cfg.runlog, "bucket_failed",
+                     bucket=self.key.id, error=str(err))
+
+    # -- the segment loop ----------------------------------------------
+    def run_chunk(self) -> bool:
+        """Advance the batch one ``chunk``-step segment; returns True if
+        any work was done."""
+        self._seat()
+        if self.engine is None or self.failed:
+            return False
+        active = {i: h for i, h in enumerate(self.handles)
+                  if h is not None}
+        if not active:
+            return False
+        chunk = self.key.chunk
+        tel = Telemetry(runlog=self.cfg.runlog, health=self.cfg.health,
+                        append=True)
+        t_seg = time.perf_counter()
+        try:
+            if self.supervisor is not None:
+                self.supervisor.run(
+                    self.engine, chunk, self.keys, chunk=chunk,
+                    checkpoint_dir=self._ckpt_dir, telemetry=tel)
+            else:
+                self.engine.run(chunk, self.keys, chunk, telemetry=tel)
+        except HealthError as err:
+            self._fail_bucket(err)
+            return False
+        wall = time.perf_counter() - t_seg
+        # advance the host key chain exactly like the engine's loop did
+        self.keys = jax.vmap(jax.random.split)(self.keys)[:, 0]
+        self.segments += 1
+
+        evicted = [i for i in active if self.handles[i] is None]
+        append_event(
+            self.cfg.runlog, "serve_chunk", bucket=self.key.id,
+            steps=chunk, wall_s=wall,
+            slots={str(i): {"job": h.id, "tenant": h.tenant}
+                   for i, h in active.items()},
+            evicted=evicted,
+            idle=[i for i in range(self.key.slots) if i not in active])
+        self._harvest(active)
+        return True
+
+    def _harvest(self, active: dict) -> None:
+        """Stream this segment's observable rows to each active handle
+        and retire jobs that used up their step budget."""
+        eng = self.engine
+        obs = self.key.obs_every
+        dt = eng.cfg.dt
+        chunk = self.key.chunk
+        for slot, h in active.items():
+            if self.handles[slot] is not h:
+                continue    # evicted during this segment
+            have = h.rows_streamed
+            want = h.job.steps // obs
+            take = min(chunk // obs, want - have)
+            if take > 0:
+                rows = {name: np.asarray(eng.trace.values[name][:take, slot])
+                        for name in self.key.observables}
+                times = (np.arange(have, have + take) + 1) * obs * dt
+                h.stream(times, rows)
+            h.done_steps += chunk
+            if h.done_steps >= h.job.steps:
+                final = (unstack_state(eng.state, slot)
+                         if h.done_steps == h.job.steps else None)
+                h.finish(DONE, final_state=final)
+                append_event(self.cfg.runlog, "job_done", job=h.id,
+                             tenant=h.tenant, bucket=self.key.id,
+                             steps=h.done_steps, requested=h.job.steps)
+                self.handles[slot] = None

@@ -1,0 +1,163 @@
+"""Job requests, streaming handles, and the FIFO queue.
+
+A :class:`SimJob` is one tenant's simulation request: an initial state,
+a potential, an integrator config, a (T, B) protocol, and a step budget
+with an ``obs_every`` observation cadence.  ``SimServer.submit`` wraps it
+in a :class:`JobHandle` - the caller's end of the stream: observables
+arrive per packed segment (:meth:`JobHandle.stream`), completion flips
+the status (:meth:`JobHandle.finish`), and :meth:`JobHandle.wait` blocks
+until the job leaves the batch.  Handles are thread-safe; the packer is
+the only writer.
+
+Statuses walk ``QUEUED -> RUNNING -> DONE`` on the happy path, or end in
+``FAILED`` (the whole bucket died) / ``EVICTED`` (the supervisor pinned a
+health failure on this job's slot and removed it so its batch-mates
+could continue; see :mod:`repro.resilience.supervisor`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import deque
+from typing import Any
+
+import numpy as np
+
+QUEUED = "queued"
+RUNNING = "running"
+DONE = "done"
+FAILED = "failed"
+EVICTED = "evicted"
+
+_TERMINAL = (DONE, FAILED, EVICTED)
+
+
+@dataclasses.dataclass
+class SimJob:
+    """One simulation request (see :mod:`repro.serve` for the service).
+
+    ``state`` is a single unbatched :class:`~repro.md.state.SpinLatticeState`
+    (the geometry part of the shape-bucket key - same-geometry jobs share
+    one compiled chunk).  ``temperature`` / ``field`` accept None, a
+    constant, or a :class:`~repro.ensemble.protocol.Schedule` evaluated on
+    the job's OWN clock from step 0, regardless of when the job is packed
+    into a running batch.  ``steps`` must be a multiple of ``obs_every``;
+    the job is integrated in whole server chunks, so a job whose ``steps``
+    is not chunk-aligned still streams exactly ``steps/obs_every``
+    observable rows but reports no final state (it overshot).
+    """
+
+    state: Any                      # SpinLatticeState, (N, ...) unbatched
+    potential: Any                  # gather-once .compute() surface
+    cfg: Any                        # IntegratorConfig
+    masses: Any                     # (T,) per-type masses [amu]
+    magnetic: Any                   # (T,) per-type magnetic flags
+    steps: int                      # requested integration steps
+    cutoff: float = 5.0             # neighbor cutoff [A]
+    temperature: Any = None         # None | K | Schedule (job clock)
+    field: Any = None               # None | (3,) T | Schedule (job clock)
+    observables: tuple = ("energy", "magnetization")
+    obs_every: int = 5              # emission cadence [steps]
+    seed: int = 0                   # job RNG stream (thermostat noise)
+    tenant: str = "default"         # accounting principal
+    capacity: int = 16              # neighbor-table capacity
+    skin: float = 0.2               # Verlet skin [A]
+    name: str | None = None         # optional human label
+
+
+class JobHandle:
+    """The caller's end of one submitted job (thread-safe).
+
+    The packer streams observable rows in as segments complete;
+    ``observables`` / ``times`` expose everything received so far as
+    concatenated numpy arrays.  ``final_state`` is the job's state after
+    exactly ``job.steps`` steps when the budget was chunk-aligned, else
+    None.  :meth:`wait` blocks until the status is terminal.
+    """
+
+    def __init__(self, job: SimJob, job_id: str, bucket=None):
+        self.job = job
+        self.id = job_id
+        self.bucket = bucket        # BucketKey this job was binned into
+        self.tenant = job.tenant
+        self.status = QUEUED
+        self.error: str | None = None
+        self.final_state = None
+        self.done_steps = 0         # integrated steps (may overshoot)
+        self._times: list = []
+        self._rows: list[dict] = []
+        self._cv = threading.Condition()
+
+    # -- packer side ---------------------------------------------------
+    def mark_running(self) -> None:
+        with self._cv:
+            self.status = RUNNING
+
+    def stream(self, times, rows: dict) -> None:
+        """Append one segment's observable rows (packer only)."""
+        with self._cv:
+            self._times.append(np.asarray(times))
+            self._rows.append({k: np.asarray(v) for k, v in rows.items()})
+            self._cv.notify_all()
+
+    def finish(self, status: str, *, final_state=None,
+               error: str | None = None) -> None:
+        if status not in _TERMINAL:
+            raise ValueError(f"finish() needs a terminal status, "
+                             f"got {status!r}")
+        with self._cv:
+            self.status = status
+            self.final_state = final_state
+            self.error = error
+            self._cv.notify_all()
+
+    # -- caller side ---------------------------------------------------
+    @property
+    def rows_streamed(self) -> int:
+        with self._cv:
+            return sum(t.shape[0] for t in self._times)
+
+    @property
+    def times(self) -> np.ndarray:
+        """Observation times [ps] on the job's own clock (from step 0)."""
+        with self._cv:
+            if not self._times:
+                return np.zeros((0,))
+            return np.concatenate(self._times)
+
+    @property
+    def observables(self) -> dict:
+        """Streamed observable rows so far, one array per name."""
+        with self._cv:
+            if not self._rows:
+                return {}
+            names = self._rows[0].keys()
+            return {k: np.concatenate([r[k] for r in self._rows])
+                    for k in names}
+
+    def wait(self, timeout: float | None = None) -> str:
+        """Block until the job reaches a terminal status; returns it."""
+        with self._cv:
+            self._cv.wait_for(lambda: self.status in _TERMINAL,
+                              timeout=timeout)
+            return self.status
+
+
+class JobQueue:
+    """Thread-safe FIFO of :class:`JobHandle` (one per shape bucket)."""
+
+    def __init__(self):
+        self._q: deque[JobHandle] = deque()
+        self._lock = threading.Lock()
+
+    def push(self, handle: JobHandle) -> None:
+        with self._lock:
+            self._q.append(handle)
+
+    def pop(self) -> JobHandle | None:
+        with self._lock:
+            return self._q.popleft() if self._q else None
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._q)

@@ -46,7 +46,20 @@ __all__ = [
 
 @dataclasses.dataclass
 class Telemetry:
-    """Run observability config handed to ``Engine.run(telemetry=...)``."""
+    """Run observability config handed to ``Engine.run(telemetry=...)``.
+
+    One object bundles the three opt-in surfaces of a monitored run:
+    the JSONL ``runlog`` (per-chunk throughput, compile-watchdog deltas,
+    halo-ledger bytes, drift, health verdict - the machine-readable
+    record ``repro.launch.report`` renders and the serving accounting
+    replays), the ``health`` thresholds checked at every chunk boundary
+    (raising :class:`HealthError`; ``None`` disables checking, signals
+    are still computed into ``engine.trace.health``), and an optional
+    perfetto ``profile_dir``.  ``append=True`` continues an existing
+    runlog instead of truncating it - retry segments and packed serving
+    segments share one file that way.  A bare path passed to
+    ``Engine.run`` is shorthand for ``Telemetry(runlog=path)``
+    (:func:`as_telemetry`)."""
 
     runlog: str | os.PathLike | None = None    # JSONL event stream path
     health: HealthConfig | None = dataclasses.field(

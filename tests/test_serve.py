@@ -1,0 +1,258 @@
+"""Serving-layer acceptance: shape buckets, packed-batch parity,
+backfill, accounting, and poisoned-job eviction.
+
+The PR-8 acceptance tests:
+
+* schedule padding/stacking is bitwise-neutral: a padded schedule
+  evaluates identically to the original, and a ``SlotSchedules`` stack
+  evaluates each slot's row on its own clock;
+* the bucket key bins jobs correctly (same geometry/config -> one key;
+  any divergence -> another) and a bucket's compiled chunk is reused
+  with ZERO steady-state recompiles across many jobs (asserted from the
+  runlog compile watchdog per bucket);
+* a packed batch reproduces every job's solo trajectory BITWISE - the
+  same observables and final state the job gets from a single-slot
+  server - including jobs backfilled into freed slots mid-batch;
+* per-tenant accounting replayed from the runlog is exactly consistent
+  with the engine's chunk records (charged + idle == computed);
+* admission control refuses malformed jobs and over-quota tenants;
+* a job with a poisoned protocol (NaN temperature schedule) is EVICTED
+  by the supervisor via per-slot failure attribution while its healthy
+  batch-mate completes bitwise-unperturbed.
+
+Everything here runs in-process at default precision (f32, 1 device);
+the f64 bitwise variant of the parity contract runs in
+``scripts/serve_smoke.py`` (wired into ``ci.sh --smoke``).
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hamiltonian import HeisenbergDMIModel
+from repro.ensemble import protocol
+from repro.md.integrator import IntegratorConfig
+from repro.md.lattice import simple_cubic
+from repro.md.state import init_state
+from repro.serve import (AdmissionError, ServeConfig, SimJob, SimServer,
+                         TenantQuota, bucket_key)
+from repro.launch.report import runlog_report
+
+
+LAT = simple_cubic()
+ICFG = IntegratorConfig(dt=2e-3, spin_alpha=0.05, frozen_lattice=True,
+                        temperature=10.0)
+
+
+def mkjob(steps, seed, tenant="t0", *, n_cells=(3, 3, 3), temp=None,
+          field=None, obs_every=5, cfg=ICFG, d0=0.01):
+    state = init_state(LAT, n_cells, key=jax.random.PRNGKey(seed),
+                       temperature=10.0, spin_init="helix_x")
+    return SimJob(state=state, potential=HeisenbergDMIModel(d0=d0),
+                  cfg=cfg, masses=np.asarray(LAT.masses),
+                  magnetic=np.asarray(LAT.moments) > 0, steps=steps,
+                  temperature=temp, field=field, obs_every=obs_every,
+                  seed=seed, tenant=tenant)
+
+
+def serve_cfg(tmp, name="serve", **kw):
+    kw.setdefault("slots", 2)
+    kw.setdefault("chunk", 10)
+    return ServeConfig(runlog=os.path.join(str(tmp), f"{name}.jsonl"),
+                       workdir=os.path.join(str(tmp), name), **kw)
+
+
+# ---------------------------------------------------------------------------
+# schedule padding / per-slot stacks
+# ---------------------------------------------------------------------------
+
+def test_pad_schedule_is_bitwise_neutral():
+    s = protocol.piecewise([0.0, 0.1, 0.3], [300.0, 100.0, 50.0])
+    p = protocol.pad_schedule(s, 8)
+    assert p.times.shape == (8,) and p.values.shape == (8,)
+    t = jnp.linspace(-0.1, 0.6, 29)   # includes beyond-the-end clamping
+    assert np.array_equal(np.asarray(s.at(t)), np.asarray(p.at(t)))
+    with pytest.raises(ValueError):
+        protocol.pad_schedule(s, 2)   # cannot shrink
+
+
+def test_slot_schedules_per_slot_clocks():
+    a = protocol.linear(0.0, 1.0, 0.0, 100.0)
+    b = protocol.constant(7.0)
+    stack = protocol.stack_schedules([a, b], k=4)
+    assert stack.times.shape == (2, 4)
+    # scalar t: both rows at one clock
+    v = np.asarray(stack.at(0.5))
+    assert v == pytest.approx([50.0, 7.0])
+    # vector t: each row on its own clock
+    v = np.asarray(stack.at(jnp.asarray([0.25, 99.0])))
+    assert v == pytest.approx([25.0, 7.0])
+
+
+# ---------------------------------------------------------------------------
+# bucket keys
+# ---------------------------------------------------------------------------
+
+def test_bucket_key_bins_jobs(tmp_path):
+    cfg = serve_cfg(tmp_path)
+    j1 = mkjob(20, 1)
+    j2 = mkjob(40, 2, temp=protocol.linear(0.0, 0.1, 300.0, 50.0))
+    assert bucket_key(j1, cfg) == bucket_key(j2, cfg)  # protocols differ ok
+    assert bucket_key(mkjob(20, 3, n_cells=(4, 3, 3)), cfg) \
+        != bucket_key(j1, cfg)                          # geometry differs
+    assert bucket_key(mkjob(20, 3, d0=0.02), cfg) != bucket_key(j1, cfg)
+    assert bucket_key(mkjob(20, 3, obs_every=10), cfg) != bucket_key(j1, cfg)
+    assert isinstance(bucket_key(j1, cfg).id, str)
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+
+def test_admission_rejects_malformed(tmp_path):
+    srv = SimServer(serve_cfg(tmp_path))
+    with pytest.raises(AdmissionError):
+        srv.submit(mkjob(23, 1))                  # steps % obs_every
+    with pytest.raises(AdmissionError):
+        srv.submit(mkjob(21, 1, obs_every=3))     # obs_every !| chunk
+    bad = mkjob(20, 1)
+    bad.state = bad.state._replace(
+        spin=bad.state.spin.at[0, 0].set(jnp.nan))
+    with pytest.raises(AdmissionError):
+        srv.submit(bad)                           # non-finite state
+    many = protocol.piecewise(list(np.linspace(0, 1, 12)),
+                              list(np.linspace(300, 50, 12)))
+    with pytest.raises(AdmissionError):
+        srv.submit(mkjob(20, 1, temp=many))       # too many knots
+    moving = IntegratorConfig(dt=2e-3, spin_alpha=0.05, lattice_gamma=1.0,
+                              temperature=10.0)
+    with pytest.raises(AdmissionError):
+        srv.submit(mkjob(20, 1, cfg=moving))      # lattice not frozen:
+                                                  # rebuilds would couple
+                                                  # batch-mates
+
+
+def test_admission_quota(tmp_path):
+    cfg = serve_cfg(tmp_path, quotas={
+        "busy": TenantQuota(max_jobs=2, max_steps=50)})
+    srv = SimServer(cfg)
+    srv.submit(mkjob(20, 1, "busy"))
+    with pytest.raises(AdmissionError):
+        srv.submit(mkjob(40, 2, "busy"))          # 20 + 40 > 50 steps
+    srv.submit(mkjob(20, 2, "busy"))
+    with pytest.raises(AdmissionError):
+        srv.submit(mkjob(10, 3, "busy"))          # third job
+    srv.submit(mkjob(10, 3, "other"))             # other tenants fine
+
+
+# ---------------------------------------------------------------------------
+# the packed batch: parity, backfill, recompiles, accounting
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def packed_run(tmp_path_factory):
+    """One packed 2-slot server over 3 mixed-size jobs (the third
+    backfills a freed slot) + the same jobs through a 1-slot server."""
+    tmp = tmp_path_factory.mktemp("serve")
+    specs = [  # (steps, seed, tenant, temperature)
+        (20, 11, "alice", None),
+        (30, 12, "bob", protocol.linear(0.0, 0.06, 10.0, 80.0)),
+        (10, 13, "alice", 25.0),
+    ]
+    packed = SimServer(serve_cfg(tmp, "packed"))
+    handles = [packed.submit(mkjob(s, k, t, temp=tp))
+               for s, k, t, tp in specs]
+    packed.drain()
+    solo = SimServer(serve_cfg(tmp, "solo", slots=1))
+    solos = [solo.submit(mkjob(s, k, t, temp=tp))
+             for s, k, t, tp in specs]
+    solo.drain()
+    return packed, handles, solos
+
+
+def test_packed_jobs_complete(packed_run):
+    packed, handles, solos = packed_run
+    for h in handles + solos:
+        assert h.status == "done", h.error
+        assert h.rows_streamed == h.job.steps // h.job.obs_every
+        assert h.final_state is not None      # chunk-aligned budgets
+        t = h.times
+        np.testing.assert_allclose(
+            t, (np.arange(len(t)) + 1) * h.job.obs_every * h.job.cfg.dt)
+
+
+def test_packed_batch_parity_vs_solo(packed_run):
+    """Every packed job's stream and final state are BITWISE the solo
+    run's - including job 3, which backfilled a freed slot mid-batch."""
+    _, handles, solos = packed_run
+    for h, g in zip(handles, solos):
+        for name, rows in g.observables.items():
+            assert np.array_equal(h.observables[name], rows), name
+        for leaf in ("pos", "spin", "vel", "step"):
+            assert np.array_equal(
+                np.asarray(getattr(h.final_state, leaf)),
+                np.asarray(getattr(g.final_state, leaf))), leaf
+
+
+def test_zero_steady_state_recompiles(packed_run):
+    """Bucket-key correctness, asserted from the compile watchdog: after
+    one warmup chunk per bucket, NO chunk record reports a compile."""
+    packed, handles, _ = packed_run
+    acct = packed.accounting
+    assert len({h.bucket for h in handles}) == 1
+    (bucket,) = acct.buckets.values()
+    assert bucket["chunks"] == 3            # 20+30+10 steps pack into 3
+                                            # segments (job 3 backfills)
+    assert bucket["warmup_compiles"] >= 1
+    assert bucket["steady_compiles"] == 0
+    assert bucket["replicas"] == 2
+
+
+def test_accounting_consistency_and_tenant_sums(packed_run):
+    packed, handles, _ = packed_run
+    acct = packed.accounting
+    assert acct.consistent()
+    # charged slot-steps: every segment a slot was occupied costs chunk
+    # steps; jobs run in whole chunks (20 -> 2, 30 -> 3, 10 -> 1)
+    assert acct.tenants["alice"]["charged_steps"] == 30
+    assert acct.tenants["bob"]["charged_steps"] == 30
+    assert acct.tenants["alice"]["jobs_done"] == 2
+    assert acct.tenants["bob"]["jobs_done"] == 1
+    assert acct.charged_steps + acct.idle_steps == acct.computed_slot_steps
+    # report CLI renders the serving runlog without error
+    assert "Run report" in runlog_report(packed.cfg.runlog)
+
+
+# ---------------------------------------------------------------------------
+# poisoned-job eviction under the supervisor
+# ---------------------------------------------------------------------------
+
+def test_poisoned_job_evicted_mates_survive(tmp_path):
+    poison = protocol.Schedule(
+        times=jnp.asarray([0.0, 1.0], jnp.float32),
+        values=jnp.asarray([float("nan")] * 2, jnp.float32))
+    srv = SimServer(serve_cfg(tmp_path, "evict"))
+    good = srv.submit(mkjob(20, 21, "alice"))
+    bad = srv.submit(mkjob(20, 22, "eve", temp=poison))
+    srv.drain()
+    assert bad.status == "evicted"
+    assert "non-finite" in (bad.error or "")
+    assert good.status == "done"
+
+    solo = SimServer(serve_cfg(tmp_path, "evict-solo", slots=1))
+    ref = solo.submit(mkjob(20, 21, "alice"))
+    solo.drain()
+    for name, rows in ref.observables.items():
+        assert np.array_equal(good.observables[name], rows), name
+    assert np.array_equal(np.asarray(good.final_state.spin),
+                          np.asarray(ref.final_state.spin))
+
+    acct = srv.accounting
+    assert acct.consistent()
+    assert acct.tenants["eve"]["jobs_evicted"] == 1
+    assert acct.tenants["eve"]["charged_steps"] > 0   # occupied segments
+    assert len(acct.evictions) == 1
+    assert acct.evictions[0]["job"] == bad.id
+    assert "evict" in runlog_report(srv.cfg.runlog)
