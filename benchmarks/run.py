@@ -7,6 +7,8 @@
   accuracy    - Table IV  NEP-SPIN vs baseline accuracy
   kernels     - kernel-level microbenchmarks (fused vs reference)
   ensemble    - Fig. 9 scenario engine: vmapped replicas vs sequential
+  serve       - serving tier: packed drain jobs/s, WAL journal overhead,
+                recovery-replay latency (writes BENCH_serve.json)
   md_loop     - fused in-scan hot loop vs pre-fusion driver
                 (writes BENCH_md_loop.json)
 
@@ -28,7 +30,7 @@ import traceback
 
 # registration order = execution order (cheap first)
 REGISTRY = ("kernels", "ablation", "throughput", "scaling", "accuracy",
-            "ensemble", "md_loop")
+            "ensemble", "serve", "md_loop")
 
 
 def main() -> None:

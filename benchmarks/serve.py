@@ -1,0 +1,151 @@
+"""Serving-tier throughput: packed drain, WAL overhead, recovery replay.
+
+The PR-9 tracked numbers for the crash-safe batched job server
+(:mod:`repro.serve`):
+
+* ``serve/drain`` - submit + drain a deterministic mixed fleet
+  (``repro.launch.serve.build_fleet``: two shape buckets, two tenants,
+  four protocol shapes) through a 2-slot server; jobs/s and slot-step/s,
+  with the compile watchdog split (warmup vs steady) from the accounting
+  ledger - steady-state recompiles must stay 0.
+* ``serve/journal`` - the SAME fleet drained with the durable job
+  journal (WAL) enabled; the derived column is the journal overhead %
+  vs the plain drain (append-only JSONL at job-lifecycle + chunk-commit
+  granularity, so it should stay in the noise).
+* ``serve/recover`` - a journaled fleet is abandoned mid-flight after
+  two scheduler ticks; ``SimServer.recover`` replays the WAL and the
+  fleet is resubmitted (completed jobs deduplicate, interrupted jobs
+  adopt their committed watermark).  us_per_call is the replay+resubmit
+  latency - pure journal replay and queue reconstruction, no engine
+  compute - and the drain that follows must close the accounting
+  invariant with zero steady recompiles.
+
+Emits ``BENCH_serve.json`` (repo root, full runs only) via
+``benchmarks.common.write_json`` so the serving perf trajectory is
+provenance-stamped.  CSV: name, us_per_call(=us/job; us/replay for
+recover), derived as above.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+from benchmarks.common import SMOKE, row
+from repro.launch.serve import build_fleet
+from repro.serve import ServeConfig, SimServer
+
+N_JOBS = 4 if SMOKE else 8
+CHUNK = 10
+OBS_EVERY = 5
+SLOTS = 2
+
+
+def _cfg(tmp: str, name: str, *, journal: bool = False) -> ServeConfig:
+    return ServeConfig(
+        runlog=os.path.join(tmp, f"{name}.jsonl"),
+        workdir=os.path.join(tmp, name),
+        journal_dir=os.path.join(tmp, f"{name}-journal") if journal
+        else None,
+        slots=SLOTS, chunk=CHUNK)
+
+
+def _fleet():
+    return build_fleet(N_JOBS, CHUNK, OBS_EVERY)
+
+
+def _drain(cfg: ServeConfig) -> tuple[float, "SimServer"]:
+    """(submit+drain wall s, drained server)."""
+    srv = SimServer(cfg)
+    t0 = time.perf_counter()
+    handles = [srv.submit(job) for job in _fleet()]
+    srv.drain()
+    wall = time.perf_counter() - t0
+    assert all(h.status == "done" for h in handles), \
+        [(h.id, h.status, h.error) for h in handles]
+    return wall, srv
+
+
+def _compile_split(acct) -> tuple[int, int]:
+    warm = sum(b["warmup_compiles"] for b in acct.buckets.values())
+    steady = sum(b["steady_compiles"] for b in acct.buckets.values())
+    return warm, steady
+
+
+def main() -> list[str]:
+    tmp = tempfile.mkdtemp(prefix="bench-serve-")
+    total_steps = sum(j.steps for j in _fleet())
+    rows = []
+    out = {"smoke": SMOKE, "n_jobs": N_JOBS, "slots": SLOTS,
+           "chunk": CHUNK, "total_slot_steps": total_steps}
+
+    # throwaway drain so the timed runs don't pay process-wide jax init
+    # or cold XLA-cache compiles (each server builds fresh engines, but
+    # the in-process compilation cache dedupes identical chunk HLO)
+    _drain(_cfg(tmp, "warmup"))
+
+    # --- packed drain: jobs/s + compile watchdog ----------------------
+    wall, srv = _drain(_cfg(tmp, "plain"))
+    acct = srv.accounting
+    warm, steady = _compile_split(acct)
+    assert acct.consistent(), acct.summary()
+    out["drain"] = {"wall_s": wall, "jobs_per_s": N_JOBS / wall,
+                    "slot_steps_per_s": total_steps / wall,
+                    "warmup_compiles": warm, "steady_compiles": steady}
+    rows.append(row(
+        f"serve/drain/J={N_JOBS}", wall * 1e6 / N_JOBS,
+        f"{N_JOBS / wall:.2f} jobs/s|"
+        f"{total_steps / wall:.3e} slot-step/s|"
+        f"{warm} warmup/{steady} steady compiles"))
+
+    # --- the same fleet with the WAL on: journal overhead % -----------
+    wall_j, srv_j = _drain(_cfg(tmp, "wal", journal=True))
+    assert srv_j.accounting.consistent(), srv_j.accounting.summary()
+    overhead = (wall_j / wall - 1.0) * 100.0
+    out["journal"] = {"wall_s": wall_j, "overhead_pct": overhead}
+    rows.append(row(
+        f"serve/journal/J={N_JOBS}", wall_j * 1e6 / N_JOBS,
+        f"journal overhead {overhead:+.1f}% vs plain drain"))
+
+    # --- recovery replay: abandon mid-flight, replay the WAL ----------
+    cfg_r = _cfg(tmp, "rec", journal=True)
+    srv_r = SimServer(cfg_r)
+    for job in _fleet():
+        srv_r.submit(job)
+    for _ in range(2):          # two committed chunks per bucket, then die
+        srv_r._tick()
+    del srv_r
+
+    t0 = time.perf_counter()
+    srv2 = SimServer.recover(cfg_r)
+    handles = [srv2.submit(job) for job in _fleet()]
+    replay = time.perf_counter() - t0
+    deduped = sum(h.status == "done" for h in handles)
+    resumed = sum(h.rows_base > 0 for h in handles)
+    srv2.drain()
+    acct2 = srv2.accounting
+    _, steady2 = _compile_split(acct2)
+    assert acct2.consistent(), acct2.summary()
+    assert all(h.status == "done" for h in handles), \
+        [(h.id, h.status, h.error) for h in handles]
+    out["recovery"] = {"replay_s": replay, "deduplicated": deduped,
+                       "resumed": resumed, "steady_compiles": steady2}
+    rows.append(row(
+        f"serve/recover/J={N_JOBS}", replay * 1e6,
+        f"{deduped} dedup|{resumed} resumed|"
+        f"{steady2} steady compiles after recovery"))
+
+    if not SMOKE:
+        # acceptance: the compiled chunks never retrace in steady state,
+        # in either the plain drain or the recovered incarnation
+        assert steady == 0, out["drain"]
+        assert steady2 == 0, out["recovery"]
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        from benchmarks.common import write_json
+        write_json(os.path.join(root, "BENCH_serve.json"), out)
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    main()

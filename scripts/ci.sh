@@ -34,8 +34,14 @@
 #                                        (scripts/serve_smoke.py): a
 #                                        mixed fleet through the batched
 #                                        job server at f64 with bitwise
-#                                        packed-vs-solo parity, and the
-#                                        docs link check
+#                                        packed-vs-solo parity, the
+#                                        serve chaos smoke
+#                                        (scripts/serve_chaos_smoke.py):
+#                                        a seeded NaN/bit-flip/SIGKILL
+#                                        campaign through the serving
+#                                        tier with WAL recovery asserted
+#                                        bitwise at f64, and the docs
+#                                        link check
 #                                        (scripts/check_docs.py).
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -51,6 +57,11 @@ if [[ "${1:-}" == "--smoke" ]]; then
   # consistent per-tenant accounting ledger (scripts/serve_smoke.py)
   env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
       python scripts/serve_smoke.py
+  # serve chaos smoke: a child server dies by SIGKILL mid-fleet under a
+  # seeded fault plan; the parent recovers from the durable job journal
+  # and proves the remaining streams bitwise with zero steady recompiles
+  env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+      python scripts/serve_chaos_smoke.py
   # docs must not reference files that no longer exist
   python scripts/check_docs.py
   exec env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" BENCH_SMOKE=1 \

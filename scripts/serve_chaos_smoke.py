@@ -1,0 +1,182 @@
+"""CI smoke: the serving tier under chaos - WAL recovery after SIGKILL.
+
+Run from scripts/ci.sh --smoke:
+
+  PYTHONPATH=src python scripts/serve_chaos_smoke.py
+
+The PR-9 acceptance run, at f64.  A child process serves a deterministic
+fleet with a seeded :class:`~repro.resilience.faults.FaultPlan` installed
+on every bucket engine:
+
+* a transient NaN and a spin bit-flip mid-flight - the supervisor's
+  rollback-retry absorbs both inside the child (the serving tier rides
+  the PR 7 ladder unchanged);
+* a ``crash`` fault that SIGKILLs the child mid-fleet.
+
+The parent asserts the kill, rebuilds the server with
+``SimServer.recover`` from the durable job journal, resubmits the SAME
+fleet, and drains.  Acceptance:
+
+* completed jobs deduplicate (no recomputation, no double charge);
+* every surviving job's remaining observable stream and final state are
+  BITWISE identical (f64) to an uninterrupted reference fleet - the
+  interrupted job resumes from its committed watermark;
+* zero steady-state recompiles across BOTH incarnations, from the
+  runlog compile watchdog (recovery re-warms each bucket exactly once);
+* the per-tenant accounting invariant (charged + idle == computed
+  slot-steps) closes exactly over the combined runlog;
+* the report CLI renders both the serving runlog and the journal.
+"""
+import json
+import os
+import signal
+import subprocess
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))), "src"))
+
+import jax  # noqa: E402
+
+# f64 before any jax arrays exist (parent AND child import this module):
+# the bitwise recovery-replay assertion is the acceptance criterion
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np  # noqa: E402
+
+from repro.launch.serve import build_fleet  # noqa: E402
+from repro.resilience import Fault, FaultPlan  # noqa: E402
+from repro.serve import RequeuePolicy, ServeConfig, SimServer  # noqa: E402
+
+N_JOBS = 4
+CHUNK = 10
+OBS_EVERY = 5
+
+CHAOS = FaultPlan(faults=(
+    Fault(kind="nan", step=12, leaf="force"),
+    Fault(kind="bit_flip", step=22, leaf="spin", bit=62),
+    Fault(kind="crash", step=35),
+), seed=7)
+
+
+def serve_cfg(tmp, *, faults=None):
+    return ServeConfig(
+        runlog=os.path.join(tmp, "chaos.jsonl"),
+        workdir=os.path.join(tmp, "chaos"),
+        journal_dir=os.path.join(tmp, "journal"),
+        slots=2, chunk=CHUNK,
+        requeue=RequeuePolicy(retries=1, backoff_s=0.0),
+        faults=faults)
+
+
+def child_main(tmp) -> None:
+    srv = SimServer(serve_cfg(tmp, faults=CHAOS))
+    for job in build_fleet(N_JOBS, CHUNK, OBS_EVERY):
+        srv.submit(job)
+    srv.drain()
+    raise SystemExit("crash fault did not fire")
+
+
+def report(path) -> str:
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.report", path],
+        capture_output=True, text=True,
+        env={**os.environ,
+             "PYTHONPATH": "src" + os.pathsep
+             + os.environ.get("PYTHONPATH", "")},
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    assert r.returncode == 0, r.stderr[-2000:]
+    return r.stdout
+
+
+def main() -> int:
+    tmp = tempfile.mkdtemp(prefix="serve-chaos-")
+
+    # uninterrupted reference fleet (same packed shape, no faults)
+    ref_cfg = ServeConfig(runlog=os.path.join(tmp, "ref.jsonl"),
+                          workdir=os.path.join(tmp, "ref"),
+                          slots=2, chunk=CHUNK)
+    ref_srv = SimServer(ref_cfg)
+    refs = [ref_srv.submit(job)
+            for job in build_fleet(N_JOBS, CHUNK, OBS_EVERY)]
+    ref_srv.drain()
+    for g in refs:
+        assert g.status == "done", (g.id, g.status, g.error)
+    assert np.asarray(refs[0].final_state.spin).dtype == np.float64
+
+    # --- child: serve the fleet into the chaos plan, die by SIGKILL ---
+    child = subprocess.run(
+        [sys.executable, __file__, "--child", tmp],
+        capture_output=True, text=True,
+        env={**os.environ,
+             "PYTHONPATH": "src" + os.pathsep
+             + os.environ.get("PYTHONPATH", "")})
+    assert child.returncode == -signal.SIGKILL, \
+        (child.returncode, child.stderr[-2000:])
+    print("[serve_chaos_smoke] child SIGKILLed mid-fleet as planned")
+
+    # --- parent: WAL recovery + idempotent resubmission ---------------
+    srv = SimServer.recover(serve_cfg(tmp))    # no faults this time
+    handles = [srv.submit(job)
+               for job in build_fleet(N_JOBS, CHUNK, OBS_EVERY)]
+    deduped = [h for h in handles if h.status == "done"]
+    resumed = [h for h in handles if h.rows_base > 0]
+    assert deduped, "no job deduplicated against the journal"
+    assert resumed, "no job resumed from a committed watermark"
+    print(f"[serve_chaos_smoke] recovered: {len(deduped)} deduplicated, "
+          f"{len(resumed)} resumed from watermark, "
+          f"{len(handles) - len(deduped) - len(resumed)} requeued")
+    srv.drain()
+
+    # bitwise recovery replay: remaining streams + final states (f64)
+    for h, g in zip(handles, refs):
+        assert h.status == "done", (h.id, h.status, h.error)
+        if h.rows_streamed:
+            for name, rows in g.observables.items():
+                assert np.array_equal(
+                    h.observables[name], rows[h.rows_base:]), \
+                    f"{h.id} {name} diverges from the uninterrupted run"
+        if h.final_state is not None:
+            for leaf in ("pos", "vel", "spin", "step"):
+                assert np.array_equal(
+                    np.asarray(getattr(h.final_state, leaf)),
+                    np.asarray(getattr(g.final_state, leaf))), \
+                    f"{h.id} final {leaf} diverges"
+    assert any(h.final_state is not None for h in resumed), \
+        "no resumed job reached a comparable final state"
+    print("[serve_chaos_smoke] remaining streams + final states "
+          "bitwise vs uninterrupted fleet (f64)")
+
+    # compile watchdog over BOTH incarnations: recovery re-warms each
+    # bucket once; nothing recompiles in steady state
+    acct = srv.accounting
+    assert acct.recoveries == 1
+    for bid, b in sorted(acct.buckets.items()):
+        assert b["warmup_compiles"] >= 1, (bid, b)
+        assert b["steady_compiles"] == 0, \
+            f"bucket {bid} recompiled in steady state: {b}"
+        print(f"[serve_chaos_smoke] bucket {bid}: {b['chunks']} chunks, "
+              f"{b['warmup_compiles']} warmup / 0 steady compiles")
+
+    # the accounting invariant closes exactly across the crash
+    assert acct.consistent(), acct.summary()
+    for tenant, t in sorted(acct.tenants.items()):
+        print(f"[serve_chaos_smoke] tenant {tenant}: "
+              f"{t['charged_steps']} slot-steps charged")
+
+    # both reports render: runlog (with per-tenant table) and journal
+    out = report(serve_cfg(tmp).runlog)
+    assert "Per-tenant" in out, out
+    jout = report(os.path.join(tmp, "journal", "journal.jsonl"))
+    assert "commit" in jout and "recovered" in jout, jout
+    print("[serve_chaos_smoke] reports render runlog + journal OK")
+    print("serve chaos smoke: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    if len(sys.argv) > 2 and sys.argv[1] == "--child":
+        child_main(sys.argv[2])
+    else:
+        sys.exit(main())

@@ -1,2 +1,3 @@
-from repro.ckpt.checkpoint import (latest_step, load_checkpoint, load_md,
+from repro.ckpt.checkpoint import (available_steps, latest_step,
+                                   load_checkpoint, load_md,
                                    save_checkpoint, save_md)

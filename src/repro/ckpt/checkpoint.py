@@ -195,15 +195,26 @@ def _gc(directory: str, keep: int, pin: int | None = None):
 
 def latest_step(directory: str) -> int | None:
     """Newest COMPLETE checkpoint step (manifest present), or None."""
+    steps = available_steps(directory)
+    return steps[-1] if steps else None
+
+
+def available_steps(directory: str) -> list[int]:
+    """All COMPLETE checkpoint steps in ``directory``, sorted ascending.
+
+    The serve-layer journal replay validates its recorded checkpoint ref
+    against this before restoring - a ref can legitimately be older than
+    ``latest_step`` when a crash landed between an engine save and the
+    journal commit (the orphan checkpoint is ahead of the durable
+    watermark and must NOT be the restore target)."""
     if not os.path.isdir(directory):
-        return None
-    best = None
+        return []
+    steps = []
     for d in os.listdir(directory):
         if d.startswith("step_") and not d.endswith(".tmp"):
             if os.path.exists(os.path.join(directory, d, "manifest.json")):
-                s = int(d.split("_")[1])
-                best = s if best is None else max(best, s)
-    return best
+                steps.append(int(d.split("_")[1]))
+    return sorted(steps)
 
 
 # ---------------------------------------------------------------------------

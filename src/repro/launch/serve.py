@@ -85,6 +85,13 @@ def main(argv=None) -> int:
                     help="runlog path (default: workdir/serve.jsonl)")
     ap.add_argument("--workdir", default=None,
                     help="checkpoint/working dir (default: temp dir)")
+    ap.add_argument("--journal", default=None, metavar="DIR",
+                    help="enable the durable job journal (WAL) in DIR")
+    ap.add_argument("--recover", action="store_true",
+                    help="replay the journal instead of starting fresh "
+                         "(requires --journal; resubmits the same fleet, "
+                         "completed jobs deduplicate, interrupted jobs "
+                         "resume from their committed watermark)")
     ap.add_argument("--threaded", action="store_true",
                     help="background worker + wait() instead of drain()")
     ap.add_argument("--report", action="store_true",
@@ -98,13 +105,18 @@ def main(argv=None) -> int:
     workdir = args.workdir or tempfile.mkdtemp(prefix="simserve-")
     runlog = args.runlog or os.path.join(workdir, "serve.jsonl")
     cfg = ServeConfig(runlog=runlog, workdir=workdir, slots=args.slots,
-                      chunk=args.chunk)
-    server = SimServer(cfg)
+                      chunk=args.chunk, journal_dir=args.journal)
+    if args.recover:
+        if not args.journal:
+            ap.error("--recover requires --journal DIR")
+        server = SimServer.recover(cfg)
+    else:
+        server = SimServer(cfg)
     fleet = build_fleet(args.jobs, args.chunk, args.obs_every)
     print(f"submitting {len(fleet)} jobs "
           f"({args.slots} slots, chunk {args.chunk}) -> {runlog}")
     handles = [server.submit(job) for job in fleet]
-    n_buckets = len({h.bucket for h in handles})
+    n_buckets = len({h.bucket for h in handles if h.bucket is not None})
     print(f"{n_buckets} shape bucket(s)")
 
     if args.threaded:
@@ -118,8 +130,11 @@ def main(argv=None) -> int:
     for h in handles:
         tail = (f"{h.rows_streamed} rows"
                 if h.status == "done" else (h.error or "")[:48])
+        if h.recovered and h.rows_streamed == 0:
+            tail = "deduplicated"     # journal match: no bucket, no rows
+        bucket = h.bucket.id if h.bucket is not None else "-"
         print(f"  {h.id} [{h.job.name}] tenant={h.tenant} "
-              f"bucket={h.bucket.id} steps={h.job.steps}: "
+              f"bucket={bucket} steps={h.job.steps}: "
               f"{h.status} ({tail})")
 
     acct = server.accounting

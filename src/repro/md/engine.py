@@ -432,6 +432,13 @@ class Engine:
         self._last_ckpt = None      # newest checkpoint written by save()
         self.ckpt_pin = None        # step save() must never GC (the
                                     # supervisor's rollback target)
+        self.ckpt_step_offset = 0   # added to _step_now() for checkpoint
+                                    # step tags: a per_slot bucket's slot-0
+                                    # clock resets on backfill, so the
+                                    # serving packer rebases saves onto its
+                                    # monotonic bucket-global clock (the
+                                    # journal's recovery refs depend on
+                                    # step tags never going backwards)
         self._fault_injector = None  # resilience hook: (engine, carry,
                                      # n) -> carry at each chunk boundary
         self.evict_slot_hook = None  # serving hook: (HealthError) -> info
@@ -613,6 +620,12 @@ class Engine:
         if isinstance(self.plan, Replicated):
             return int(c.states.step[0])
         return int(c.state.step)
+
+    def ckpt_step(self) -> int:
+        """The step tag :meth:`save` would use right now (clock plus the
+        serving packer's rebase offset) - what ``ckpt_pin`` and recovery
+        refs must be expressed in."""
+        return self._step_now() + int(self.ckpt_step_offset)
 
     # ==================================================================
     # flat single-device plan
@@ -1806,8 +1819,9 @@ class Engine:
         unrelated RNG stream.
         """
         from repro.ckpt.checkpoint import save_md
-        path = save_md(directory, self._step_now(), self._carry, key,
-                       keep=keep, pin=self.ckpt_pin)
+        path = save_md(directory,
+                       self._step_now() + int(self.ckpt_step_offset),
+                       self._carry, key, keep=keep, pin=self.ckpt_pin)
         self._last_ckpt = path
         return path
 

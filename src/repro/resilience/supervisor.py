@@ -43,6 +43,38 @@ from repro.telemetry.runlog import append_event
 
 _TRANSIENT = ("nonfinite", "drift", "spin")
 
+
+def backoff_delay(attempt: int, base: float, factor: float = 2.0,
+                  cap: float = 30.0) -> float:
+    """Exponential backoff: ``base * factor**(attempt-1)``, capped.
+
+    ``attempt`` is 1-based; a non-positive base (or attempt) is free."""
+    if base <= 0 or attempt <= 0:
+        return 0.0
+    return min(base * factor ** (attempt - 1), cap)
+
+
+class Strikes:
+    """Consecutive same-class failure counter.
+
+    ``hit(kind)`` returns how many times ``kind`` has now failed in a row
+    (a different kind resets the streak to 1).  Both the supervisor's
+    degradation ladder and the serving tier's permanent-failure
+    classification key on this."""
+
+    def __init__(self):
+        self.kind = None
+        self.count = 0
+
+    def hit(self, kind: str | None) -> int:
+        kind = kind or "unknown"
+        self.count = self.count + 1 if kind == self.kind else 1
+        self.kind = kind
+        return self.count
+
+    def reset(self) -> None:
+        self.kind, self.count = None, 0
+
 # HealthError.kind -> the per-slot signal vector that attributes it
 _SLOT_SIGNALS = {"nonfinite": "slot_nonfinite",
                  "drift": "slot_e_drift",
@@ -140,10 +172,10 @@ class Supervisor:
             tel.runlog if tel is not None else None)
         target = engine._step_now() + n_steps
         engine.save(checkpoint_dir, key=key)
-        engine.ckpt_pin = engine._step_now()
+        engine.ckpt_pin = engine.ckpt_step()
 
         attempts = 0
-        last_kind, same_count = None, 0
+        strikes = Strikes()
         seg_tel = tel
         while True:
             remaining = target - engine._step_now()
@@ -158,8 +190,7 @@ class Supervisor:
             except HealthError as err:
                 attempts += 1
                 kind = err.kind or "unknown"
-                same_count = same_count + 1 if kind == last_kind else 1
-                last_kind = kind
+                same_count = strikes.hit(kind)
                 self._event(
                     log_path, "rollback", kind=kind, attempt=attempts,
                     step=err.step, chunk_index=err.chunk_index,
@@ -172,7 +203,7 @@ class Supervisor:
                 if cfg.backoff_s:
                     time.sleep(attempts * cfg.backoff_s)
                 key = engine.restore(checkpoint_dir)
-                engine.ckpt_pin = engine._step_now()
+                engine.ckpt_pin = engine.ckpt_step()
                 if seg_tel is not None:
                     seg_tel = dataclasses.replace(seg_tel, append=True)
                 if same_count >= cfg.degrade_after:
@@ -180,7 +211,7 @@ class Supervisor:
                                         checkpoint_dir, checkpoint_every,
                                         seg_tel, target, log_path, run_kw,
                                         err=err)
-                    same_count = 0
+                    strikes.reset()
                 self._event(log_path, "retry", attempt=attempts,
                             kind=kind, step=engine._step_now(),
                             remaining=target - engine._step_now())
@@ -220,6 +251,14 @@ class Supervisor:
             new_dt = old_cfg.dt * cfg.dt_factor
             span = min(cfg.degrade_span * chunk,
                        target - engine._step_now())
+            if span <= 0:
+                # degrade_span=0 disables the dt rung (the serving tier:
+                # a packed batch must never integrate at a different dt);
+                # skip the rebind round-trip too - it would retrace the
+                # compiled chunk for nothing
+                self._event(log_path, "degrade", kind=kind, action="none",
+                            step=engine._step_now())
+                return key
             self._event(log_path, "degrade", kind=kind, action="dt",
                         dt=new_dt, prev_dt=old_cfg.dt, span_steps=span,
                         step=engine._step_now())
@@ -231,7 +270,7 @@ class Supervisor:
                                checkpoint_every=checkpoint_every,
                                telemetry=seg_tel, **run_kw)
                     key = engine.restore(checkpoint_dir)
-                    engine.ckpt_pin = engine._step_now()
+                    engine.ckpt_pin = engine.ckpt_step()
             finally:
                 engine.rebind(cfg=old_cfg)
                 self._event(log_path, "degrade_restore", kind=kind,
@@ -251,7 +290,7 @@ class Supervisor:
         before = engine._rplan.describe()
         key = engine.restore(checkpoint_dir, step=step, plan=plan)
         after = engine._rplan.describe()
-        engine.ckpt_pin = engine._step_now()
+        engine.ckpt_pin = engine.ckpt_step()
         self._event(log_path, "elastic_restore",
                     step=engine._step_now(), from_layout=before,
                     to_layout=after, checkpoint=str(checkpoint_dir))

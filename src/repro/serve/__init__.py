@@ -6,25 +6,34 @@ turns the unified Engine's replica axis into a multi-tenant batch
 server:
 
 * :mod:`repro.serve.queue` - :class:`SimJob` requests and streaming
-  :class:`JobHandle`\\ s;
+  :class:`JobHandle`\\ s (cancel, terminal states, quarantine);
 * :mod:`repro.serve.bucket` - shape-bucketing: jobs that may share one
-  compiled chunk map to one :class:`BucketKey`;
+  compiled chunk map to one :class:`BucketKey`; :func:`job_digest` is
+  the crash-recovery idempotency key;
 * :mod:`repro.serve.pack` - the packer: one per-slot Replicated Engine
   per bucket, continuous batching via slot backfill, supervised
-  segments with poisoned-job eviction;
+  segments with poisoned-job eviction, deadline/backoff-requeue ladder;
+* :mod:`repro.serve.journal` - the durable job journal (WAL) behind
+  :meth:`SimServer.recover`;
 * :mod:`repro.serve.accounting` - per-tenant accounting and admission
   control over the PR 6 telemetry runlog (the single metrics path).
 
 Entry point::
 
-    cfg = ServeConfig(runlog="runs/serve.jsonl", workdir="runs/serve")
+    cfg = ServeConfig(runlog="runs/serve.jsonl", workdir="runs/serve",
+                      journal_dir="runs/serve/journal")
     server = SimServer(cfg)
     h = server.submit(SimJob(state=st, potential=pot, cfg=icfg,
                              masses=m, magnetic=mag, steps=100))
     server.drain()                  # or server.start() for a worker
     h.wait(); h.observables         # streamed rows, job clock
 
-See ``docs/serving.md`` for the job API and the operator runbook.
+Crash recovery: after the process dies (SIGKILL included), rebuild with
+``SimServer.recover(cfg)`` and resubmit the same requests - completed
+jobs deduplicate against the journal, interrupted jobs re-seat from
+their committed watermark, and the remaining streams are bitwise the
+uninterrupted ones.  See ``docs/serving.md`` for the job API, the WAL
+record schema, and the operator runbook.
 """
 from __future__ import annotations
 
@@ -36,26 +45,36 @@ import threading
 import numpy as np
 
 from repro.serve.accounting import (Accounting, AdmissionError, TenantQuota)
-from repro.serve.bucket import BucketKey, bucket_key
+from repro.serve.bucket import BucketKey, bucket_key, job_digest
+from repro.serve.journal import JobJournal, RecoveryState, replay_journal
 from repro.serve.pack import BucketRuntime
-from repro.serve.queue import (DONE, EVICTED, FAILED, QUEUED, RUNNING,
-                               JobHandle, JobQueue, SimJob)
+from repro.serve.queue import (CANCELLED, COMPLETED, DONE, EVICTED, FAILED,
+                               QUARANTINED, QUEUED, RUNNING, SHED, TERMINAL,
+                               JobHandle, JobQueue, RequeuePolicy, SimJob)
 from repro.telemetry import HealthConfig
-from repro.telemetry.runlog import append_event
+from repro.telemetry.runlog import append_event, repair_tail
 from repro.resilience.supervisor import SupervisorConfig
 
 __all__ = [
     "ServeConfig", "SimServer", "SimJob", "JobHandle", "JobQueue",
-    "BucketKey", "bucket_key", "BucketRuntime", "Accounting",
-    "AdmissionError", "TenantQuota", "validate_job",
-    "QUEUED", "RUNNING", "DONE", "FAILED", "EVICTED",
+    "BucketKey", "bucket_key", "job_digest", "BucketRuntime",
+    "Accounting", "AdmissionError", "TenantQuota", "RequeuePolicy",
+    "JobJournal", "RecoveryState", "replay_journal", "validate_job",
+    "QUEUED", "RUNNING", "QUARANTINED", "DONE", "COMPLETED", "FAILED",
+    "EVICTED", "CANCELLED", "SHED", "TERMINAL",
 ]
 
 
 def _default_supervisor() -> SupervisorConfig:
     # degrade_after=1: the first repeat of a failure class already tries
-    # slot eviction (the serving rung); retries bound evictions per batch
-    return SupervisorConfig(degrade_after=1, max_retries=3)
+    # slot eviction (the serving rung); retries bound evictions per batch.
+    # degrade_span=0 makes the dt rung inert: a packed batch must NEVER
+    # integrate at a different dt - that would both recompile the chunk
+    # and stream reduced-dt rows to every batch-mate, silently breaking
+    # the packed-vs-solo parity contract.  A non-attributable persistent
+    # failure therefore exhausts retries and fails the bucket instead.
+    return SupervisorConfig(degrade_after=1, max_retries=3,
+                            degrade_span=0)
 
 
 @dataclasses.dataclass
@@ -68,7 +87,20 @@ class ServeConfig:
     knot count K every job protocol is padded to (jobs with more knots
     are refused).  ``runlog`` is truncated at server construction - one
     file is the flight record AND the accounting ledger for the server's
-    lifetime.  ``quotas`` maps tenant name to :class:`TenantQuota`.
+    lifetime (``SimServer.recover`` appends instead).  ``quotas`` maps
+    tenant name to :class:`TenantQuota`.
+
+    Crash safety / backpressure (PR 9): ``journal_dir`` enables the
+    durable job journal (WAL) and per-bucket checkpointing; ``requeue``
+    is the eviction/expiry retry ladder.  ``max_pending`` bounds live
+    (non-terminal) jobs - beyond it the ``shed_policy`` decides who pays:
+    ``"reject"`` refuses the newcomer, ``"priority"`` sheds the
+    lowest-``tenant_priority`` queued job to make room.  Before shedding
+    starts, ``overload_after`` pending jobs switch admission to overload
+    mode: new jobs' ``obs_every`` is stretched by ``overload_obs_factor``
+    (when divisibility allows) to cut streaming work per step.
+    ``faults`` installs a :class:`~repro.resilience.faults.FaultPlan` on
+    every bucket engine - the chaos harness's entry point.
     """
 
     runlog: str
@@ -82,6 +114,15 @@ class ServeConfig:
     supervisor: SupervisorConfig = dataclasses.field(
         default_factory=_default_supervisor)
     quotas: dict = dataclasses.field(default_factory=dict)
+    journal_dir: str | None = None
+    requeue: RequeuePolicy = dataclasses.field(
+        default_factory=RequeuePolicy)
+    max_pending: int | None = None
+    shed_policy: str = "reject"         # "reject" | "priority"
+    tenant_priority: dict = dataclasses.field(default_factory=dict)
+    overload_after: int | None = None
+    overload_obs_factor: int = 2
+    faults: object | None = None        # FaultPlan (chaos harness)
 
 
 def validate_job(job: SimJob, cfg: ServeConfig) -> None:
@@ -139,20 +180,72 @@ class SimServer:
     into per-tenant totals at call time.
     """
 
-    def __init__(self, cfg: ServeConfig):
+    def __init__(self, cfg: ServeConfig, *, _fresh: bool = True):
         self.cfg = cfg
         os.makedirs(cfg.workdir, exist_ok=True)
         parent = os.path.dirname(str(cfg.runlog))
         if parent:
             os.makedirs(parent, exist_ok=True)
-        open(cfg.runlog, "w").close()   # the server's ledger starts here
+        self.journal = (JobJournal(cfg.journal_dir)
+                        if cfg.journal_dir else None)
+        if _fresh:
+            open(cfg.runlog, "w").close()   # the ledger starts here
+            if self.journal is not None:
+                open(self.journal.path, "w").close()
+                self.journal.write("journal_start", slots=cfg.slots,
+                                   chunk=cfg.chunk,
+                                   schedule_knots=cfg.schedule_knots)
         self.buckets: dict[BucketKey, BucketRuntime] = {}
         self.handles: list[JobHandle] = []
         self._ids = itertools.count()
         self._lock = threading.Lock()       # submit vs worker
         self._accepted: dict[str, dict] = {}   # tenant -> jobs/steps
+        self._recovery: RecoveryState | None = None
         self._thread: threading.Thread | None = None
         self._stop = threading.Event()
+
+    # -- crash recovery ------------------------------------------------
+    @classmethod
+    def recover(cls, cfg: ServeConfig) -> "SimServer":
+        """Rebuild a server from its durable journal after a crash.
+
+        Repairs crash-torn tails on both logs, replays the journal into
+        a :class:`~repro.serve.journal.RecoveryState`, neutralizes
+        orphan runlog chunk records (segments computed after the last
+        durable commit - see ``recovery_discard`` in accounting), and
+        marks every known bucket for warmup re-classification.  The
+        caller then RESUBMITS its requests: :meth:`submit` matches each
+        on :func:`job_digest` - completed jobs come back instantly DONE
+        (``recovered=True``, no recomputation, no double charge),
+        interrupted jobs re-seat from their committed watermark, queued
+        jobs re-queue in admission order."""
+        if not cfg.journal_dir:
+            raise ValueError("recover() needs cfg.journal_dir")
+        repair_tail(os.path.join(cfg.journal_dir, "journal.jsonl"))
+        if os.path.exists(cfg.runlog):
+            repair_tail(cfg.runlog)
+        state = replay_journal(cfg.journal_dir)
+        srv = cls(cfg, _fresh=False)
+        srv._recovery = state
+        srv._ids = itertools.count(state.max_job_num + 1)
+        srv._accepted = {t: dict(m) for t, m in state.accepted.items()}
+        # neutralize computed-but-uncommitted slot-steps so the
+        # charged+idle==computed invariant closes across incarnations
+        if os.path.exists(cfg.runlog):
+            acct = Accounting.from_runlog(cfg.runlog, tolerant=True)
+            for bucket, slot_steps in sorted(acct.pending.items()):
+                if slot_steps:
+                    append_event(cfg.runlog, "recovery_discard",
+                                 bucket=bucket, slot_steps=slot_steps)
+        append_event(cfg.runlog, "recover",
+                     buckets=sorted(b.bucket
+                                    for b in state.buckets.values()))
+        srv.journal.write("recovered",
+                          jobs=len(state.jobs),
+                          interrupted=[r.job_id
+                                       for r in state.interrupted()],
+                          queued=[r.job_id for r in state.queued()])
+        return srv
 
     # ------------------------------------------------------------------
     def _check_quota(self, job: SimJob) -> None:
@@ -172,23 +265,159 @@ class SimServer:
                 f"tenant {job.tenant!r} over step quota "
                 f"({used['steps']} + {job.steps} > {quota.max_steps})")
 
+    # -- backpressure --------------------------------------------------
+    def _pending(self) -> int:
+        return sum(1 for h in self.handles if h.status not in TERMINAL)
+
+    def _priority(self, tenant: str) -> float:
+        return float(self.cfg.tenant_priority.get(tenant, 0.0))
+
+    def _stretch_for_overload(self, job: SimJob, digest: str) -> SimJob:
+        """Overload mode: stretch ``obs_every`` to shed streaming work
+        before refusing jobs outright.  Identity (``digest``) is of the
+        ORIGINAL request; the stretch is journaled in ``admitted``."""
+        cfg = self.cfg
+        if cfg.overload_after is None or cfg.overload_obs_factor <= 1:
+            return job
+        if self._pending() < cfg.overload_after:
+            return job
+        obs = job.obs_every * cfg.overload_obs_factor
+        if job.steps % obs or cfg.chunk % obs:
+            return job                   # stretch would break admission
+        return dataclasses.replace(job, obs_every=obs)
+
+    def _shed_for_admission(self, job: SimJob, digest: str) -> None:
+        """Bounded-queue gate: raise (reject-newest) or evict a queued
+        lower-priority victim (shed-lowest-tenant-priority)."""
+        cfg = self.cfg
+        if cfg.max_pending is None or self._pending() < cfg.max_pending:
+            return
+        if cfg.shed_policy == "priority":
+            victim, vrt = None, None
+            for rt in self.buckets.values():
+                for h in rt.queue.peek_all():
+                    if h.status != QUEUED:
+                        continue
+                    if victim is None or (self._priority(h.tenant)
+                                          < self._priority(victim.tenant)):
+                        victim, vrt = h, rt
+            if (victim is not None
+                    and self._priority(victim.tenant)
+                    < self._priority(job.tenant)):
+                vrt.queue.remove(victim)
+                victim.finish(SHED, error="load shed: lower priority")
+                self._refund(victim.job)
+                append_event(self.cfg.runlog, "job_shed", job=victim.id,
+                             tenant=victim.tenant, policy="priority")
+                if self.journal is not None:
+                    self.journal.write("shed", job=victim.id,
+                                       digest=victim.digest,
+                                       tenant=victim.tenant,
+                                       policy="priority",
+                                       tenant_refund=True)
+                return
+        if self.journal is not None:
+            self.journal.write("shed", job=None, digest=digest,
+                               tenant=job.tenant, policy="reject")
+        raise AdmissionError(
+            f"server over max_pending ({cfg.max_pending}): job rejected "
+            f"(shed_policy={cfg.shed_policy!r})")
+
+    def _refund(self, job: SimJob) -> None:
+        used = self._accepted.get(job.tenant)
+        if used is not None:
+            used["jobs"] -= 1
+            used["steps"] -= job.steps
+
+    # -- recovery-aware admission --------------------------------------
+    def _recovered_submit(self, job: SimJob, digest: str):
+        """Match a resubmission against the replayed journal; returns a
+        handle (dedup / re-seat / re-queue) or None for unknown jobs."""
+        state = self._recovery
+        rec = (state.jobs.get(digest) if state is not None else None)
+        if rec is None:
+            return None
+        state.jobs.pop(digest)      # one lifecycle claim per recovery
+        if rec.obs_every is not None and rec.obs_every != job.obs_every:
+            job = dataclasses.replace(job, obs_every=rec.obs_every)
+        if rec.status in ("completed", "deduplicated"):
+            # already durably done in a previous incarnation: no
+            # recomputation, no new charge (rows were streamed to the
+            # previous incarnation's caller and are not replayable)
+            handle = JobHandle(job, rec.job_id, digest=digest)
+            handle.recovered = True
+            handle.done_steps = rec.steps
+            handle.finish(DONE)
+            self.journal.write("deduplicated", job=rec.job_id,
+                              digest=digest, tenant=rec.tenant)
+            self.handles.append(handle)
+            return handle
+        if rec.status in ("failed", "cancelled", "shed"):
+            return None                  # terminal non-success: fresh job
+        key = bucket_key(job, self.cfg)
+        handle = JobHandle(job, rec.job_id, bucket=key, digest=digest)
+        handle.recovered = True
+        rt = self.buckets.get(key)
+        if rt is None:
+            rt = self.buckets[key] = BucketRuntime(key, self.cfg,
+                                                   journal=self.journal)
+            brec = state.buckets.get(key.id)
+            if brec is not None and brec.ckpt_step is not None:
+                rt.adopt(brec)
+        seat = None
+        b = state.buckets.get(key.id)
+        if (b is not None and rec.slot is not None
+                and b.slots.get(rec.slot) == digest
+                and rec.watermark < rec.steps):
+            seat = rec.slot
+        if seat is not None and rt.adopt_handle(seat, handle):
+            handle.done_steps = rec.watermark
+            handle.rows_base = rec.watermark // job.obs_every
+        else:
+            rt.submit(handle)           # re-queue from step 0
+        self.handles.append(handle)
+        return handle
+
+    # ------------------------------------------------------------------
     def submit(self, job: SimJob) -> JobHandle:
-        """Admit one job: validate, meter, bucket, enqueue."""
+        """Admit one job: validate, meter, bucket, enqueue.
+
+        With a journal, admission is idempotent on :func:`job_digest`:
+        after :meth:`recover`, resubmitting a journaled request resumes
+        (or deduplicates) its previous lifecycle instead of starting a
+        new one."""
         validate_job(job, self.cfg)
+        digest = job_digest(job) if self.journal is not None else None
         with self._lock:
+            if digest is not None:
+                handle = self._recovered_submit(job, digest)
+                if handle is not None:
+                    return handle
             self._check_quota(job)
+            self._shed_for_admission(job, digest)
+            if digest is not None:
+                self.journal.write("submitted", digest=digest,
+                                   tenant=job.tenant, steps=job.steps,
+                                   name=job.name)
+            job = self._stretch_for_overload(job, digest)
+            validate_job(job, self.cfg)     # stretch kept it admissible
             key = bucket_key(job, self.cfg)
             handle = JobHandle(job, f"job-{next(self._ids):03d}",
-                               bucket=key)
+                               bucket=key, digest=digest)
             used = self._accepted[job.tenant]
             used["jobs"] += 1
             used["steps"] += job.steps
             rt = self.buckets.get(key)
             if rt is None:
-                rt = self.buckets[key] = BucketRuntime(key, self.cfg)
+                rt = self.buckets[key] = BucketRuntime(
+                    key, self.cfg, journal=self.journal)
             append_event(self.cfg.runlog, "job_submit", job=handle.id,
                          tenant=job.tenant, bucket=key.id,
                          steps=job.steps, name=job.name)
+            if digest is not None:
+                self.journal.write("admitted", job=handle.id,
+                                   digest=digest, bucket=key.id,
+                                   obs_every=job.obs_every)
             rt.submit(handle)
             self.handles.append(handle)
         return handle
@@ -240,4 +469,4 @@ class SimServer:
     @property
     def accounting(self) -> Accounting:
         """Per-tenant / per-bucket totals replayed from the runlog."""
-        return Accounting.from_runlog(self.cfg.runlog)
+        return Accounting.from_runlog(self.cfg.runlog, tolerant=True)

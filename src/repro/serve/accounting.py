@@ -43,8 +43,9 @@ class TenantQuota:
 
 def _tenant_zero() -> dict:
     return {"jobs_submitted": 0, "jobs_done": 0, "jobs_failed": 0,
-            "jobs_evicted": 0, "requested_steps": 0, "charged_steps": 0,
-            "wall_s": 0.0}
+            "jobs_evicted": 0, "jobs_shed": 0, "jobs_requeued": 0,
+            "jobs_expired": 0, "jobs_cancelled": 0,
+            "requested_steps": 0, "charged_steps": 0, "wall_s": 0.0}
 
 
 def _bucket_zero() -> dict:
@@ -68,9 +69,18 @@ class Accounting:
         self.buckets: dict[str, dict] = {}
         self.idle_steps = 0
         self.evictions: list[dict] = []
+        self.sheds: list[dict] = []
+        self.requeues: list[dict] = []
+        self.recoveries = 0
+        # ok slot-steps accrued since each bucket's last serve_chunk: the
+        # crash-orphan window (computed but never charged nor idled).
+        # SimServer.recover turns a nonzero tail into `recovery_discard`
+        # events so the invariant closes across incarnations.
+        self.pending: dict[str, int] = {}
         self._bucket = None        # current run_start's bucket tag
         self._replicas = 0
         self._in_degrade_span = False
+        self._rewarm: set = set()  # buckets whose next chunk is a warmup
 
     # ------------------------------------------------------------------
     def _tenant(self, name) -> dict:
@@ -92,8 +102,11 @@ class Accounting:
             b = self._bucket_of(self._bucket)
             b["chunks"] += 1
             compiles = int(rec.get("compiles") or 0)
-            if b["chunks"] == 1:
+            if b["chunks"] == 1 or self._bucket in self._rewarm:
+                # a recovered incarnation recompiles once per bucket: its
+                # first post-recover chunk is warmup, like bucket birth
                 b["warmup_compiles"] += compiles
+                self._rewarm.discard(self._bucket)
             else:
                 b["steady_compiles"] += compiles
             if rec.get("verdict") == "fail":
@@ -101,8 +114,11 @@ class Accounting:
             elif self._in_degrade_span:
                 pass   # rolled back after the span: nobody is charged
             else:
-                b["ok_slot_steps"] += int(rec["steps"]) * self._replicas
+                slot_steps = int(rec["steps"]) * self._replicas
+                b["ok_slot_steps"] += slot_steps
                 b["wall_s"] += float(rec.get("wall_s") or 0.0)
+                self.pending[self._bucket] = (
+                    self.pending.get(self._bucket, 0) + slot_steps)
         elif ev == "degrade" and rec.get("action") == "dt":
             self._in_degrade_span = True
         elif ev == "degrade_restore":
@@ -116,6 +132,20 @@ class Accounting:
                 t["wall_s"] += (float(rec.get("wall_s") or 0.0)
                                 / max(len(occupied), 1))
             self.idle_steps += steps * len(rec.get("idle") or ())
+            if rec.get("bucket") is not None:
+                self.pending[str(rec["bucket"])] = 0   # segment committed
+        elif ev == "recovery_discard":
+            # crash-orphan neutralization: slot-steps computed after the
+            # last committed segment were never streamed or charged; the
+            # recovered server recomputes them from the rollback point
+            b = self._bucket_of(rec["bucket"])
+            slot_steps = int(rec["slot_steps"])
+            b["ok_slot_steps"] -= slot_steps
+            left = self.pending.get(str(rec["bucket"]), 0) - slot_steps
+            self.pending[str(rec["bucket"])] = max(left, 0)
+        elif ev == "recover":
+            self.recoveries += 1
+            self._rewarm = set(map(str, rec.get("buckets") or ()))
         elif ev == "job_submit":
             t = self._tenant(rec["tenant"])
             t["jobs_submitted"] += 1
@@ -128,12 +158,23 @@ class Accounting:
             if rec.get("tenant") is not None:
                 self._tenant(rec["tenant"])["jobs_evicted"] += 1
             self.evictions.append(rec)
+        elif ev == "job_shed":
+            self._tenant(rec["tenant"])["jobs_shed"] += 1
+            self.sheds.append(rec)
+        elif ev == "job_requeued":
+            self._tenant(rec["tenant"])["jobs_requeued"] += 1
+            self.requeues.append(rec)
+        elif ev == "job_expired":
+            self._tenant(rec["tenant"])["jobs_expired"] += 1
+        elif ev == "job_cancelled":
+            self._tenant(rec["tenant"])["jobs_cancelled"] += 1
 
     @classmethod
-    def from_runlog(cls, path) -> "Accounting":
-        """Replay a whole serving runlog file."""
+    def from_runlog(cls, path, tolerant: bool = False) -> "Accounting":
+        """Replay a whole serving runlog file.  ``tolerant=True`` skips a
+        crash-torn final line (crash recovery replays what committed)."""
         acct = cls()
-        for rec in read_runlog(path):
+        for rec in read_runlog(path, tolerant=tolerant):
             acct.feed(rec)
         return acct
 
@@ -157,4 +198,7 @@ class Accounting:
                 "charged_steps": self.charged_steps,
                 "computed_slot_steps": self.computed_slot_steps,
                 "evictions": len(self.evictions),
+                "sheds": len(self.sheds),
+                "requeues": len(self.requeues),
+                "recoveries": self.recoveries,
                 "consistent": self.consistent()}

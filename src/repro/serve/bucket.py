@@ -76,6 +76,49 @@ class BucketKey:
         return _h([repr(self).encode()])[:8]
 
 
+def _schedule_digest_parts(x) -> list:
+    """Digestable byte parts of a protocol leg (None | scalar | Schedule)."""
+    parts = [type(x).__name__.encode()]
+    if x is None:
+        return parts
+    for attr in ("knots_t", "knots_v", "t", "v", "times", "values"):
+        v = getattr(x, attr, None)
+        if v is not None:
+            a = np.asarray(v)
+            parts.append(attr.encode())
+            parts.append(np.ascontiguousarray(a).tobytes())
+    if len(parts) == 1:            # plain scalar / array protocol
+        a = np.asarray(x)
+        parts.append(np.ascontiguousarray(a).tobytes())
+    return parts
+
+
+def job_digest(job) -> str:
+    """Content digest identifying one submitted job request.
+
+    This is the journal's idempotency key: resubmitting the same request
+    after a crash maps onto the journaled lifecycle of the original, so
+    completed work is never recomputed (or re-charged) and interrupted
+    work resumes from its watermark.  Digested over the ORIGINAL request -
+    the full dynamical state (spins/velocities, not just the bucket's
+    crystalline geometry), the protocol's actual knots, the step/seed/
+    cadence budget, and the tenant - but NOT over server-side mutations
+    (an overload-stretched ``obs_every`` is recorded in the journal's
+    ``admitted`` event instead)."""
+    parts = [geometry_digest(job.state, job.masses, job.magnetic).encode(),
+             potential_digest(job.potential).encode()]
+    for a in (job.state.spin, job.state.vel):
+        x = np.asarray(a)
+        parts.append(np.ascontiguousarray(x).tobytes())
+    parts += _schedule_digest_parts(job.temperature)
+    parts += _schedule_digest_parts(job.field)
+    parts.append(repr((job.steps, job.obs_every, job.seed, job.tenant,
+                       tuple(job.observables), job.cutoff, job.skin,
+                       job.capacity, job.name, job.deadline_steps,
+                       job.timeout_s)).encode())
+    return _h(parts)
+
+
 def bucket_key(job, cfg) -> BucketKey:
     """Reduce a job + server config to its :class:`BucketKey`."""
     icfg = job.cfg

@@ -28,10 +28,33 @@ Failure isolation: segments run under the PR 7 Supervisor, and the
 engine's ``evict_slot_hook`` (installed here) turns the degradation rung
 into an eviction - the failing chunk's per-slot health signals pin the
 fault on one slot (:func:`repro.resilience.supervisor.attribute_slot`),
-that job is finished EVICTED with its protocol neutralized, and the
+that job is retired (see below) with its protocol neutralized, and the
 batch replays the segment from the rollback checkpoint, bitwise, without
 it.  Only when no slot can be blamed (or retries run out) does the whole
 bucket fail.
+
+Retirement ladder (PR 9): an evicted or deadline-expired job is not
+necessarily terminal.  Under a :class:`~repro.serve.queue.RequeuePolicy`
+with retry budget it is QUARANTINED for an exponential backoff
+(:func:`repro.resilience.supervisor.backoff_delay`) and then re-queued
+from step 0; ``max_strikes`` consecutive same-class failures (keyed on
+``HealthError.kind``, the supervisor's own ladder currency) classify it
+permanently - EVICTED for health kinds, FAILED for deadline/timeout.
+Deadlines (``SimJob.deadline_steps`` on the bucket clock since
+admission, ``SimJob.timeout_s`` on the wall since submit) and caller
+cancellation are enforced at chunk boundaries: mid-chunk state is
+compiled in, so chunk granularity is the contract.
+
+Crash safety: with a :class:`~repro.serve.journal.JobJournal` attached,
+every seat / backfill / retirement is journaled, and each segment ends
+with a ``commit`` record carrying the seated jobs' step watermarks and
+the bucket's newest checkpoint ref.  Checkpoint step tags are rebased
+onto the monotonic bucket-global clock (``Engine.ckpt_step_offset``;
+slot-0's own clock resets on backfill) so refs never move backwards.
+``SimServer.recover`` replays the journal and hands the bucket an
+adoption plan; :meth:`BucketRuntime._resume_engine` rebuilds the packed
+engine and restores the journaled checkpoint, after which the surviving
+jobs' remaining streams are bitwise the uninterrupted ones.
 """
 from __future__ import annotations
 
@@ -42,14 +65,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.ckpt import available_steps
 from repro.ensemble import protocol
 from repro.ensemble.replica import stack_states, unstack_state
 from repro.md.engine import Engine
 from repro.parallel.plan import Replicated
-from repro.resilience.supervisor import Supervisor, attribute_slot
-from repro.serve.queue import (DONE, EVICTED, FAILED, JobQueue)
+from repro.resilience.faults import install_faults
+from repro.resilience.supervisor import (Strikes, Supervisor,
+                                         attribute_slot, backoff_delay)
+from repro.serve.queue import (CANCELLED, DONE, EVICTED, FAILED, TERMINAL,
+                               JobQueue)
 from repro.telemetry import HealthError, Telemetry
 from repro.telemetry.runlog import append_event
+
+_EXPIRY_KINDS = ("deadline", "timeout")
 
 
 def _is_sched(x) -> bool:
@@ -66,10 +95,12 @@ class BucketRuntime:
     whether any work was done.
     """
 
-    def __init__(self, key, cfg):
+    def __init__(self, key, cfg, journal=None):
         self.key = key
         self.cfg = cfg
+        self.journal = journal              # JobJournal | None
         self.queue = JobQueue()
+        self.quarantine = []                # handles in backoff
         self.engine: Engine | None = None
         self.handles = [None] * key.slots
         self.keys = None                    # (R, 2) host-side key stack
@@ -80,15 +111,75 @@ class BucketRuntime:
         self.supervisor = (Supervisor(cfg.supervisor, runlog=cfg.runlog)
                            if cfg.supervised else None)
         self._ckpt_dir = os.path.join(cfg.workdir, f"bucket-{key.id}")
+        self._recovery = None               # BucketRecord adoption plan
+        self._adopted: dict = {}            # slot -> handle (pre-resume)
 
     # ------------------------------------------------------------------
+    def _jlog(self, event: str, **fields) -> None:
+        if self.journal is not None:
+            self.journal.write(event, bucket=self.key.id, **fields)
+
     def submit(self, handle) -> None:
+        handle.enqueued_at_steps = self.segments * self.key.chunk
         self.queue.push(handle)
 
     def has_work(self) -> bool:
         return not self.failed and (
             len(self.queue) > 0
-            or any(h is not None for h in self.handles))
+            or bool(self._adopted)
+            or any(h is not None for h in self.handles)
+            or any(h.status not in TERMINAL for h in self.quarantine))
+
+    # -- recovery adoption ---------------------------------------------
+    def adopt(self, plan) -> None:
+        """Accept a journal-replayed :class:`BucketRecord`: continue the
+        segment clock and (until the engine starts) hold the re-seat map
+        open for resubmitted interrupted jobs."""
+        self._recovery = plan
+        self.segments = int(plan.segment)
+
+    def adopt_handle(self, slot: int, handle) -> bool:
+        """Claim a recovered seat for a resubmitted job.  Returns False
+        when the plan is gone (engine already resumed, or the checkpoint
+        ref is not on disk) - the caller re-queues from scratch."""
+        if self.engine is not None or self._recovery is None:
+            return False
+        if self._recovery.slots.get(slot) != handle.digest:
+            return False
+        if self._recovery.ckpt_step not in available_steps(self._ckpt_dir):
+            return False
+        self._adopted[slot] = handle
+        return True
+
+    def _resume_engine(self) -> None:
+        """Rebuild the packed engine from the journaled recovery plan and
+        restore the committed checkpoint (carry + (R, 2) key chain)."""
+        plan, self._recovery = self._recovery, None
+        adopted, self._adopted = self._adopted, {}
+        job0 = next(iter(adopted.values())).job
+        states, tlist, flist = [], [], []
+        for i in range(self.key.slots):
+            h = adopted.get(i)
+            if h is not None:
+                states.append(h.job.state)      # shape template only:
+                ts, fs = self._job_schedules(h.job)  # restore overwrites
+            else:
+                states.append(job0.state)
+                ts, fs = self._idle_schedules()
+            tlist.append(ts)
+            flist.append(fs)
+        self.tsched = protocol.stack_schedules(tlist, k=self.key.knots)
+        self.fsched = protocol.stack_schedules(flist, k=self.key.knots)
+        eng = self._build_engine(job0, stack_states(states))
+        key = eng.restore(self._ckpt_dir, step=plan.ckpt_step)
+        self.engine = eng
+        self.keys = jnp.asarray(np.asarray(key))
+        for i, h in adopted.items():
+            self.handles[i] = h
+            h.attempts = max(h.attempts, 1)
+            h.mark_running()
+            self._jlog("seated", job=h.id, digest=h.digest, slot=i,
+                       segment=self.segments, recovered=True)
 
     # -- schedule rows -------------------------------------------------
     def _job_schedules(self, job):
@@ -126,29 +217,147 @@ class BucketRuntime:
             self.engine.temperature = self.tsched
             self.engine.field = self.fsched
 
+    # -- quarantine / expiry -------------------------------------------
+    def _requeue_ready(self) -> None:
+        """Move quarantined jobs whose backoff elapsed back to the queue
+        (from step 0 - their slot state died with the eviction)."""
+        now = time.time()
+        still = []
+        for h in self.quarantine:
+            if h.status in TERMINAL:        # cancelled while parked
+                continue
+            if h._ready_t > now:
+                still.append(h)
+                continue
+            h.reset_progress()
+            if not h.requeue():
+                continue
+            h.enqueued_at_steps = self.segments * self.key.chunk
+            self.queue.push(h)
+            append_event(self.cfg.runlog, "job_requeued", job=h.id,
+                         tenant=h.tenant, bucket=self.key.id,
+                         attempt=h.attempts + 1)
+            self._jlog("requeued", job=h.id, digest=h.digest,
+                       tenant=h.tenant, attempt=h.attempts + 1)
+        self.quarantine = still
+
+    def _expired_kind(self, h) -> str | None:
+        """Which budget (if any) the job has exhausted at this boundary."""
+        job = h.job
+        if (job.timeout_s is not None
+                and time.time() - h.submitted_t > job.timeout_s):
+            return "timeout"
+        if job.deadline_steps is not None:
+            elapsed = self.segments * self.key.chunk - h.enqueued_at_steps
+            if elapsed >= job.deadline_steps:
+                return "deadline"
+        return None
+
+    def _retire(self, h, slot: int | None, kind: str, error: str) -> str:
+        """Retirement ladder for an evicted/expired job: quarantine with
+        backoff while budget lasts, else classify permanently.  Returns
+        the disposition ("requeue" | "evicted" | "failed" | "cancelled")."""
+        policy = self.cfg.requeue
+        strikes = h.__dict__.setdefault("_strikes", Strikes())
+        count = strikes.hit(kind)
+        self._jlog("evicted", job=h.id, digest=h.digest, slot=slot,
+                   tenant=h.tenant, kind=kind)
+        if h.cancel_requested:
+            h.finish(CANCELLED, error=error)
+            append_event(self.cfg.runlog, "job_cancelled", job=h.id,
+                         tenant=h.tenant, bucket=self.key.id)
+            self._jlog("cancelled", job=h.id, digest=h.digest,
+                       tenant=h.tenant)
+            return "cancelled"
+        # a wall timeout is monotone - requeueing cannot un-expire it -
+        # so it is always permanent; a deadline window resets on requeue
+        permanent = (kind == "timeout"
+                     or h.attempts > policy.retries
+                     or count >= policy.max_strikes)
+        if kind in _EXPIRY_KINDS:
+            append_event(self.cfg.runlog, "job_expired", job=h.id,
+                         tenant=h.tenant, bucket=self.key.id, kind=kind,
+                         requeue=not permanent)
+        if permanent:
+            status = FAILED if kind in _EXPIRY_KINDS else EVICTED
+            h.finish(status, error=error)
+            self._jlog("failed", job=h.id, digest=h.digest, tenant=h.tenant,
+                       status=status, kind=kind)
+            return status
+        delay = backoff_delay(h.attempts, policy.backoff_s)
+        h.quarantine(time.time() + delay, error=error)
+        self.quarantine.append(h)
+        return "requeue"
+
     # -- seating -------------------------------------------------------
+    def _pop_seatable(self):
+        """Next queued handle that is still alive and inside its budgets
+        (queued-cancelled handles are skipped; already-expired ones are
+        retired without ever occupying a slot)."""
+        while True:
+            h = self.queue.pop()
+            if h is None:
+                return None
+            if h.status in TERMINAL:
+                continue
+            kind = self._expired_kind(h)
+            if kind is not None:
+                self._retire(h, None, kind,
+                             f"expired ({kind}) before seating")
+                continue
+            return h
+
     def _seat(self) -> None:
         """Fill free slots from the queue (engine start or backfill)."""
         if self.failed:
             return
+        self._requeue_ready()
+        if self.engine is None and (self._recovery is not None
+                                    and self._adopted):
+            self._resume_engine()
         if self.engine is None:
             if not len(self.queue):
                 return
             for i in range(self.key.slots):
-                if not len(self.queue):
+                h = self._pop_seatable()
+                if h is None:
                     break
-                h = self.queue.pop()
-                self.handles[i] = h
-                h.mark_running()
-            self._start_engine()
+                self._install(i, h, event="seated")
+            if any(h is not None for h in self.handles):
+                self._start_engine()
             return
         for i in range(self.key.slots):
             if self.handles[i] is not None or not len(self.queue):
                 continue
-            h = self.queue.pop()
-            self.handles[i] = h
-            h.mark_running()
+            h = self._pop_seatable()
+            if h is None:
+                continue
+            self._install(i, h, event="backfilled")
             self._backfill(i, h)
+
+    def _install(self, slot: int, h, event: str) -> None:
+        self.handles[slot] = h
+        h.attempts += 1
+        h.mark_running()
+        self._jlog(event, job=h.id, digest=h.digest, slot=slot,
+                   segment=self.segments)
+
+    def _build_engine(self, job0, states) -> Engine:
+        eng = Engine(
+            potential=job0.potential, cfg=job0.cfg,
+            state=states,
+            masses=jnp.asarray(job0.masses),
+            magnetic=jnp.asarray(job0.magnetic),
+            cutoff=self.key.cutoff, capacity=self.key.capacity,
+            skin=self.key.skin, plan=Replicated(self.key.slots),
+            temperature=self.tsched, field=self.fsched,
+            observables=self.key.observables,
+            obs_every=self.key.obs_every, per_slot=True)
+        eng.run_tags = {"bucket": self.key.id}
+        eng.evict_slot_hook = self._evict_hook
+        if getattr(self.cfg, "faults", None) is not None:
+            install_faults(eng, self.cfg.faults, runlog=self.cfg.runlog)
+        return eng
 
     def _start_engine(self) -> None:
         job0 = next(h for h in self.handles if h is not None).job
@@ -167,19 +376,7 @@ class BucketRuntime:
         self.tsched = protocol.stack_schedules(tlist, k=self.key.knots)
         self.fsched = protocol.stack_schedules(flist, k=self.key.knots)
         self.keys = jnp.stack(keys)
-        eng = Engine(
-            potential=job0.potential, cfg=job0.cfg,
-            state=stack_states(states),
-            masses=jnp.asarray(job0.masses),
-            magnetic=jnp.asarray(job0.magnetic),
-            cutoff=self.key.cutoff, capacity=self.key.capacity,
-            skin=self.key.skin, plan=Replicated(self.key.slots),
-            temperature=self.tsched, field=self.fsched,
-            observables=self.key.observables,
-            obs_every=self.key.obs_every, per_slot=True)
-        eng.run_tags = {"bucket": self.key.id}
-        eng.evict_slot_hook = self._evict_hook
-        self.engine = eng
+        self.engine = self._build_engine(job0, stack_states(states))
 
     def _backfill(self, slot: int, handle) -> None:
         """Seat a queued job into a freed slot between segments."""
@@ -193,7 +390,7 @@ class BucketRuntime:
 
     # -- failure isolation ---------------------------------------------
     def _evict_hook(self, err: HealthError):
-        """Supervisor hook: blame one slot, evict its job, keep the rest."""
+        """Supervisor hook: blame one slot, retire its job, keep the rest."""
         slot = attribute_slot(err.signals, err.kind)
         if slot is None or not (0 <= slot < self.key.slots):
             return None
@@ -202,10 +399,11 @@ class BucketRuntime:
             return None
         ts, fs = self._idle_schedules()
         self._set_slot_protocol(slot, ts, fs)
-        h.finish(EVICTED, error=str(err))
         self.handles[slot] = None
+        disposition = self._retire(h, slot, err.kind or "unknown",
+                                   str(err))
         return {"bucket": self.key.id, "slot": slot, "job": h.id,
-                "tenant": h.tenant}
+                "tenant": h.tenant, "disposition": disposition}
 
     def _fail_bucket(self, err) -> None:
         self.failed = True
@@ -217,27 +415,46 @@ class BucketRuntime:
             append_event(self.cfg.runlog, "job_failed", job=h.id,
                          tenant=h.tenant, bucket=self.key.id,
                          error=str(err))
+            self._jlog("failed", job=h.id, digest=h.digest,
+                       tenant=h.tenant, status=FAILED, kind="bucket")
         while len(self.queue):
             h = self.queue.pop()
             h.finish(FAILED, error=str(err))
             append_event(self.cfg.runlog, "job_failed", job=h.id,
                          tenant=h.tenant, bucket=self.key.id,
                          error=str(err))
+            self._jlog("failed", job=h.id, digest=h.digest,
+                       tenant=h.tenant, status=FAILED, kind="bucket")
         append_event(self.cfg.runlog, "bucket_failed",
                      bucket=self.key.id, error=str(err))
 
     # -- the segment loop ----------------------------------------------
+    def _active(self) -> dict:
+        return {i: h for i, h in enumerate(self.handles) if h is not None}
+
     def run_chunk(self) -> bool:
         """Advance the batch one ``chunk``-step segment; returns True if
         any work was done."""
         self._seat()
-        if self.engine is None or self.failed:
-            return False
-        active = {i: h for i, h in enumerate(self.handles)
-                  if h is not None}
-        if not active:
+        active = self._active()
+        if not active and self.quarantine:
+            # quarantine is the only work: wait out the earliest backoff
+            # so drain() keeps its liveness guarantee
+            wait = min(h._ready_t for h in self.quarantine) - time.time()
+            if wait > 0:
+                time.sleep(wait)
+            self._seat()
+            active = self._active()
+        if self.engine is None or self.failed or not active:
             return False
         chunk = self.key.chunk
+        checkpointed = (self.supervisor is not None
+                        or self.journal is not None)
+        if checkpointed:
+            # rebase checkpoint step tags onto the monotonic bucket clock
+            # (slot-0's own clock resets on backfill; journal refs can't)
+            self.engine.ckpt_step_offset = (
+                self.segments * chunk - self.engine._step_now())
         tel = Telemetry(runlog=self.cfg.runlog, health=self.cfg.health,
                         append=True)
         t_seg = time.perf_counter()
@@ -246,6 +463,10 @@ class BucketRuntime:
                 self.supervisor.run(
                     self.engine, chunk, self.keys, chunk=chunk,
                     checkpoint_dir=self._ckpt_dir, telemetry=tel)
+            elif self.journal is not None:
+                self.engine.run(chunk, self.keys, chunk,
+                                checkpoint_dir=self._ckpt_dir,
+                                telemetry=tel)
             else:
                 self.engine.run(chunk, self.keys, chunk, telemetry=tel)
         except HealthError as err:
@@ -265,6 +486,13 @@ class BucketRuntime:
             evicted=evicted,
             idle=[i for i in range(self.key.slots) if i not in active])
         self._harvest(active)
+        self._enforce_boundary()
+        self._jlog(
+            "commit", segment=self.segments,
+            ckpt_step=self.segments * chunk if checkpointed else None,
+            slots={str(i): {"job": h.id, "digest": h.digest,
+                            "done": h.done_steps}
+                   for i, h in self._active().items()})
         return True
 
     def _harvest(self, active: dict) -> None:
@@ -277,7 +505,7 @@ class BucketRuntime:
         for slot, h in active.items():
             if self.handles[slot] is not h:
                 continue    # evicted during this segment
-            have = h.rows_streamed
+            have = h.rows_base + h.rows_streamed
             want = h.job.steps // obs
             take = min(chunk // obs, want - have)
             if take > 0:
@@ -293,4 +521,28 @@ class BucketRuntime:
                 append_event(self.cfg.runlog, "job_done", job=h.id,
                              tenant=h.tenant, bucket=self.key.id,
                              steps=h.done_steps, requested=h.job.steps)
+                self._jlog("completed", job=h.id, digest=h.digest,
+                           tenant=h.tenant, steps=h.done_steps)
                 self.handles[slot] = None
+
+    def _enforce_boundary(self) -> None:
+        """Chunk-boundary policy sweep over still-seated jobs: caller
+        cancellation first, then deadline/timeout expiry."""
+        for slot, h in self._active().items():
+            if h.cancel_requested:
+                ts, fs = self._idle_schedules()
+                self._set_slot_protocol(slot, ts, fs)
+                self.handles[slot] = None
+                h.finish(CANCELLED)
+                append_event(self.cfg.runlog, "job_cancelled", job=h.id,
+                             tenant=h.tenant, bucket=self.key.id)
+                self._jlog("cancelled", job=h.id, digest=h.digest,
+                           tenant=h.tenant)
+                continue
+            kind = self._expired_kind(h)
+            if kind is not None:
+                ts, fs = self._idle_schedules()
+                self._set_slot_protocol(slot, ts, fs)
+                self.handles[slot] = None
+                self._retire(h, slot, kind,
+                             f"{kind} exceeded at chunk boundary")

@@ -113,12 +113,41 @@ def append_event(path: str | os.PathLike, event: str, **fields) -> dict:
     return record
 
 
-def read_runlog(path: str | os.PathLike) -> list[dict]:
-    """Parse a runlog back into a list of record dicts."""
+def read_runlog(path: str | os.PathLike,
+                tolerant: bool = False) -> list[dict]:
+    """Parse a runlog back into a list of record dicts.
+
+    ``tolerant=True`` skips undecodable lines instead of raising - a
+    process killed mid-``write`` leaves a torn final line, and crash
+    recovery must still read every complete record before it."""
     records = []
     with open(path) as fh:
         for line in fh:
             line = line.strip()
-            if line:
+            if not line:
+                continue
+            try:
                 records.append(json.loads(line))
+            except json.JSONDecodeError:
+                if not tolerant:
+                    raise
     return records
+
+
+def repair_tail(path: str | os.PathLike) -> bool:
+    """Terminate a torn final line left by a crash mid-write.
+
+    A SIGKILL between ``write`` and its trailing newline leaves a partial
+    record with no line terminator; a later ``append_event`` would fuse
+    its JSON onto the torn fragment and corrupt BOTH records.  Appending
+    one newline quarantines the fragment as its own (undecodable,
+    ``tolerant``-skipped) line.  Returns True when a repair was needed."""
+    path = str(path)
+    if not os.path.exists(path) or os.path.getsize(path) == 0:
+        return False
+    with open(path, "rb+") as fh:
+        fh.seek(-1, os.SEEK_END)
+        if fh.read(1) == b"\n":
+            return False
+        fh.write(b"\n")
+    return True

@@ -36,9 +36,9 @@ from repro.ensemble import protocol
 from repro.md.integrator import IntegratorConfig
 from repro.md.lattice import simple_cubic
 from repro.md.state import init_state
-from repro.serve import (AdmissionError, ServeConfig, SimJob, SimServer,
-                         TenantQuota, bucket_key)
-from repro.launch.report import runlog_report
+from repro.serve import (AdmissionError, RequeuePolicy, ServeConfig, SimJob,
+                         SimServer, TenantQuota, bucket_key)
+from repro.launch.report import journal_report, runlog_report
 
 
 LAT = simple_cubic()
@@ -256,3 +256,177 @@ def test_poisoned_job_evicted_mates_survive(tmp_path):
     assert len(acct.evictions) == 1
     assert acct.evictions[0]["job"] == bad.id
     assert "evict" in runlog_report(srv.cfg.runlog)
+
+
+# ---------------------------------------------------------------------------
+# PR 9: requeue ladder, deadlines, cancellation, shedding, WAL recovery
+# ---------------------------------------------------------------------------
+
+def test_eviction_requeue_strikes_out_accounting_closes(tmp_path):
+    """A poisoned job with retry budget is evicted, quarantined, requeued
+    once, evicted again (second same-class strike -> permanent EVICTED);
+    the accounting invariant closes across the whole ladder and the
+    healthy batch-mate is bitwise unperturbed."""
+    poison = protocol.Schedule(
+        times=jnp.asarray([0.0, 1.0], jnp.float32),
+        values=jnp.asarray([float("nan")] * 2, jnp.float32))
+    cfg = serve_cfg(tmp_path, "requeue",
+                    requeue=RequeuePolicy(retries=3, backoff_s=0.0,
+                                          max_strikes=2))
+    srv = SimServer(cfg)
+    good = srv.submit(mkjob(30, 31, "alice"))
+    bad = srv.submit(mkjob(20, 32, "eve", temp=poison))
+    srv.drain()
+    assert bad.status == "evicted"      # struck out, not retry-exhausted
+    assert bad.attempts == 2            # seated, evicted, requeued, evicted
+    assert good.status == "done", good.error
+
+    acct = srv.accounting
+    assert acct.consistent()
+    assert len(acct.evictions) == 2
+    assert len(acct.requeues) == 1
+    assert acct.tenants["eve"]["jobs_evicted"] == 2
+    assert acct.tenants["eve"]["jobs_requeued"] == 1
+    # eve pays for every segment its job actually occupied (both seatings)
+    assert acct.tenants["eve"]["charged_steps"] == 20
+
+    solo = SimServer(serve_cfg(tmp_path, "requeue-solo", slots=1))
+    ref = solo.submit(mkjob(30, 31, "alice"))
+    solo.drain()
+    for name, rows in ref.observables.items():
+        assert np.array_equal(good.observables[name], rows), name
+    assert np.array_equal(np.asarray(good.final_state.spin),
+                          np.asarray(ref.final_state.spin))
+
+
+def test_deadline_and_timeout_expiry(tmp_path):
+    srv = SimServer(serve_cfg(tmp_path, "expire", slots=1))
+    late = mkjob(40, 51, "alice")
+    late.deadline_steps = 10            # one chunk of budget, 4 needed
+    h1 = srv.submit(late)
+    slow = mkjob(20, 52, "bob")
+    slow.timeout_s = 1e-6               # expires while queued behind h1
+    h2 = srv.submit(slow)
+    srv.drain()
+    assert h1.status == "failed" and "deadline" in h1.error
+    assert h1.done_steps == 10          # got exactly its budgeted chunk
+    assert h2.status == "failed" and "timeout" in h2.error
+    assert h2.done_steps == 0           # never seated
+    acct = srv.accounting
+    assert acct.consistent()
+    assert acct.tenants["alice"]["jobs_expired"] == 1
+    assert acct.tenants["bob"]["jobs_expired"] == 1
+    assert acct.tenants["alice"]["charged_steps"] == 10
+
+
+def test_cancel_queued_and_running(tmp_path):
+    srv = SimServer(serve_cfg(tmp_path, "cancel", slots=1))
+    run = srv.submit(mkjob(40, 61, "alice"))
+    parked = srv.submit(mkjob(20, 62, "bob"))
+    assert parked.cancel() is True
+    assert parked.status == "cancelled"     # queued: immediate
+    srv._tick()                             # one segment for `run`
+    assert run.status == "running"
+    assert run.cancel() is True             # honored at next boundary
+    srv.drain()
+    assert run.status == "cancelled"
+    assert run.done_steps == 20             # the in-flight chunk completes
+    assert run.rows_streamed == 4           # its rows still stream
+    assert run.cancel() is False            # already terminal
+    acct = srv.accounting
+    assert acct.consistent()
+    assert acct.tenants["alice"]["jobs_cancelled"] == 1
+    assert acct.tenants["alice"]["charged_steps"] == 20
+
+
+def test_load_shedding_reject_and_priority(tmp_path):
+    srv = SimServer(serve_cfg(tmp_path, "shed-reject", max_pending=1))
+    srv.submit(mkjob(20, 71, "alice"))
+    with pytest.raises(AdmissionError):     # reject-newest (default)
+        srv.submit(mkjob(20, 72, "bob"))
+
+    srv2 = SimServer(serve_cfg(tmp_path, "shed-prio", max_pending=1,
+                               shed_policy="priority",
+                               tenant_priority={"gold": 1.0, "free": 0.0}))
+    low = srv2.submit(mkjob(20, 73, "free"))
+    gold = srv2.submit(mkjob(20, 74, "gold"))   # sheds `low` to get in
+    assert low.status == "shed"
+    with pytest.raises(AdmissionError):
+        # a newcomer may only shed a STRICTLY lower-priority victim
+        srv2.submit(mkjob(20, 75, "free"))
+    srv2.drain()
+    assert gold.status == "done"
+    acct = srv2.accounting
+    assert acct.consistent()
+    assert acct.tenants["free"]["jobs_shed"] == 1
+    assert len(acct.sheds) == 1
+
+
+def test_overload_mode_stretches_obs_every(tmp_path):
+    srv = SimServer(serve_cfg(tmp_path, "overload", overload_after=1,
+                              overload_obs_factor=2))
+    h1 = srv.submit(mkjob(20, 81))
+    h2 = srv.submit(mkjob(20, 82))      # admitted in overload mode
+    assert h1.job.obs_every == 5
+    assert h2.job.obs_every == 10       # degraded cadence, not refusal
+    srv.drain()
+    assert h1.status == "done" and h1.rows_streamed == 4
+    assert h2.status == "done" and h2.rows_streamed == 2
+
+
+def test_journal_recovery_resumes_bitwise(tmp_path):
+    """Kill-and-recover (in-process): after two committed segments the
+    server is abandoned mid-flight; ``SimServer.recover`` + resubmission
+    deduplicates the completed job, re-seats the interrupted one from its
+    watermark, and the remaining stream + final state are bitwise the
+    uninterrupted run's.  Accounting closes across both incarnations with
+    zero steady-state recompiles."""
+    def fleet():
+        return [mkjob(30, 91, "alice"),
+                mkjob(20, 92, "bob",
+                      temp=protocol.linear(0.0, 0.06, 10.0, 80.0))]
+
+    ref_srv = SimServer(serve_cfg(tmp_path, "ref"))
+    refs = [ref_srv.submit(j) for j in fleet()]
+    ref_srv.drain()
+
+    cfg = serve_cfg(tmp_path, "wal",
+                    journal_dir=os.path.join(str(tmp_path), "wal-journal"))
+    srv1 = SimServer(cfg)
+    h1 = [srv1.submit(j) for j in fleet()]
+    srv1._tick()
+    srv1._tick()                        # bob done (20), alice at 20/30
+    assert h1[1].status == "done"
+    assert h1[0].status == "running"
+    del srv1                            # "crash": never drained
+
+    srv2 = SimServer.recover(cfg)
+    h2 = [srv2.submit(j) for j in fleet()]
+    assert h2[1].recovered and h2[1].status == "done"   # deduplicated
+    assert h2[1].rows_streamed == 0     # rows went to incarnation 1
+    # adopted at its watermark (runs again at the first post-recover seat)
+    assert h2[0].recovered and h2[0].status == "queued"
+    assert h2[0].done_steps == 20 and h2[0].rows_base == 4
+    srv2.drain()
+    assert h2[0].status == "done", h2[0].error
+
+    for name, rows in refs[0].observables.items():
+        assert np.array_equal(h2[0].observables[name], rows[4:]), name
+    for leaf in ("pos", "spin", "vel", "step"):
+        assert np.array_equal(
+            np.asarray(getattr(h2[0].final_state, leaf)),
+            np.asarray(getattr(refs[0].final_state, leaf))), leaf
+
+    acct = srv2.accounting
+    assert acct.consistent()
+    assert acct.recoveries == 1
+    for b in acct.buckets.values():
+        assert b["steady_compiles"] == 0
+    # charged once per occupied segment across BOTH incarnations: the
+    # deduplicated job is never re-charged, the resumed one pays only
+    # for its one remaining segment
+    assert acct.tenants["alice"]["charged_steps"] == 30
+    assert acct.tenants["bob"]["charged_steps"] == 20
+    assert "Per-tenant" in runlog_report(cfg.runlog)
+    jrep = journal_report(os.path.join(cfg.journal_dir, "journal.jsonl"))
+    assert "commit" in jrep and "recovered" in jrep
