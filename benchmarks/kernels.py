@@ -1,8 +1,13 @@
 """Kernel microbenchmarks: fused vs reference implementations.
 
-Wall-clock here is CPU (Pallas interpret mode is a correctness harness, not
-a perf path), so the *jnp* algorithmic variants are timed; Pallas-kernel
-TPU performance is assessed structurally via the dry-run roofline.
+The NEP rows time the fused kernel pipeline stage by stage (K1
+descriptor+ANN+adjoints, the abar_j adjoint gather, K2 pair force/torque)
+through the mode-dispatched executor (``"auto"``: compiled Pallas on
+TPU/GPU, the compiled lax.map tiling on CPU), with jaxpr-level FLOPs and
+bytes per stage (repro.utils.jaxpr_cost) in the derived column - so both
+wall-clock AND op-count regressions of any single stage are visible.
+Attention/SSD rows time the *jnp* algorithmic variants (their Pallas
+kernels remain interpret-validated only).
 
 CSV: name, us_per_call, derived.
 """
@@ -62,11 +67,18 @@ def bench_ssd() -> list[str]:
 
 
 def bench_nep() -> list[str]:
-    """Fused NEP force evaluation throughput (the paper's hot kernel)."""
+    """Fused NEP force pipeline, stage by stage (the paper's hot kernel)."""
+    from functools import partial
+
     from repro.core.descriptor import NEPSpinSpec
     from repro.core.potential import energy_forces_field, init_params
+    from repro.kernels.nep import resolve_mode
+    from repro.kernels.nep.kernel import (TILE_ATOMS, nep_atom_pass,
+                                          nep_force_pass)
+    from repro.kernels.nep.ops import _pad_to, nep_energy_forces_field
+    from repro.launch.roofline import nep_measured
     from repro.md.lattice import b20_fege
-    from repro.md.neighbor import dense_neighbor_table
+    from repro.md.neighbor import dense_neighbor_table, gather_blocks
     from repro.md.state import init_state
     lat = b20_fege()
     st = init_state(lat, (4, 4, 4), temperature=300.0,
@@ -74,11 +86,57 @@ def bench_nep() -> list[str]:
     spec = NEPSpinSpec()
     params = init_params(spec, jax.random.PRNGKey(1), dtype=jnp.float32)
     tab = dense_neighbor_table(st.pos, st.box, spec.cutoff, 64)
-    fn = jax.jit(lambda p, s: energy_forces_field(
+    mode = resolve_mode("auto")
+    rows = []
+
+    # whole-evaluation reference points: autodiff vs the fused kernel path
+    ad = jax.jit(lambda p, s: energy_forces_field(
         spec, params, p, s, st.types, tab, st.box))
-    t = timeit(fn, st.pos, st.spin)
-    return [row("kernels/nep-fused-force", t * 1e6,
-                f"{st.n_atoms/t:.3e} atom/s")]
+    t_ad = timeit(ad, st.pos, st.spin)
+    rows.append(row("kernels/nep-autodiff-force", t_ad * 1e6,
+                    f"{st.n_atoms/t_ad:.3e} atom/s"))
+    kf = jax.jit(lambda p, s: nep_energy_forces_field(
+        spec, params, p, s, st.types, tab, st.box, mode=mode))
+    t_k = timeit(kf, st.pos, st.spin)
+    rows.append(row(f"kernels/nep-fused-force/{mode}", t_k * 1e6,
+                    f"{st.n_atoms/t_k:.3e} atom/s|{t_ad/t_k:.2f}x"))
+
+    # stage micro-rows: K1 / abar_j gather / K2 at the same geometry, each
+    # with its jaxpr-walked FLOPs + anchor bytes so op-count regressions
+    # (e.g. a K2 that re-runs accumulate per pair) are visible per stage
+    nbh = gather_blocks(st.pos, st.types, tab, st.box)
+    n = st.n_atoms
+    n_pad = -(-n // TILE_ATOMS) * TILE_ATOMS
+    a = {
+        "dr": _pad_to(nbh.dr, n_pad), "mask": _pad_to(nbh.mask, n_pad),
+        "amask": _pad_to(jnp.ones((n,), bool), n_pad),
+        "ti": _pad_to(st.types, n_pad), "tj": _pad_to(nbh.tj, n_pad),
+        "si": _pad_to(st.spin, n_pad),
+        "sj": _pad_to(st.spin[nbh.idx], n_pad),
+        "idx": _pad_to(nbh.idx, n_pad),
+    }
+    cost = nep_measured(spec, params, nbh, st.spin, st.types, mode=mode)
+
+    k1 = jax.jit(partial(nep_atom_pass, spec, params, mode=mode))
+    t1 = timeit(k1, a["dr"], a["mask"], a["amask"], a["ti"], a["tj"],
+                a["si"], a["sj"])
+    _, _, abar = k1(a["dr"], a["mask"], a["amask"], a["ti"], a["tj"],
+                    a["si"], a["sj"])
+    gather = jax.jit(lambda ab, ix: {k: v[ix] for k, v in ab.items()})
+    tg = timeit(gather, abar, a["idx"])
+    abar_j = gather(abar, a["idx"])
+    k2 = jax.jit(partial(nep_force_pass, spec, params, mode=mode))
+    t2 = timeit(k2, a["dr"], a["mask"], a["ti"], a["tj"], a["si"], a["sj"],
+                abar, abar_j)
+
+    for name, t, c in (("k1-atom-pass", t1, cost["k1"]),
+                       ("adjoint-gather", tg, cost["gather"]),
+                       ("k2-force-pass", t2, cost["k2"])):
+        rows.append(row(
+            f"kernels/nep-{name}/{mode}", t * 1e6,
+            f"{c['flops']:.3e}flop|{c['bytes_anchor']:.3e}B|"
+            f"{c['flops']/t/1e9:.1f}GFLOP/s"))
+    return rows
 
 
 def main() -> list[str]:

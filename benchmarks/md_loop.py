@@ -25,7 +25,13 @@ full runs, a tempfile in smoke) is stamped with a ``benchmark`` record
 carrying per-path steps/s and ``nep_kernel.vs_autodiff``; when the kernel
 path regresses below the previously recorded ``BENCH_md_loop.json``
 value, a loud log-only warning is printed (the perf trajectory file is
-still overwritten - the warning is the signal, not a gate).  CSV rows:
+still overwritten).  Under ``--strict`` / BENCH_STRICT=1 the kernel path
+is HARD-gated instead: dispatch must resolve to a compiled executor (not
+interpret), and on full runs ``nep_kernel.vs_autodiff >= 1.0`` - the
+kernel must beat the autodiff fused loop, not just exist.  Full runs also
+stamp a ``roofline`` record (repro.launch.roofline.nep_report): analytic
+per-atom descriptor FLOPs/bytes vs jaxpr-measured K1/gather/K2 costs and
+the abar_j gather bytes (the dominant HBM term).  CSV rows:
 name, us_per_call (=us/step), derived=steps/s|speedup|rebuilds|compiles.
 """
 from __future__ import annotations
@@ -47,6 +53,8 @@ from repro.md.integrator import IntegratorConfig
 from repro.md.lattice import simple_cubic
 from repro.md.simulate import Simulation
 from repro.md.state import init_state
+
+STRICT = bool(os.environ.get("BENCH_STRICT"))
 
 CELLS = (4, 4, 4) if SMOKE else (16, 16, 16)       # 64 / 4096 atoms
 STEPS = {"heisenberg": 40 if SMOKE else 400, "nep": 20 if SMOKE else 60,
@@ -149,13 +157,13 @@ def main() -> list[str]:
     spec = NEPSpinSpec(l_max=2, n_ang=2, n_rad=4, n_spin=2, basis_size=6)
     params = init_params(spec, jax.random.PRNGKey(0), dtype=jnp.float32)
     cases.append(("nep", lambda: NEPSpinPotential(spec, params), None))
-    # Pallas NEP kernel path through the SAME fused loop (interpret mode on
-    # CPU; on TPU the identical pallas_call compiles to MXU kernels).
-    # Tracked fused-only: its reference point is the autodiff fused path,
-    # so kernel-path regressions show up as a vs_autodiff drift.
+    # fused NEP kernel path through the SAME fused loop (mode "auto":
+    # compiled lax.map tiling on CPU; the identical kernel bodies compile
+    # to MXU Pallas kernels on TPU).  Tracked fused-only: its reference
+    # point is the autodiff fused path, so kernel-path regressions show up
+    # as a vs_autodiff drift (gated >= 1.0 under --strict).
     cases.append(("nep_kernel", lambda: NEPSpinPotential(
-        spec, params, use_kernel=True, interpret=True),
-        (("fused", True),)))
+        spec, params, use_kernel=True), (("fused", True),)))
     for name, make, paths in cases:
         res = (bench_potential(name, make) if paths is None
                else bench_potential(name, make, paths))
@@ -185,6 +193,26 @@ def main() -> list[str]:
     out["potentials"]["nep_kernel"]["vs_autodiff"] = (
         out["potentials"]["nep_kernel"]["fused"]["steps_per_s"]
         / out["potentials"]["nep"]["fused"]["steps_per_s"])
+    from repro.kernels.nep import resolve_mode
+    mode = resolve_mode("auto")
+    out["potentials"]["nep_kernel"]["mode"] = mode
+    if STRICT:
+        # a regression to interpret-mode dispatch is a correctness artifact
+        # masquerading as the fast path - fail fast, even at smoke scale
+        assert mode != "interpret", mode
+
+    if not SMOKE:
+        # roofline: analytic descriptor model vs jaxpr-measured pipeline
+        # cost at the bench geometry (same spec/capacity as the timed runs)
+        from repro.launch.roofline import nep_report
+        from repro.md.neighbor import dense_neighbor_table, gather_blocks
+        lat = simple_cubic()
+        st = init_state(lat, CELLS, temperature=500.0, spin_init="helix_x",
+                        key=jax.random.PRNGKey(0), dtype=jnp.float32)
+        tab = dense_neighbor_table(st.pos, st.box, 5.0, 8)
+        nbh = gather_blocks(st.pos, st.types, tab, st.box)
+        out["roofline"] = nep_report(spec, params, nbh, st.spin, st.types,
+                                     mode=mode)
 
     # telemetry-instrumented fused run: overhead budget + no retrace
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -238,6 +266,10 @@ def main() -> list[str]:
                   f"{new:.3f} < recorded {prev:.3f} (BENCH_md_loop.json)",
                   file=sys.stderr)
             print("=" * 72, file=sys.stderr)
+        # --strict: the kernel must BEAT the autodiff fused loop (the
+        # PR-10 acceptance bar), not merely track its own history
+        assert not STRICT or new >= 1.0, (
+            f"nep_kernel.vs_autodiff {new:.3f} < 1.0 under --strict")
         from benchmarks.common import write_json
         write_json(bench_path, out)
     return rows

@@ -21,6 +21,9 @@ jax-version/backend/device-count provenance via ``benchmarks.common``):
 Prints ``name,us_per_call,derived`` CSV rows.  ``--smoke`` (or
 BENCH_SMOKE=1) runs every benchmark for 1 iteration on downscaled problems
 so perf code can't silently rot (wired into scripts/ci.sh --smoke).
+``--strict`` (or BENCH_STRICT=1) promotes perf-regression warnings to hard
+failures - currently the md_loop kernel gates: dispatch must resolve to a
+compiled executor, and on full runs ``nep_kernel.vs_autodiff >= 1.0``.
 """
 from __future__ import annotations
 
@@ -37,6 +40,8 @@ def main() -> None:
     argv = sys.argv[1:]
     if "--smoke" in argv:
         os.environ["BENCH_SMOKE"] = "1"
+    if "--strict" in argv:
+        os.environ["BENCH_STRICT"] = "1"
     selected = list(REGISTRY)
     if "--only" in argv:
         if argv.index("--only") + 1 >= len(argv):

@@ -40,9 +40,20 @@
 #                                        a seeded NaN/bit-flip/SIGKILL
 #                                        campaign through the serving
 #                                        tier with WAL recovery asserted
-#                                        bitwise at f64, and the docs
+#                                        bitwise at f64, the NEP kernel
+#                                        smoke (scripts/kernel_smoke.py):
+#                                        auto dispatch must resolve to a
+#                                        compiled executor (xla_tiled on
+#                                        CPU), match the autodiff oracle,
+#                                        beat interpret wall-clock, and
+#                                        recompile zero times across
+#                                        chunked calls, and the docs
 #                                        link check
 #                                        (scripts/check_docs.py).
+#                                        The benchmark pass runs --strict:
+#                                        perf-regression warnings become
+#                                        failures (md_loop hard-fails if
+#                                        kernel dispatch is interpret).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -62,10 +73,14 @@ if [[ "${1:-}" == "--smoke" ]]; then
   # and proves the remaining streams bitwise with zero steady recompiles
   env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
       python scripts/serve_chaos_smoke.py
+  # NEP kernel smoke: compiled dispatch (never interpret), oracle parity,
+  # faster-than-interpret, and zero recompiles across chunked calls
+  env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+      python scripts/kernel_smoke.py
   # docs must not reference files that no longer exist
   python scripts/check_docs.py
   exec env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" BENCH_SMOKE=1 \
-      python -m benchmarks.run --smoke
+      python -m benchmarks.run --smoke --strict
 fi
 
 # install prerequisites only when missing (the CI image bakes them in)

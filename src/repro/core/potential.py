@@ -152,22 +152,24 @@ class NEPSpinPotential:
 
     ``energy_forces_field`` is the legacy whole-evaluation surface;
     ``compute`` is the gather-once surface consumed by the fused MD loop.
-    ``use_kernel`` routes both through the fused Pallas kernels
-    (repro.kernels.nep) instead of autodiff.
+    ``use_kernel`` routes both through the fused kernels (repro.kernels.nep)
+    instead of autodiff; ``mode`` selects the kernel executor ("pallas" |
+    "xla_tiled" | "interpret"), with "auto" resolving per backend at trace
+    time (non-interpret Pallas on TPU/GPU, compiled lax.map tiling on CPU).
     """
 
     spec: NEPSpinSpec
     params: NEPSpinParams
     moments: jax.Array | None = None
     use_kernel: bool = False
-    interpret: bool = True
+    mode: str = "auto"
 
     def energy_forces_field(self, pos, spin, types, table, box, field=None):
         if self.use_kernel:
             from repro.kernels.nep.ops import nep_energy_forces_field
             return nep_energy_forces_field(
                 self.spec, self.params, pos, spin, types, table, box,
-                field, self.moments, interpret=self.interpret)
+                field, self.moments, mode=self.mode)
         return energy_forces_field(self.spec, self.params, pos, spin, types,
                                    table, box, field, self.moments)
 
@@ -189,6 +191,6 @@ class NEPSpinPotential:
         if self.use_kernel:
             from repro.kernels.nep.ops import nep_compute
             return nep_compute(self.spec, self.params, nbh, spin, types,
-                               field, self.moments, interpret=self.interpret)
+                               field, self.moments, mode=self.mode)
         return compute(self.spec, self.params, nbh, spin, types, field,
                        self.moments)

@@ -1,2 +1,3 @@
+from repro.kernels.nep.kernel import MODES, resolve_mode
 from repro.kernels.nep.ops import nep_energy_forces_field
 from repro.kernels.nep.ref import nep_energy_forces_field_ref

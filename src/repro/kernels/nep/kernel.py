@@ -1,17 +1,18 @@
-"""Fused NEP-SPIN Pallas TPU kernels (the paper's Fig. 2 pipeline, b1-b4).
+"""Fused NEP-SPIN kernels (the paper's Fig. 2 pipeline, b1-b4) with a
+backend-aware ``mode`` axis.
 
-Two kernels over atom tiles resident in VMEM, mirroring the paper's
-restructured three-stage pipeline:
+Two kernels over atom tiles, mirroring the paper's restructured three-stage
+pipeline:
 
-  K1 ``nep_atom_kernel``  (stages b1+b2): one pass over the neighbor block
+  K1 ``nep_atom_pass``  (stages b1+b2): one pass over the neighbor block
      computes the Chebyshev basis (online recurrence in registers), all
      structural + magnetic channel accumulators, the descriptor, the
      per-element ANN energy (predicated MXU matmuls - the SME GEMM stage),
      AND the adjoint accumulators Abar_i = dE_i/dA_i plus the direct spin
      term dE_i/dS_i - everything downstream of the paper's q_Fp array.
 
-  K2 ``nep_force_kernel`` (stages b3+b4): a second single pass over the
-     same neighbor block evaluates the fused force + torque using the
+  K2 ``nep_force_pass`` (stages b3+b4): a SECOND single pass over the same
+     neighbor block evaluates the fused force + torque using the
      pair-symmetric partial-force formula
 
         F_i = sum_j d/d(dr_ij) [ <Abar_i, a(dr_ij, S_i, S_j)>
@@ -20,12 +21,36 @@ restructured three-stage pipeline:
      which needs NO reverse force scatter (Newton-3 fold-back) - only a
      gather of neighbor adjoints, the exact analogue of GPUMD/NEP's
      partial-force formulation and the paper's single-traversal fusion of
-     the radial / spin / torque kernels (ablation step 1).
+     the radial / spin / torque kernels (ablation step 1).  Both adjoint
+     contractions of a pair share ONE radial-basis / type-dispatch /
+     spin-coupling evaluation: under ``dr -> -dr`` the distance, Chebyshev
+     basis, and the scalar spin couplings (Heisenberg, DMI, pseudo-dipolar)
+     are invariant and the angular monomials only flip sign as (-1)^p, so
+     the i->j and j->i halves of the traversal cost one basis, not two
+     (see :func:`_pair_contract`).
 
-Derivatives are obtained by jax.vjp *inside* the kernel body over the same
-``accumulate``/``finalize`` code the reference uses, so kernel and oracle
-share one definition of the model - the fusion is in the memory schedule,
-not in reimplemented math.
+The kernel *bodies* (:func:`atom_tile`, :func:`force_tile`) are pure traced
+functions of arrays - the Pallas grid and the XLA tiled executor lower the
+SAME code, selected by ``mode``:
+
+  ``"pallas"``    non-interpret ``pallas_call`` - Mosaic/Triton lowering on
+                  TPU/GPU, (TILE_ATOMS, M, ...) blocks resident in VMEM;
+  ``"xla_tiled"`` a compiled ``lax.map`` over row tiles of the same bodies
+                  for backends without a Pallas compiler (CPU): the tile
+                  body is compiled ONCE and streamed over the atom tiles,
+                  keeping the per-tile working set cache-resident;
+  ``"interpret"`` ``pallas_call(interpret=True)`` - the slow per-ref
+                  debugging oracle (kept for kernel-level debugging only).
+
+``resolve_mode("auto")`` picks ``"pallas"`` on TPU/GPU and ``"xla_tiled"``
+otherwise; the choice is a trace-time static, so chunked drivers never
+recompile across chunks.
+
+K1's derivatives are obtained by ``jax.vjp`` *inside* the body over the same
+``accumulate``/``finalize`` code the reference uses; K2 takes ``jax.grad``
+of the shared-basis pair contraction - kernel and oracle share one
+definition of the model, and the fusion is in the memory schedule, not in
+reimplemented math.
 
 Block layout: (TILE_ATOMS, M, ...) neighbor blocks; coefficients and network
 weights are small enough to live whole in VMEM for every tile.  The working
@@ -40,11 +65,30 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.descriptor import (NEPSpinSpec, init_accumulators, accumulate,
-                                   finalize, _MONO)
+from repro.core.descriptor import (NEPSpinSpec, chebyshev_basis,
+                                   init_accumulators, accumulate, finalize,
+                                   _MONO, _monomials)
 from repro.core.potential import NEPSpinParams, mlp_energy
 
 TILE_ATOMS = 64
+# xla_tiled fuses up to this many TILE_ATOMS tiles per lax.map step: big
+# enough that XLA:CPU amortizes per-iteration dispatch, small enough that
+# the per-step working set stays cache-resident
+XLA_TILE_MAX = 16
+
+MODES = ("pallas", "interpret", "xla_tiled")
+
+
+def resolve_mode(mode: str = "auto") -> str:
+    """Backend-aware dispatch: ``"auto"`` -> ``"pallas"`` where a Mosaic /
+    Triton lowering exists (TPU/GPU), ``"xla_tiled"`` elsewhere (CPU)."""
+    if mode == "auto":
+        return ("pallas" if jax.default_backend() in ("tpu", "gpu")
+                else "xla_tiled")
+    if mode not in MODES:
+        raise ValueError(f"unknown kernel mode {mode!r}; expected 'auto' or "
+                         f"one of {MODES}")
+    return mode
 
 
 def acc_keys(spec: NEPSpinSpec) -> list[str]:
@@ -66,15 +110,6 @@ def acc_tails(spec: NEPSpinSpec) -> dict[str, tuple[int, ...]]:
     return tails
 
 
-def _tree_dot(keys, a: dict, b: dict) -> jax.Array:
-    tot = None
-    for k in keys:
-        lead = a[k].ndim - (b[k].ndim - a[k].ndim)  # noqa - same shapes here
-        s = jnp.sum(a[k] * b[k])
-        tot = s if tot is None else tot + s
-    return tot
-
-
 def _dist(dr: jax.Array, eps: float) -> jax.Array:
     return jnp.sqrt(jnp.sum(dr * dr, axis=-1) + eps)
 
@@ -87,29 +122,19 @@ def _eps_for(dtype) -> float:
 # K1: descriptor + ANN + adjoint accumulators
 # ---------------------------------------------------------------------------
 
-def _atom_kernel(spec: NEPSpinSpec, n_param_leaves: int, refs):
-    """Kernel body. refs = (dr, mask, amask, ti, tj, si, sj, *params,
-    e_out, hdir_out, *abar_outs)."""
-    (dr_ref, mask_ref, amask_ref, ti_ref, tj_ref, si_ref, sj_ref) = refs[:7]
-    param_refs = refs[7:7 + n_param_leaves]
-    out_refs = refs[7 + n_param_leaves:]
-    e_ref, hdir_ref = out_refs[0], out_refs[1]
-    abar_refs = out_refs[2:]
+def atom_tile(spec: NEPSpinSpec, params: NEPSpinParams,
+              dr, mask, amask, ti, tj, si, sj):
+    """K1 body on one atom tile (pure traced function; any leading shape).
 
-    dr = dr_ref[...]
-    mask = mask_ref[...]
-    amask = amask_ref[...]
-    ti = ti_ref[...]
-    tj = tj_ref[...]
-    si = si_ref[...]
-    sj = sj_ref[...]
-    params = NEPSpinParams(*[r[...] for r in param_refs])
+    Returns ``(e, hdir, abar_tuple)`` with the adjoint accumulators ordered
+    by :func:`acc_keys`.
+    """
     dp = params.desc_params()
     keys = acc_keys(spec)
 
     eps = _eps_for(dr.dtype)
     dist = _dist(dr, eps)
-    acc0 = init_accumulators(spec, (dr.shape[0],), dr.dtype)
+    acc0 = init_accumulators(spec, dr.shape[:-2], dr.dtype)
     acc = accumulate(spec, dp, acc0, dr, dist, mask, ti, tj, si, sj)
 
     def f1(acc_d, si_v):
@@ -119,23 +144,72 @@ def _atom_kernel(spec: NEPSpinSpec, n_param_leaves: int, refs):
 
     e, vjp = jax.vjp(f1, acc, si)
     abar, hdir = vjp(jnp.ones_like(e))
+    # -hdir is the direct part of the effective field
+    return e, -hdir, tuple(abar[k] for k in keys)
 
+
+def _atom_kernel(spec: NEPSpinSpec, n_param_leaves: int, refs):
+    """Pallas wrapper over :func:`atom_tile`. refs = (dr, mask, amask, ti,
+    tj, si, sj, *params, e_out, hdir_out, *abar_outs)."""
+    (dr_ref, mask_ref, amask_ref, ti_ref, tj_ref, si_ref, sj_ref) = refs[:7]
+    param_refs = refs[7:7 + n_param_leaves]
+    out_refs = refs[7 + n_param_leaves:]
+    e_ref, hdir_ref = out_refs[0], out_refs[1]
+    abar_refs = out_refs[2:]
+
+    params = NEPSpinParams(*[r[...] for r in param_refs])
+    e, hdir, abar = atom_tile(spec, params, dr_ref[...], mask_ref[...],
+                              amask_ref[...], ti_ref[...], tj_ref[...],
+                              si_ref[...], sj_ref[...])
     e_ref[...] = e
-    hdir_ref[...] = -hdir          # direct part of the effective field
-    for r, k in zip(abar_refs, keys):
-        r[...] = abar[k]
+    hdir_ref[...] = hdir
+    for r, a in zip(abar_refs, abar):
+        r[...] = a
+
+
+def _xla_tile_rows(n: int) -> int:
+    """Rows per ``lax.map`` step on the xla_tiled path: the largest
+    TILE_ATOMS multiple that divides the padded atom count, capped at
+    XLA_TILE_MAX tiles."""
+    g = n // TILE_ATOMS
+    div = max(d for d in range(1, min(g, XLA_TILE_MAX) + 1) if g % d == 0)
+    return div * TILE_ATOMS
+
+
+def _map_tiles(tile_fn, n: int, arrays):
+    """Compiled tiled dispatch: reshape the leading atom dim into
+    (G, rows, ...) and ``lax.map`` the tile body over the G row tiles.
+    The body is lowered ONCE (lax.map is a scan), so chunked callers pay
+    one compile per geometry - same contract as the Pallas grid."""
+    rows = _xla_tile_rows(n)
+    g = n // rows
+    if g == 1:
+        return tile_fn(*arrays)
+    tiled = tuple(a.reshape((g, rows) + a.shape[1:]) for a in arrays)
+    outs = jax.lax.map(lambda args: tile_fn(*args), tiled)
+    return jax.tree_util.tree_map(
+        lambda o: o.reshape((n,) + o.shape[2:]), outs)
 
 
 def nep_atom_pass(spec: NEPSpinSpec, params: NEPSpinParams,
-                  dr, mask, amask, ti, tj, si, sj, *, interpret=True):
-    """pallas_call wrapper for K1. All arrays have leading dim N (padded to
-    a TILE_ATOMS multiple). Returns (e (N,), hdir (N,3), abar dict)."""
+                  dr, mask, amask, ti, tj, si, sj, *, mode: str = "auto"):
+    """K1 dispatch. All arrays have leading dim N (padded to a TILE_ATOMS
+    multiple). Returns (e (N,), hdir (N,3), abar dict). ``mode`` selects
+    the executor (see module docstring); ``"auto"`` resolves per backend."""
+    mode = resolve_mode(mode)
     n = dr.shape[0]
     m = dr.shape[1]
     assert n % TILE_ATOMS == 0
+    keys = acc_keys(spec)
+
+    if mode == "xla_tiled":
+        e, hdir, abar = _map_tiles(
+            partial(atom_tile, spec, params), n,
+            (dr, mask, amask, ti, tj, si, sj))
+        return e, hdir, dict(zip(keys, abar))
+
     grid = (n // TILE_ATOMS,)
     dtype = dr.dtype
-    keys = acc_keys(spec)
     tails = acc_tails(spec)
     pleaves = list(params)
 
@@ -162,7 +236,7 @@ def nep_atom_pass(spec: NEPSpinSpec, params: NEPSpinParams,
         in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,
-        interpret=interpret,
+        interpret=(mode == "interpret"),
     )(dr, mask, amask, ti, tj, si, sj, *pleaves)
     e, hdir = outs[0], outs[1]
     abar = {k: v for k, v in zip(keys, outs[2:])}
@@ -173,9 +247,116 @@ def nep_atom_pass(spec: NEPSpinSpec, params: NEPSpinParams,
 # K2: fused force + torque (single neighbor traversal, pair-symmetric)
 # ---------------------------------------------------------------------------
 
+def _radial_g_both(coeffs: jax.Array, fk: jax.Array, ti: jax.Array,
+                   tj: jax.Array):
+    """Both orientations of the type-dispatched radial carrier from ONE
+    basis contraction per (a, b) type pair.
+
+    Returns ``(g_ij, g_ji)`` where ``g_ij[..., m, n] = g_n(r; t_i, t_j)``
+    (atom i central) and ``g_ji`` has the roles swapped (atom j central,
+    i.e. ``c[tj, ti]``).  The expensive ``fk @ c[a, b]`` einsum is shared
+    by the two predicated selects - the i->j and j->i halves of the pair
+    traversal dispatch types once.
+    """
+    t = coeffs.shape[0]
+    g1 = g2 = None
+    for a in range(t):
+        for b in range(t):
+            gab = jnp.einsum("...k,nk->...n", fk, coeffs[a, b])
+            s1 = ((ti[..., None] == a) & (tj == b))
+            term = jnp.where(s1[..., None], gab, 0.0)
+            g1 = term if g1 is None else g1 + term
+            s2 = ((tj == a) & (ti[..., None] == b))
+            term = jnp.where(s2[..., None], gab, 0.0)
+            g2 = term if g2 is None else g2 + term
+    return g1, g2
+
+
+def _pair_contract(spec: NEPSpinSpec, dp: dict, dr, mask, ti, tj, si, sj,
+                   abar_i: dict, abar_j: dict) -> jax.Array:
+    """ONE masked pass over the pair block evaluating
+
+        t = sum_ij [ <Abar_i, a(dr_ij, S_i, S_j)>
+                   + <Abar_j, a(-dr_ij, S_j, S_i)> ]
+
+    with the radial basis, type dispatch, angular monomials and scalar spin
+    couplings shared between the two orientations:
+
+    * distance / Chebyshev basis: even under ``dr -> -dr``;
+    * angular monomials: ``mono_p(-rhat) = (-1)^p mono_p(rhat)``;
+    * Heisenberg ``S_i.S_j``, DMI ``(S_c x S_n).rhat_c`` and pseudo-dipolar
+      ``(S_c.rhat_c)(S_n.rhat_c)`` couplings: invariant under the joint
+      swap (c, n, rhat_c) -> (n, c, -rhat_c);
+    * the per-(a,b) basis-coefficient einsums feed both orientations
+      (:func:`_radial_g_both`).
+
+    ``abar_i`` leaves are per-atom ``(TA, ...)``; ``abar_j`` leaves are
+    gathered per-pair ``(TA, M, ...)``.  This is the half-FLOP
+    restructuring of the old doubled-closure K2, which re-ran the full
+    ``accumulate`` on a ``(TA*M, 1, ...)`` singleton-pair reshape.
+    """
+    m = mask.astype(dr.dtype)
+    eps = _eps_for(dr.dtype)
+    dist = _dist(dr, eps)
+    fk = chebyshev_basis(dist, spec.cutoff, spec.basis_size) * m[..., None]
+    rhat = dr / dist[..., None]
+
+    g1r, g2r = _radial_g_both(dp["c_rad"], fk, ti, tj)
+    tot = (jnp.einsum("amn,an->", g1r, abar_i["rad"])
+           + jnp.einsum("amn,amn->", g2r, abar_j["rad"]))
+
+    g1a, g2a = _radial_g_both(dp["c_ang"], fk, ti, tj)
+    for p in range(spec.l_max + 1):
+        mono, _ = _monomials(rhat, p)                       # (TA, M, C)
+        sign = -1.0 if p % 2 else 1.0
+        tot = tot + jnp.einsum("amj,amc,ajc->", g1a, mono,
+                               abar_i[f"ang{p}"])
+        tot = tot + sign * jnp.einsum("amj,amc,amjc->", g2a, mono,
+                                      abar_j[f"ang{p}"])
+
+    if spec.spin:
+        g1s, g2s = _radial_g_both(dp["c_spin"], fk, ti, tj)
+        si_b = si[..., None, :]
+        dot_ss = jnp.sum(si_b * sj, axis=-1)
+        dmi = jnp.sum(jnp.cross(jnp.broadcast_to(si_b, sj.shape), sj)
+                      * rhat, axis=-1)
+        pd = jnp.sum(si_b * rhat, axis=-1) * jnp.sum(sj * rhat, axis=-1)
+        # the three scalar couplings are parity-symmetric: one evaluation
+        # contracts against BOTH adjoint sets
+        for cpl, key in ((dot_ss, "sp_dot"), (dmi, "sp_dmi"), (pd, "sp_pd")):
+            tot = tot + jnp.einsum("amj,am,aj->", g1s, cpl, abar_i[key])
+            tot = tot + jnp.einsum("amj,am,amj->", g2s, cpl, abar_j[key])
+        # directional accumulators: V_n sums neighbor spins (j's V sees
+        # S_i), W_n sums rhat (odd under the flip)
+        tot = tot + jnp.einsum("amj,amd,ajd->", g1s, sj, abar_i["sp_v"])
+        tot = tot + jnp.einsum("amj,ad,amjd->", g2s, si, abar_j["sp_v"])
+        tot = tot + jnp.einsum("amj,amd,ajd->", g1s, rhat, abar_i["sp_w"])
+        tot = tot - jnp.einsum("amj,amd,amjd->", g2s, rhat, abar_j["sp_w"])
+    return tot
+
+
+def force_tile(spec: NEPSpinSpec, dp: dict, dr, mask, ti, tj, si, sj,
+               abar_i: dict, abar_j: dict):
+    """K2 body on one atom tile (pure traced function).
+
+    Differentiates the shared-basis pair contraction in one reverse pass:
+    ``F_i = +sum_j d(t)/d(dr_ij)`` (the pair-symmetric partial force - no
+    reverse scatter) and the pass-2 field ``-d(t)/d(S_i)`` (S_i enters
+    both as the central spin of row i and as the gathered neighbor spin of
+    the j-centered half; the ``S_j`` gradient belongs to atom j's own row
+    and is discarded).
+    """
+    def closure(dr_v, si_v, sj_v):
+        return _pair_contract(spec, dp, dr_v, mask, ti, tj, si_v, sj_v,
+                              abar_i, abar_j)
+
+    g_dr, g_si, _g_sj = jax.grad(closure, argnums=(0, 1, 2))(dr, si, sj)
+    return jnp.sum(g_dr, axis=-2), -g_si
+
+
 def _force_kernel(spec: NEPSpinSpec, n_desc_leaves: int, n_abar: int, refs):
-    """refs = (dr, mask, ti, tj, si, sj, *desc_params, *abar_i, *abar_j,
-    f_out, h_out)."""
+    """Pallas wrapper over :func:`force_tile`. refs = (dr, mask, ti, tj,
+    si, sj, *desc_params, *abar_i, *abar_j, f_out, h_out)."""
     (dr_ref, mask_ref, ti_ref, tj_ref, si_ref, sj_ref) = refs[:6]
     pos = 6
     dparam_refs = refs[pos:pos + n_desc_leaves]; pos += n_desc_leaves
@@ -183,58 +364,46 @@ def _force_kernel(spec: NEPSpinSpec, n_desc_leaves: int, n_abar: int, refs):
     abar_j_refs = refs[pos:pos + n_abar]; pos += n_abar
     f_ref, h_ref = refs[pos], refs[pos + 1]
 
-    dr = dr_ref[...]
-    mask = mask_ref[...]
-    ti = ti_ref[...]
-    tj = tj_ref[...]
-    si = si_ref[...]
-    sj = sj_ref[...]
     dp = {k: r[...] for k, r in zip(("c_rad", "c_ang", "c_spin"),
                                     dparam_refs)}
     keys = acc_keys(spec)
     abar_i = {k: r[...] for k, r in zip(keys, abar_i_refs)}
     abar_j = {k: r[...] for k, r in zip(keys, abar_j_refs)}
 
-    ta, m = mask.shape
-    eps = _eps_for(dr.dtype)
-
-    def closure(dr_v, si_v, sj_v):
-        # term 1: <Abar_i, sum_j a(dr_ij, S_i, S_j)>
-        acc0 = init_accumulators(spec, (ta,), dr_v.dtype)
-        d1 = _dist(dr_v, eps)
-        a1 = accumulate(spec, dp, acc0, dr_v, d1, mask, ti, tj, si_v, sj_v)
-        t1 = sum(jnp.sum(a1[k] * abar_i[k]) for k in keys)
-        # term 2: per-pair contribution to the NEIGHBOR's accumulators:
-        # <Abar_j, a(-dr_ij, S_j, S_i)>, evaluated as (ta*m) single pairs
-        drr = (-dr_v).reshape(ta * m, 1, 3)
-        d2 = _dist(drr, eps)
-        ti2 = tj.reshape(ta * m)
-        tj2 = jnp.broadcast_to(ti[:, None], (ta, m)).reshape(ta * m, 1)
-        si2 = sj_v.reshape(ta * m, 3)
-        sj2 = jnp.broadcast_to(si_v[:, None, :], (ta, m, 3)).reshape(
-            ta * m, 1, 3)
-        m2 = mask.reshape(ta * m, 1)
-        acc0p = init_accumulators(spec, (ta * m,), dr_v.dtype)
-        a2 = accumulate(spec, dp, acc0p, drr, d2, m2, ti2, tj2, si2, sj2)
-        t2 = sum(jnp.sum(a2[k].reshape(ta, m, *abar_j[k].shape[2:])
-                         * abar_j[k]) for k in keys)
-        return t1 + t2
-
-    g_dr, g_si, _g_sj = jax.grad(closure, argnums=(0, 1, 2))(dr, si, sj)
-    f_ref[...] = jnp.sum(g_dr, axis=1)   # F_i = +sum_j d(t1+t2)/d(dr_ij)
-    h_ref[...] = -g_si                   # pass-2 part of H_i = -dE/dS_i
+    f, h = force_tile(spec, dp, dr_ref[...], mask_ref[...], ti_ref[...],
+                      tj_ref[...], si_ref[...], sj_ref[...], abar_i, abar_j)
+    f_ref[...] = f
+    h_ref[...] = h
 
 
 def nep_force_pass(spec: NEPSpinSpec, params: NEPSpinParams,
                    dr, mask, ti, tj, si, sj, abar_i: dict, abar_j: dict,
-                   *, interpret=True):
-    """pallas_call wrapper for K2. abar_j leaves are pre-gathered (N, M, ...).
-    Returns (force (N,3), field_pass2 (N,3))."""
+                   *, mode: str = "auto"):
+    """K2 dispatch. ``abar_j`` leaves are pre-gathered (N, M, ...).
+    Returns (force (N,3), field_pass2 (N,3)). ``mode`` as in
+    :func:`nep_atom_pass`."""
+    mode = resolve_mode(mode)
     n, m = mask.shape
     assert n % TILE_ATOMS == 0
+    keys = acc_keys(spec)
+    dp = params.desc_params()
+
+    if mode == "xla_tiled":
+        n_abar = len(keys)
+
+        def tile(dr_t, mask_t, ti_t, tj_t, si_t, sj_t, *abars):
+            ai = dict(zip(keys, abars[:n_abar]))
+            aj = dict(zip(keys, abars[n_abar:]))
+            return force_tile(spec, dp, dr_t, mask_t, ti_t, tj_t, si_t,
+                              sj_t, ai, aj)
+
+        return _map_tiles(tile, n,
+                          (dr, mask, ti, tj, si, sj,
+                           *[abar_i[k] for k in keys],
+                           *[abar_j[k] for k in keys]))
+
     grid = (n // TILE_ATOMS,)
     dtype = dr.dtype
-    keys = acc_keys(spec)
     tails = acc_tails(spec)
     dleaves = [params.c_rad, params.c_ang, params.c_spin]
 
@@ -259,7 +428,7 @@ def nep_force_pass(spec: NEPSpinSpec, params: NEPSpinParams,
         in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,
-        interpret=interpret,
+        interpret=(mode == "interpret"),
     )(dr, mask, ti, tj, si, sj, *dleaves,
       *[abar_i[k] for k in keys], *[abar_j[k] for k in keys])
     return f, h2

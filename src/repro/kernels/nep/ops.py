@@ -14,6 +14,13 @@ blocks so the fused MD loop gathers positions once per drift and reuses the
 blocks across both spin half-steps and all midpoint iterations;
 ``nep_energy_forces_field`` keeps the legacy whole-evaluation signature by
 gathering then computing.
+
+Both entry points take a static ``mode`` selecting the kernel executor
+(``"pallas"`` | ``"xla_tiled"`` | ``"interpret"``, see
+``repro.kernels.nep.kernel``); the default ``"auto"`` resolves per backend
+at trace time - non-interpret Pallas on TPU/GPU, the compiled
+``lax.map``-over-tiles path on CPU.  ``mode`` is part of the jit cache key,
+so chunked drivers that hold it fixed never recompile across chunks.
 """
 from __future__ import annotations
 
@@ -39,7 +46,7 @@ def _pad_to(x, n, axis=0):
     return jnp.pad(x, widths)
 
 
-@partial(jax.jit, static_argnames=("spec", "interpret"))
+@partial(jax.jit, static_argnames=("spec", "mode"))
 def nep_compute(
     spec: NEPSpinSpec,
     params: NEPSpinParams,
@@ -48,7 +55,7 @@ def nep_compute(
     types: jax.Array,
     field: jax.Array | None = None,
     moments: jax.Array | None = None,
-    interpret: bool = True,
+    mode: str = "auto",
 ):
     """Fused-kernel (E, F, H_eff) from pre-gathered neighbor blocks."""
     n = spin.shape[0]
@@ -66,8 +73,7 @@ def nep_compute(
     sj_p = _pad_to(sj, n_pad)
 
     e, hdir, abar = nep_atom_pass(spec, params, dr_p, mask_p, amask_p,
-                                  ti_p, tj_p, si_p, sj_p,
-                                  interpret=interpret)
+                                  ti_p, tj_p, si_p, sj_p, mode=mode)
 
     # gather neighbor adjoints (q_Fp exchange). Table indices are < n and
     # padded rows gather row 0 harmlessly (masked out in K2).
@@ -75,7 +81,7 @@ def nep_compute(
     abar_j = {k: v[idx_p] for k, v in abar.items()}
 
     f, h2 = nep_force_pass(spec, params, dr_p, mask_p, ti_p, tj_p, si_p,
-                           sj_p, abar, abar_j, interpret=interpret)
+                           sj_p, abar, abar_j, mode=mode)
 
     energy = jnp.sum(e[:n])
     force = f[:n]
@@ -90,7 +96,7 @@ def nep_compute(
     return energy, force, heff
 
 
-@partial(jax.jit, static_argnames=("spec", "interpret"))
+@partial(jax.jit, static_argnames=("spec", "mode"))
 def nep_energy_forces_field(
     spec: NEPSpinSpec,
     params: NEPSpinParams,
@@ -101,9 +107,9 @@ def nep_energy_forces_field(
     box: jax.Array,
     field: jax.Array | None = None,
     moments: jax.Array | None = None,
-    interpret: bool = True,
+    mode: str = "auto",
 ):
     """Fused-kernel evaluation of (E, F, H_eff). Matches the ref oracle."""
     nbh = gather_blocks(pos, types, table, box)
     return nep_compute(spec, params, nbh, spin, types, field, moments,
-                       interpret=interpret)
+                       mode=mode)

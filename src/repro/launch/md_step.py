@@ -167,8 +167,9 @@ def run_engine_chunk(cells=(8, 6, 6), steps: int = 40, chunk: int = 20,
     """Drive one field-cooled chunk of the unified engine on the current
     devices and return {steps_per_s, rebuilds, halo ledger, ...}.
 
-    ``kernel=True`` routes the Pallas NEP evaluator (interpret mode off-
-    TPU) through the sharded plan instead of the Heisenberg-DMI reference.
+    ``kernel=True`` routes the fused NEP kernel evaluator through the
+    sharded plan instead of the Heisenberg-DMI reference (mode "auto":
+    compiled Pallas on TPU/GPU, compiled lax.map tiling on CPU).
     """
     import time as _time
 
@@ -187,14 +188,13 @@ def run_engine_chunk(cells=(8, 6, 6), steps: int = 40, chunk: int = 20,
                     dtype=jnp.float32)
     if kernel:
         from repro.core.potential import NEPSpinPotential
-        # smoke-sized spec: off-TPU the kernels run in interpret mode, so
-        # the production spec would time the interpreter, not the path
+        # smoke-sized spec keeps the sharded-orchestration timing cheap
         from repro.configs.fege_spinlattice import smoke_config
         spec = smoke_config().spec
         potential = NEPSpinPotential(
             spec, init_params(spec, jax.random.PRNGKey(0),
                               dtype=jnp.float32),
-            use_kernel=True, interpret=True)
+            use_kernel=True)
     else:
         from repro.core.hamiltonian import HeisenbergDMIModel
         potential = HeisenbergDMIModel(d0=0.01)

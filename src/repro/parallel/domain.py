@@ -478,11 +478,13 @@ def distributed_energy_fn_pruned(spec, dspec, mesh, capacity=64,
 # per-atom adjoints with its 26 neighbors (one extra halo round), gathers
 # neighbor adjoints through the same pruned table, and runs K2 - forces and
 # torques come out pair-symmetric with NO reverse force scatter.
-# interpret=True validates on CPU; on TPU the same pallas_call compiles to
-# MXU kernels.
+# ``mode`` selects the kernel executor (repro.kernels.nep.kernel): on TPU/
+# GPU the pallas_call compiles to MXU kernels; on CPU "auto" resolves to
+# the compiled lax.map tiling ("xla_tiled"); "interpret" remains the slow
+# per-ref debugging oracle.
 
 def distributed_kernel_force_fn(spec, dspec, mesh, capacity=64,
-                                field=None, moments=None, interpret=True):
+                                field=None, moments=None, mode="auto"):
     """Returns (build_table_fn, energy_forces_field_fn) matching the
     signatures of distributed_energy_fn_pruned, but evaluated with the
     fused Pallas kernels instead of autodiff."""
@@ -531,7 +533,7 @@ def distributed_kernel_force_fn(spec, dspec, mesh, capacity=64,
 
         # K1: descriptor + ANN + adjoint accumulators (per-atom)
         e, hdir, abar = nep_atom_pass(spec, params, dr, msk_f, amask, ti,
-                                      tj, si, sj, interpret=interpret)
+                                      tj, si, sj, mode=mode)
 
         # q_Fp exchange: adjoints of ghosts via one extra halo round
         abar_j = {}
@@ -543,7 +545,7 @@ def distributed_kernel_force_fn(spec, dspec, mesh, capacity=64,
 
         # K2: fused pair-symmetric force + torque (one neighbor pass)
         f, h2 = nep_force_pass(spec, params, dr, msk_f, ti, tj, si, sj,
-                               abar, abar_j, interpret=interpret)
+                               abar, abar_j, mode=mode)
         heff = hdir + h2
         etot = jnp.sum(jnp.where(amask, e, 0.0))
         if field is not None:
@@ -1040,16 +1042,16 @@ def make_domain_kernel_evaluator(potential, dspec: DomainSpec,
 
     Requires the one-halo-per-drift gather (``spin_in_gather``; i.e. not
     self-consistent midpoint configs): ``compute`` consumes the ``dr`` AND
-    ``sj`` blocks refreshed by the drift exchange.  On CPU the kernels run
-    in interpret mode (``potential.interpret``); on TPU the identical
-    ``pallas_call`` compiles to MXU kernels.
+    ``sj`` blocks refreshed by the drift exchange.  The kernel executor
+    comes from ``potential.mode``: "auto" resolves to non-interpret Pallas
+    on TPU/GPU (MXU kernels) and to the compiled lax.map tiling on CPU.
     """
     from repro.kernels.nep.kernel import (TILE_ATOMS, nep_atom_pass,
                                           nep_force_pass)
     from repro.parallel.halo import exchange_halo_multi
 
     spec, params = potential.spec, potential.params
-    interpret = potential.interpret
+    mode = potential.mode
     refresh = make_domain_refresh(dspec, local_shape, barrier=barrier,
                                   spin_in_gather=True, allgather=allgather)
     cx, cy, cz = local_shape
@@ -1083,8 +1085,7 @@ def make_domain_kernel_evaluator(potential, dspec: DomainSpec,
         # and pad rows are amask-zeroed, so they contribute nothing here
         # or through the exchange below)
         e, hdir, abar = nep_atom_pass(spec, params, dr_f, mask_f, occ_f,
-                                      ti_f, tj_f, si_f, sj_f,
-                                      interpret=interpret)
+                                      ti_f, tj_f, si_f, sj_f, mode=mode)
 
         # the q_Fp exchange: ONE fused halo of every Abar channel
         abar_blk = {kk: v[:n_slots].reshape((cx, cy, cz, k) + v.shape[1:])
@@ -1100,8 +1101,7 @@ def make_domain_kernel_evaluator(potential, dspec: DomainSpec,
 
         # K2: fused force + torque, no reverse scatter
         f, h2 = nep_force_pass(spec, params, dr_f, mask_f, ti_f, tj_f,
-                               si_f, sj_f, abar, abar_j,
-                               interpret=interpret)
+                               si_f, sj_f, abar, abar_j, mode=mode)
         e_loc = jnp.sum(e)                   # masked rows are exact zeros
         force = f[:n_slots].reshape(types.shape + (3,))
         heff = (hdir + h2)[:n_slots].reshape(types.shape + (3,))

@@ -13,9 +13,9 @@ The PR-5 acceptance tests:
 * checkpoint-restart at a chunk boundary (``ckpt.save_md``/``load_md``
   via ``Engine.save``/``restore``) resumes bitwise-identically on the
   flat, replica, and sharded plans;
-* the Pallas NEP kernel evaluator (``use_kernel=True``, interpret mode)
-  rides the sharded plan through the q_Fp adjoint-accumulator halo and
-  tracks the flat kernel path;
+* the fused NEP kernel evaluator (``use_kernel=True``, mode "auto" -
+  the compiled xla_tiled executor on CPU) rides the sharded plan through
+  the q_Fp adjoint-accumulator halo and tracks the flat kernel path;
 * ``obs_every`` streams observables from inside the scan at the right
   times.
 """
@@ -155,7 +155,9 @@ stk = init_state(lat, (8, 6, 6), temperature=300.0, spin_init="helix_x",
                  key=jax.random.PRNGKey(0), dtype=jnp.float32)
 spec = NEPSpinSpec(l_max=2, n_ang=2, n_rad=4, n_spin=2, basis_size=6)
 params = init_params(spec, jax.random.PRNGKey(0), dtype=jnp.float32)
-pot = NEPSpinPotential(spec, params, use_kernel=True, interpret=True)
+pot = NEPSpinPotential(spec, params, use_kernel=True)
+from repro.kernels.nep import resolve_mode
+assert resolve_mode(pot.mode) == "xla_tiled"   # CPU backend dispatch
 kwk = dict(cfg=IntegratorConfig(dt=2e-3), state=stk,
            masses=jnp.asarray(lat.masses, jnp.float32),
            magnetic=jnp.asarray(lat.moments) > 0, cutoff=5.0, capacity=16,
@@ -164,7 +166,10 @@ fk = Engine(potential=pot, **kwk)
 TRACE.reset()
 sk = Engine(potential=pot, plan=Sharded(), **kwk)
 out["kernel"] = {
-    "e0": abs(float(fk.energy) - float(sk.energy)),
+    # relative: the xla_tiled executor compiles distinct programs for the
+    # flat vs per-device shapes, so total energies differ by O(ulp)*|E|
+    "e0": abs(float(fk.energy) - float(sk.energy))
+          / max(abs(float(fk.energy)), 1.0),
     "f0": float(jnp.abs(fk._ff.force - sk._ff.force).max()),
     "h0": float(jnp.abs(fk._ff.field - sk._ff.field).max()),
     "qfp_exchanges": TRACE.counts.get("qfp", 0),
@@ -239,7 +244,7 @@ def test_nep_kernel_rides_sharded_plan(engine_result):
     match the flat kernel path at f32 roundoff; adjoint accumulators move
     in one q_Fp halo per evaluation."""
     res = engine_result["kernel"]
-    assert res["e0"] < 1e-5, res
+    assert res["e0"] < 1e-6, res   # relative |dE|/|E|: a few f32 ulps
     assert res["f0"] < 1e-6, res
     assert res["h0"] < 1e-6, res
     assert res["qfp_exchanges"] >= 1, res
